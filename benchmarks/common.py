@@ -1,0 +1,103 @@
+"""Shared benchmark harness.
+
+Data generation + predictor training are cached under reports/cache so the
+individual tables can be re-run cheaply. Every benchmark prints
+``name,us_per_call,derived`` CSV rows (us_per_call = router scoring latency
+per query; derived = the table's metric).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    DEFAULT_LAMBDA_GRID, build_model_embeddings, evaluate_sweep, oracle_sweep,
+)
+from repro.core.router import PredictiveRouter
+from repro.data import generate
+from repro.training import train_dual_predictors
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "reports/cache")
+N_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "4000"))
+# The paper trains 1000 epochs; the synthetic benchmark converges by ~300.
+EPOCHS = int(os.environ.get("REPRO_BENCH_EPOCHS", "300"))
+LAMS = DEFAULT_LAMBDA_GRID
+
+
+def _cache(name: str):
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    return os.path.join(CACHE_DIR, name + ".pkl")
+
+
+def load_data():
+    path = _cache(f"routerbench_{N_QUERIES}")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    data = generate(N_QUERIES, seed=0)
+    with open(path, "wb") as f:
+        pickle.dump(data, f)
+    return data
+
+
+def pool_splits(data, pool_name: str):
+    pool = data.pool(pool_name)
+    tr, va, te = pool.split(seed=0)
+    return pool, tr, va, te
+
+
+def model_embeddings(pool, tr, pool_name: str):
+    path = _cache(f"memb_{pool_name}_{N_QUERIES}")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    memb, cents = build_model_embeddings(pool.emb[tr], pool.quality[tr], seed=0)
+    with open(path, "wb") as f:
+        pickle.dump((memb, cents), f)
+    return memb, cents
+
+
+def trained_router(
+    pool, tr, va, pool_name: str, quality_kind: str, cost_kind: str,
+    reward: str = "R2", epochs: Optional[int] = None,
+) -> PredictiveRouter:
+    epochs = epochs or EPOCHS
+    memb, _ = model_embeddings(pool, tr, pool_name)
+    path = _cache(f"router_{pool_name}_{quality_kind}_{cost_kind}_{epochs}_{N_QUERIES}")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            qp, cp, scaler = pickle.load(f)
+    else:
+        qp, cp, scaler, _ = train_dual_predictors(
+            quality_kind, cost_kind, pool.emb[tr], pool.quality[tr],
+            pool.cost[tr], memb,
+            q_emb_val=pool.emb[va], quality_val=pool.quality[va],
+            cost_val=pool.cost[va], epochs=epochs, seed=0,
+        )
+        with open(path, "wb") as f:
+            pickle.dump((qp, cp, scaler), f)
+    return PredictiveRouter(quality_kind, cost_kind, qp, cp, memb,
+                            reward=reward, cost_scaler=scaler)
+
+
+def eval_router_sweep(router, pool, te) -> Tuple[Dict, float]:
+    """Returns (metrics, us_per_query for one scoring pass)."""
+    t0 = time.perf_counter()
+    s_hat, c_hat = router.predict(pool.emb[te])
+    dt = time.perf_counter() - t0
+    choices = router.sweep(pool.emb[te], LAMS)
+    metrics = evaluate_sweep(choices, pool.quality[te], pool.cost[te], LAMS)
+    return metrics, dt / len(te) * 1e6
+
+
+def eval_oracle(pool, te, reward: str) -> Dict:
+    ch = oracle_sweep(pool.quality[te], pool.cost[te], LAMS, reward)
+    return evaluate_sweep(ch, pool.quality[te], pool.cost[te], LAMS)
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,56 @@
+"""Paper Figures 4-5 (and 8-9): dataset-wise and domain-wise results.
+
+AIQ of the predictor-based routers per benchmark dataset (Fig 4) and per
+MMLU domain (Fig 5) on pool 1, for both rewards (Figs 8-9 = R1 variants).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    LAMS, emit, load_data, pool_splits, trained_router,
+)
+from repro.core import evaluate_sweep, rewards
+from repro.data.routerbench import BENCHMARKS, MMLU_DOMAINS
+
+ROUTERS = ["reg", "2fcn", "attn"]
+
+
+def main() -> None:
+    data = load_data()
+    pool, tr, va, te = pool_splits(data, "pool1")
+
+    routers = {}
+    for kind in ROUTERS:
+        routers[kind] = trained_router(pool, tr, va, "pool1", kind, kind)
+
+    for reward in ("R2", "R1"):
+        fig = "fig4_5" if reward == "R2" else "fig8_9"
+        for kind, router in routers.items():
+            s_hat, c_hat = router.predict(pool.emb[te])
+            choices = np.stack([
+                np.asarray(rewards.route(reward, s_hat, c_hat, lam))
+                for lam in LAMS
+            ])
+            # Dataset-wise (Fig 4 / 8).
+            for bench in BENCHMARKS:
+                mask = pool.benchmark[te] == bench
+                if mask.sum() < 20:
+                    continue
+                m = evaluate_sweep(choices[:, mask], pool.quality[te][mask],
+                                   pool.cost[te][mask], LAMS)
+                emit(f"{fig}/{reward}/dataset={bench}/{kind}/aiq", 0.0,
+                     round(m["aiq"], 5))
+            # Domain-wise over MMLU sub-domains (Fig 5 / 9).
+            for dom in MMLU_DOMAINS:
+                mask = pool.domain[te] == dom
+                if mask.sum() < 10:
+                    continue
+                m = evaluate_sweep(choices[:, mask], pool.quality[te][mask],
+                                   pool.cost[te][mask], LAMS)
+                emit(f"{fig}/{reward}/domain={dom}/{kind}/aiq", 0.0,
+                     round(m["aiq"], 5))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Figure 6 / Appendix A: distribution of queries per model under the
+oracle routers — verifies the cost-efficiency story (<= ~20% to GPT-4 at the
+paper's operating points, most queries to cheap models)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import LAMS, emit, load_data, pool_splits
+from repro.core import oracle_sweep
+
+
+def main() -> None:
+    data = load_data()
+    pool, tr, va, te = pool_splits(data, "pool1")
+    for reward in ("R1", "R2"):
+        choices = oracle_sweep(pool.quality[te], pool.cost[te], LAMS, reward)
+        # Mid-lambda operating point (the paper's plots) + the max over grid.
+        mid = choices[len(LAMS) // 2]
+        for mi, name in enumerate(pool.model_names):
+            frac = float((mid == mi).mean())
+            emit(f"fig6/{reward}/mid_lambda/{name}", 0.0, round(frac, 4))
+        exp_idx = int(np.argmax(pool.cost[te].mean(0)))
+        max_frac = float((choices == exp_idx).mean(axis=1).max())
+        emit(f"fig6/{reward}/max_calls_gpt4", 0.0, round(max_frac, 4))
+
+
+if __name__ == "__main__":
+    main()

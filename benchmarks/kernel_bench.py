@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks (ours, not a paper table): router_xattn and
+pairwise_l2 wall-time per call vs the jnp reference path.
+
+On this CPU container the Pallas kernels run in interpret mode (slower —
+they exist to be lowered on real TPUs); the jnp reference numbers are the
+meaningful CPU timings. Derived column = max |kernel - ref| (correctness).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def main() -> None:
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 8)
+    for b in (256, 1024, 4096):
+        dq, k, dm, d = 768, 11, 20, 20
+        q = jax.random.normal(ks[0], (b, dq))
+        m_emb = jax.random.normal(ks[1], (k, dm))
+        wq = jax.random.normal(ks[2], (dq, d)) * 0.05
+        wk = jax.random.normal(ks[3], (dm, d)) * 0.3
+        wv = jax.random.normal(ks[4], (dm, d)) * 0.3
+        wo = jax.random.normal(ks[5], (d, k)) * 0.3
+        bo = jnp.zeros((k,))
+
+        ref_fn = jax.jit(ref.router_xattn_ref)
+        us_ref, out_ref = _time(ref_fn, q, wq, wk, wv, wo, bo, m_emb)
+        us_pal, out_pal = _time(
+            lambda *a: ops.router_xattn(*a), q, wq, wk, wv, wo, bo, m_emb,
+            iters=2)
+        err = float(jnp.abs(out_pal - out_ref).max())
+        emit(f"kernel/router_xattn/b={b}/jnp_ref", us_ref, f"err={err:.2e}")
+        emit(f"kernel/router_xattn/b={b}/pallas_interpret", us_pal,
+             f"err={err:.2e}")
+
+    for n, c in ((1024, 20), (4096, 256)):
+        x = jax.random.normal(ks[6], (n, 768))
+        cc = jax.random.normal(ks[7], (c, 768))
+        ref_fn = jax.jit(ref.pairwise_l2_ref)
+        us_ref, out_ref = _time(ref_fn, x, cc)
+        us_pal, out_pal = _time(lambda *a: ops.pairwise_l2(*a), x, cc, iters=2)
+        err = float(jnp.abs(out_pal - out_ref).max())
+        emit(f"kernel/pairwise_l2/n={n}x{c}/jnp_ref", us_ref, f"err={err:.2e}")
+        emit(f"kernel/pairwise_l2/n={n}x{c}/pallas_interpret", us_pal,
+             f"err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

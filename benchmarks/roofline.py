@@ -1,0 +1,215 @@
+"""Roofline analysis (assignment deliverable g).
+
+For every dry-run baseline (reports/dryrun/*.json) derive the three terms:
+
+    compute    = HLO_FLOPs / peak_FLOPs              [per device]
+    memory     = HLO_bytes / HBM_bw                  [per device]
+    collective = collective_bytes / ICI link bw      [per device]
+
+HLO numbers come from probe extrapolation when probe files exist:
+``total = probe1 + (n_repeats - 1) * (probe2 - probe1)`` with ALL loops
+unrolled in the probes (see models/runtime_flags.py), which removes XLA
+cost-analysis' scan-body undercount exactly. The sLSTM time scan (never
+unrolled) gets an analytic correction. Falls back to the raw (undercounted)
+full-model numbers when probes are missing, flagged in the output.
+
+Also reports MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (inference) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.configs.base import SLSTM
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "reports/dryrun")
+
+
+def _load(tag: str) -> Optional[Dict]:
+    path = os.path.join(DRYRUN_DIR, tag + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        r = json.load(f)
+    return r if r.get("status") == "ok" else None
+
+
+def _extrapolate(base: Dict, p1: Dict, p2: Dict, n_repeats: int) -> Dict:
+    """Per-repeat delta from the two probes -> full-depth totals."""
+    out = dict(base)
+    for key in ("flops", "bytes_accessed", "collective_bytes_per_device"):
+        delta = p2[key] - p1[key]
+        out[key] = p1[key] + (n_repeats - 1) * delta
+    out["probe_corrected"] = True
+    return out
+
+
+def slstm_flops_correction(cfg, shape, chips: int) -> float:
+    """Analytic per-device FLOPs of the sLSTM time scan (never unrolled)."""
+    n_slstm = sum(1 for s in cfg.layer_plan() if s.mixer == SLSTM)
+    if n_slstm == 0:
+        return 0.0
+    d = cfg.d_model
+    nh = cfg.xlstm_n_heads
+    dh = d // nh
+    # Batch shards over the 16-way 'data' axis on the single-pod mesh.
+    if shape.kind == "train":
+        tokens_per_dev = shape.global_batch / 16 * shape.seq_len
+        mult = 3.0   # fwd + bwd
+    elif shape.kind == "prefill":
+        tokens_per_dev = max(shape.global_batch / 16, 1) * shape.seq_len
+        mult = 1.0
+    else:
+        tokens_per_dev = max(shape.global_batch / 16, 1)
+        mult = 1.0
+    # Per token: 4 gates x block-diag R (H*dh*dh MACs) + ~24d elementwise.
+    per_token = 4 * nh * dh * dh * 2 + 24 * d
+    return mult * n_slstm * tokens_per_dev * per_token
+
+
+def _head_overhead_flops(cfg, shape, chips: int) -> float:
+    """Per-device FLOPs of embedding + LM head (+ loss), outside the layer
+    scan. Train: fwd+bwd (3x) on the head matmul; inference: fwd only."""
+    v, d = cfg.padded_vocab, cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch / 16 * shape.seq_len   # per-device
+        return 3 * 2.0 * tokens * d * v / 16               # head sharded 16-way
+    if shape.kind == "prefill":
+        tokens = max(shape.global_batch / 16, 1) * 1       # last-token logits
+        return 2.0 * tokens * d * v / 16
+    tokens = max(shape.global_batch / 16, 1)
+    return 2.0 * tokens * d * v / 16
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """Reference useful FLOPs per device (6ND train / 2ND inference)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+_FWD_FRACTION_CACHE: Dict[str, float] = {}
+
+
+def _forward_fraction(mesh_tag: str) -> float:
+    """prefill/train FLOP ratio measured on fully-probed dense archs."""
+    if mesh_tag in _FWD_FRACTION_CACHE:
+        return _FWD_FRACTION_CACHE[mesh_tag]
+    ratios = []
+    for arch in ("qwen3-0.6b", "granite-3-8b", "qwen1.5-4b"):
+        tr = analyze(arch, "train_4k", mesh_tag)
+        pf = analyze(arch, "prefill_32k", mesh_tag)
+        if tr and pf and tr["probe_corrected"] is True and pf["probe_corrected"] is True:
+            ratios.append(pf["hlo_flops_per_dev"] / tr["hlo_flops_per_dev"])
+    frac = sum(ratios) / len(ratios) if ratios else 0.25
+    _FWD_FRACTION_CACHE[mesh_tag] = frac
+    return frac
+
+
+def analyze(arch: str, shape_name: str, mesh_tag: str = "16x16") -> Optional[Dict]:
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    base = _load(tag)
+    if base is None:
+        return None
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = base["chips"]
+
+    p1 = _load(tag + "__probe1")
+    p2 = _load(tag + "__probe2")
+    rec = dict(base)
+    rec["probe_corrected"] = False
+    if p1 and p2 and cfg.n_repeats >= 2:
+        rec = _extrapolate(base, p1, p2, cfg.n_repeats)
+    elif p1 and cfg.n_repeats >= 2:
+        # probe1-only fallback: the non-repeated overhead (embedding + LM
+        # head + loss) is one analytically-known matmul; per-repeat cost =
+        # probe1 - overhead. Exact for FLOPs, approximate for bytes/coll
+        # (same linear split applied).
+        head = _head_overhead_flops(cfg, shape, chips)
+        body = max(p1["flops"] - head, 0.0)
+        rec["flops"] = head + cfg.n_repeats * body
+        scale = rec["flops"] / max(p1["flops"], 1.0)
+        for key in ("bytes_accessed", "collective_bytes_per_device"):
+            rec[key] = p1[key] * scale
+        rec["probe_corrected"] = "probe1+analytic-head"
+    elif shape_name == "prefill_32k":
+        # SSM-heavy prefill probes are prohibitive to unroll (128+ chunk
+        # bodies); derive from the probe-corrected TRAIN numbers instead.
+        # train_4k and prefill_32k run the same 1,048,576 global tokens, so
+        # prefill ~= train * (forward fraction), with the fraction measured
+        # on archs that have both probes (qwen3/granite-3: ~0.25 with remat).
+        tr = analyze(arch, "train_4k", mesh_tag)
+        if tr is not None and tr["probe_corrected"]:
+            frac = _forward_fraction(mesh_tag)
+            rec["flops"] = tr["hlo_flops_per_dev"] * frac
+            rec["probe_corrected"] = "derived-from-train"
+    rec["flops"] += slstm_flops_correction(cfg, shape, chips)
+
+    compute_s = rec["flops"] / PEAK_FLOPS_BF16
+    memory_s = rec["bytes_accessed"] / HBM_BW
+    collective_s = rec["collective_bytes_per_device"] / ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, chips)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": rec["flops"],
+        "useful_ratio": mf / rec["flops"] if rec["flops"] else float("nan"),
+        "peak_gib": base["peak_bytes_per_device"] / 2**30,
+        "probe_corrected": rec["probe_corrected"],
+    }
+
+
+def main() -> None:
+    rows = []
+    seen = set()
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__16x16.json"))):
+        tag = os.path.basename(path)[: -len(".json")]
+        arch, shape_name, _ = tag.split("__")
+        if (arch, shape_name) in seen:
+            continue
+        seen.add((arch, shape_name))
+        r = analyze(arch, shape_name)
+        if r is None:
+            continue
+        rows.append(r)
+        base = f"roofline/{arch}/{shape_name}"
+        emit(f"{base}/compute_s", 0.0, f"{r['compute_s']:.4e}")
+        emit(f"{base}/memory_s", 0.0, f"{r['memory_s']:.4e}")
+        emit(f"{base}/collective_s", 0.0, f"{r['collective_s']:.4e}")
+        emit(f"{base}/dominant", 0.0, r["dominant"])
+        emit(f"{base}/useful_ratio", 0.0, f"{r['useful_ratio']:.3f}")
+        emit(f"{base}/peak_gib", 0.0, f"{r['peak_gib']:.2f}")
+        emit(f"{base}/probe_corrected", 0.0, r["probe_corrected"])
+
+    if rows:
+        os.makedirs("reports", exist_ok=True)
+        with open("reports/roofline.json", "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

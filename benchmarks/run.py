@@ -1,0 +1,48 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table2     # one table
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py). Env:
+REPRO_BENCH_QUERIES (default 4000), REPRO_BENCH_EPOCHS (default 300; paper
+uses 1000), REPRO_BENCH_CACHE.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    fig4_5_domains,
+    fig6_distribution,
+    kernel_bench,
+    roofline,
+    table1_rewards,
+    table2_routers,
+    table3_6_ablation,
+)
+
+SUITES = {
+    "table1": table1_rewards.main,
+    "table2": table2_routers.main,
+    "table3_6": table3_6_ablation.main,
+    "fig4_5": fig4_5_domains.main,
+    "fig6": fig6_distribution.main,
+    "kernels": kernel_bench.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    selected = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in selected:
+        if name not in SUITES:
+            raise SystemExit(f"unknown suite {name!r}; choose from {list(SUITES)}")
+        t0 = time.time()
+        SUITES[name]()
+        print(f"# suite {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

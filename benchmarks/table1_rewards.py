@@ -1,0 +1,26 @@
+"""Paper Table 1: R1 vs R2 oracle routers on pools 1-4.
+
+Columns: AIQ (up), lambda-sensitivity_perf (down), lambda-sensitivity_cost
+(down), max calls to the strongest model (down).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, eval_oracle, load_data, pool_splits
+
+
+def main() -> None:
+    data = load_data()
+    for pool_name in ("pool1", "pool2", "pool3", "pool4"):
+        pool, tr, va, te = pool_splits(data, pool_name)
+        for reward in ("R1", "R2"):
+            m = eval_oracle(pool, te, reward)
+            tag = f"table1/{pool_name}/{reward}"
+            emit(f"{tag}/aiq", 0.0, round(m["aiq"], 5))
+            emit(f"{tag}/lam_sens_perf", 0.0, round(m["lam_sens_perf"], 5))
+            emit(f"{tag}/lam_sens_cost", 0.0, f"{m['lam_sens_cost']:.3e}")
+            emit(f"{tag}/max_calls_expensive", 0.0,
+                 round(m["max_calls_expensive"], 5))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper Table 2 / Figure 3: attention router vs KNN / MLP / SVM / Blender.
+
+AIQ and Perf_max on pools 1-3 (paper table), with the oracle as the upper
+bound. The MLP baseline is RouterBench's (same role as 2-FCN predictor);
+KNN uses k=20, SVM margin=0, as in the paper.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    LAMS, emit, eval_oracle, eval_router_sweep, load_data, pool_splits,
+    trained_router,
+)
+from repro.core import evaluate_sweep, rewards
+from repro.core.baselines import KNNRouter, SVMRouter, llm_blender_eval
+
+
+def _sweep_from_predictions(s_hat, c_hat):
+    return np.stack([
+        np.asarray(rewards.route("R2", s_hat, c_hat, lam)) for lam in LAMS
+    ])
+
+
+def main() -> None:
+    data = load_data()
+    for pool_name in ("pool1", "pool2", "pool3"):
+        pool, tr, va, te = pool_splits(data, pool_name)
+        tag = f"table2/{pool_name}"
+
+        # Attention router (R2) — the paper's method.
+        router = trained_router(pool, tr, va, pool_name, "attn", "attn")
+        m, us = eval_router_sweep(router, pool, te)
+        emit(f"{tag}/attn/aiq", us, round(m["aiq"], 5))
+        emit(f"{tag}/attn/perf_max", us, round(m["perf_max"], 5))
+
+        # KNN (k=20).
+        t0 = time.perf_counter()
+        knn = KNNRouter(pool.emb[tr], pool.quality[tr], pool.cost[tr], k=20)
+        s_hat, c_hat = knn.predict(pool.emb[te])
+        us_knn = (time.perf_counter() - t0) / len(te) * 1e6
+        mk = evaluate_sweep(_sweep_from_predictions(s_hat, c_hat),
+                            pool.quality[te], pool.cost[te], LAMS)
+        emit(f"{tag}/knn/aiq", us_knn, round(mk["aiq"], 5))
+        emit(f"{tag}/knn/perf_max", us_knn, round(mk["perf_max"], 5))
+
+        # MLP router (RouterBench baseline == 2-FCN predictors).
+        mlp = trained_router(pool, tr, va, pool_name, "2fcn", "2fcn")
+        mm, us_mlp = eval_router_sweep(mlp, pool, te)
+        emit(f"{tag}/mlp/aiq", us_mlp, round(mm["aiq"], 5))
+        emit(f"{tag}/mlp/perf_max", us_mlp, round(mm["perf_max"], 5))
+
+        # SVM router (margin=0).
+        t0 = time.perf_counter()
+        svm = SVMRouter.fit(pool.emb[tr], pool.quality[tr], pool.cost[tr])
+        s_hat, c_hat = svm.predict(pool.emb[te])
+        us_svm = (time.perf_counter() - t0) / len(te) * 1e6
+        ms = evaluate_sweep(_sweep_from_predictions(s_hat, c_hat),
+                            pool.quality[te], pool.cost[te], LAMS)
+        emit(f"{tag}/svm/aiq", us_svm, round(ms["aiq"], 5))
+        emit(f"{tag}/svm/perf_max", us_svm, round(ms["perf_max"], 5))
+
+        # LLM-Blender: post-generation, queries every model (no AIQ — single
+        # operating point whose cost is the sum of all model costs).
+        perf, total_cost = llm_blender_eval(pool.quality[te], pool.cost[te])
+        emit(f"{tag}/blender/perf_max", 0.0, round(perf, 5))
+        emit(f"{tag}/blender/cost_per_query", 0.0, f"{total_cost:.6f}")
+
+        # Oracle upper bound.
+        mo = eval_oracle(pool, te, "R2")
+        emit(f"{tag}/oracle/aiq", 0.0, round(mo["aiq"], 5))
+        emit(f"{tag}/oracle/perf_max", 0.0, round(mo["perf_max"], 5))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Tables 3-6 (Appendix C): quality-predictor x cost-predictor grid.
+
+AIQ and Perf_max for every (quality, cost) predictor pair on pool 1, for
+both reward functions. "oracle" rows/columns use the true values for that
+role (the paper's Oracle R1/R2 row/col).
+"""
+from __future__ import annotations
+
+import itertools
+import os
+
+import numpy as np
+
+from benchmarks.common import (
+    EPOCHS, LAMS, emit, load_data, model_embeddings, pool_splits,
+    trained_router,
+)
+from repro.core import evaluate_sweep, rewards
+
+KINDS = ["reg", "2fcn", "3fcn", "reg-emb", "2fcn-emb", "3fcn-emb", "attn"]
+GRID_KINDS = os.environ.get("REPRO_ABLATION_KINDS", ",".join(KINDS)).split(",")
+
+
+def main() -> None:
+    data = load_data()
+    pool, tr, va, te = pool_splits(data, "pool1")
+    q_true, c_true = pool.quality[te], pool.cost[te]
+
+    # Train each predictor once per role (routers share cached params).
+    preds_q, preds_c = {}, {}
+    for kind in GRID_KINDS:
+        router = trained_router(pool, tr, va, "pool1", kind, kind)
+        s_hat, c_hat = router.predict(pool.emb[te])
+        preds_q[kind] = s_hat
+        preds_c[kind] = c_hat
+    preds_q["oracle"] = q_true
+    preds_c["oracle"] = c_true
+
+    for reward in ("R1", "R2"):
+        for qk, ck in itertools.product(
+            ["oracle"] + GRID_KINDS, ["oracle"] + GRID_KINDS
+        ):
+            choices = np.stack([
+                np.asarray(rewards.route(reward, preds_q[qk], preds_c[ck], lam))
+                for lam in LAMS
+            ])
+            m = evaluate_sweep(choices, q_true, c_true, LAMS)
+            tag = f"table{'3_4' if reward == 'R1' else '5_6'}/{reward}/q={qk}/c={ck}"
+            emit(f"{tag}/aiq", 0.0, round(m["aiq"], 5))
+            emit(f"{tag}/perf_max", 0.0, round(m["perf_max"], 5))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Flattened-pytree checkpointing to .npz (orbax is unavailable offline).
+
+Stores every leaf under its tree path plus a small JSON metadata blob.
+Restoration validates structure + shapes against a template tree (so silent
+config drift fails loudly).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.common.tree import flatten_with_paths, unflatten_from_paths
+
+_META_KEY = "__repro_meta__"
+
+
+def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
+    flat = flatten_with_paths(tree)
+    arrays = {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        if a.dtype.kind == "V":  # ml_dtypes (bf16/fp8): not npz-serializable
+            a = a.astype(np.float32)
+        arrays[k] = a
+    arrays[_META_KEY] = np.frombuffer(
+        json.dumps(meta or {}).encode("utf-8"), dtype=np.uint8
+    )
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, template: Any):
+    """Returns (tree_like_template, meta)."""
+    with np.load(path) as data:
+        meta = json.loads(bytes(data[_META_KEY]).decode("utf-8"))
+        flat = {k: data[k] for k in data.files if k != _META_KEY}
+    tree = unflatten_from_paths(template, flat)
+    # Restore original dtypes from the template (np.savez keeps them, but
+    # weak-typed scalars can drift).
+    tree = jax.tree.map(
+        lambda t, x: x.astype(t.dtype) if hasattr(t, "dtype") else x, template, tree
+    )
+    return tree, meta

@@ -1,0 +1,21 @@
+"""Common utilities shared across the repro framework."""
+from repro.common.tree import (
+    tree_stack,
+    tree_unstack,
+    flatten_with_paths,
+    unflatten_from_paths,
+    tree_bytes,
+    tree_count,
+)
+from repro.common.dtypes import DTypePolicy, DEFAULT_POLICY
+
+__all__ = [
+    "tree_stack",
+    "tree_unstack",
+    "flatten_with_paths",
+    "unflatten_from_paths",
+    "tree_bytes",
+    "tree_count",
+    "DTypePolicy",
+    "DEFAULT_POLICY",
+]

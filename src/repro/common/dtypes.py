@@ -1,0 +1,35 @@
+"""Mixed-precision policy.
+
+TPU v5e peaks at 197 TFLOP/s in bf16 — the production policy keeps parameters
+and activations in bf16 with fp32 softmax/normalizer accumulations and fp32
+optimizer moments. The CPU test policy runs everything fp32 so pytest
+tolerances stay tight.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    # Accumulations (softmax denominators, scan carries, losses) always fp32.
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_param(self, x):
+        return x.astype(self.param_dtype)
+
+    def cast_compute(self, x):
+        return x.astype(self.compute_dtype)
+
+
+# CPU-test default: full fp32.
+DEFAULT_POLICY = DTypePolicy()
+
+# Production TPU policy used by the dry-run: bf16 params + compute.
+BF16_POLICY = DTypePolicy(
+    param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16, accum_dtype=jnp.float32
+)

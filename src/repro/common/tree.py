@@ -1,0 +1,81 @@
+"""Pytree helpers used by the param/optimizer/checkpoint layers.
+
+These are deliberately dependency-free (no flax/optax offline): parameter
+trees throughout the framework are plain nested dicts/tuples of jax arrays.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_stack(trees: Sequence[Any]) -> Any:
+    """Stack a sequence of identically-structured pytrees along a new axis 0.
+
+    Used to build the scanned parameter stacks for repeated layer patterns.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: Any, n: int) -> List[Any]:
+    """Inverse of :func:`tree_stack` for a known leading length ``n``."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def _path_str(path: Tuple[Any, ...]) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    """Flatten a pytree into ``{"a/b/0/c": leaf}`` form (checkpoint format)."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_str(path): leaf for path, leaf in leaves}
+
+
+def unflatten_from_paths(tree_like: Any, flat: Dict[str, Any]) -> Any:
+    """Rebuild a pytree with the structure of ``tree_like`` from a flat dict."""
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    new_leaves = []
+    for path, old_leaf in leaves_with_paths:
+        key = _path_str(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing parameter {key!r}")
+        leaf = flat[key]
+        if tuple(np.shape(leaf)) != tuple(np.shape(old_leaf)):
+            raise ValueError(
+                f"shape mismatch for {key!r}: checkpoint {np.shape(leaf)} vs "
+                f"model {np.shape(old_leaf)}"
+            )
+        new_leaves.append(jnp.asarray(leaf))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of a pytree (works on ShapeDtypeStructs too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_paths(tree: Any) -> List[str]:
+    """All leaf paths of a pytree as strings."""
+    return list(flatten_with_paths(tree).keys())

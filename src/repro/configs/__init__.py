@@ -1,0 +1,59 @@
+"""Assigned-architecture registry.
+
+``get_config(name)`` returns the full published config; ``get_smoke_config``
+returns the reduced same-family variant used by CPU smoke tests
+(<=2 pattern repeats, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+
+ARCH_IDS: List[str] = [
+    "musicgen-large",
+    "xlstm-1.3b",
+    "granite-moe-1b-a400m",
+    "jamba-1.5-large-398b",
+    "gemma3-27b",
+    "qwen1.5-4b",
+    "qwen3-0.6b",
+    "llama4-maverick-400b-a17b",
+    "llama-3.2-vision-90b",
+    "granite-3-8b",
+]
+
+_MODULES: Dict[str, str] = {
+    "musicgen-large": "musicgen_large",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "gemma3-27b": "gemma3_27b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "granite-3-8b": "granite_3_8b",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.smoke_config()
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ARCH_IDS}
+
+
+def replace(cfg: ArchConfig, **kw) -> ArchConfig:
+    return dataclasses.replace(cfg, **kw)

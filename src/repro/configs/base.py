@@ -1,0 +1,212 @@
+"""Architecture configuration system.
+
+Every assigned architecture is expressed as an :class:`ArchConfig` holding the
+exact published dimensions plus a *periodic layer plan*: a base ``pattern`` of
+heterogeneous :class:`LayerSpec` blocks repeated ``n_repeats`` times, followed
+by an optional ``remainder``. The model stack scans (``jax.lax.scan``) over
+the repeats with stacked parameters so HLO size / compile time stay bounded
+even for 100-layer models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# Mixer kinds.
+ATTN = "attn"          # causal self attention (full or sliding window)
+XATTN = "xattn"        # cross attention to (stubbed) modality embeddings
+MAMBA = "mamba"        # selective SSM (Mamba-1)
+MLSTM = "mlstm"        # xLSTM matrix-memory LSTM (linear attention family)
+SLSTM = "slstm"        # xLSTM scalar-memory LSTM (strictly recurrent)
+
+# FFN kinds.
+MLP = "mlp"
+MOE = "moe"
+NONE = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One block of the plan: a sequence mixer followed by an optional FFN."""
+
+    mixer: str = ATTN
+    ffn: str = MLP
+    window: int = 0          # >0: sliding-window self attention (ring KV cache)
+
+    def __post_init__(self):
+        assert self.mixer in (ATTN, XATTN, MAMBA, MLSTM, SLSTM), self.mixer
+        assert self.ffn in (MLP, MOE, NONE), self.ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                     # dense | moe | ssm | hybrid | vlm | audio
+    source: str                        # citation from the assignment table
+
+    # Core transformer dims (published values — do not change).
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+
+    # Attention options.
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    attn_logit_softcap: float = 0.0
+
+    # MoE options.
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # Mamba options.
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0               # 0 -> ceil(d_model / 16)
+
+    # xLSTM options.
+    xlstm_expand: int = 2              # mLSTM up-projection factor
+    xlstm_ff_factor: float = 2.6667    # sLSTM post-FFN factor (~4/3 * 2)
+
+    # Modality frontend stubs.
+    n_frontend_tokens: int = 0         # image patches / audio frames per item
+    frontend_dim: int = 0              # raw embedding dim from the stub encoder
+
+    # Layer plan.
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    n_repeats: int = 1
+    remainder: Tuple[LayerSpec, ...] = ()
+
+    # Eligibility: sub-quadratic decode for long_500k (see DESIGN.md §5).
+    supports_long_context: bool = False
+
+    # Norm epsilon.
+    norm_eps: float = 1e-6
+
+    # Max positions (for RoPE tables in serve mode; caches size themselves
+    # from the request, this is only a sanity bound).
+    max_seq_len: int = 1 << 20
+
+    def __post_init__(self):
+        planned = len(self.pattern) * self.n_repeats + len(self.remainder)
+        if self.n_layers and planned != self.n_layers:
+            raise ValueError(
+                f"{self.name}: layer plan covers {planned} layers, "
+                f"config says {self.n_layers}"
+            )
+
+    # ---- derived quantities -------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up so the embedding/LM head shards 16-ways cleanly."""
+        return round_up(self.vocab_size, 256)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(1, math.ceil(self.d_model / 16))
+
+    @property
+    def xlstm_d_inner(self) -> int:
+        return self.xlstm_expand * self.d_model
+
+    @property
+    def xlstm_n_heads(self) -> int:
+        # xLSTM-1.3B uses 4 heads; reduced smoke variants keep >=1.
+        return max(1, min(self.n_kv_heads or 4, self.xlstm_expand * 2))
+
+    def layer_plan(self) -> Tuple[LayerSpec, ...]:
+        """The full, flat sequence of layer specs (pattern*n + remainder)."""
+        return tuple(self.pattern) * self.n_repeats + tuple(self.remainder)
+
+    def has_mixer(self, kind: str) -> bool:
+        return any(s.mixer == kind for s in self.layer_plan())
+
+    def has_ffn(self, kind: str) -> bool:
+        return any(s.ffn == kind for s in self.layer_plan())
+
+    # ---- parameter count estimate (for cost model + docs) -------------------
+
+    def param_count(self) -> int:
+        """Analytic parameter count of the full model."""
+        d, hd = self.d_model, self.resolved_head_dim
+        total = self.padded_vocab * d          # tied embedding? keep separate head
+        total += self.padded_vocab * d         # lm head
+        for spec in self.layer_plan():
+            total += 2 * d                     # pre-mixer + pre-ffn norms
+            if spec.mixer in (ATTN, XATTN):
+                q = d * self.n_heads * hd
+                kv = 2 * d * self.n_kv_heads * hd
+                o = self.n_heads * hd * d
+                total += q + kv + o
+                if self.qkv_bias:
+                    total += (self.n_heads + 2 * self.n_kv_heads) * hd
+                if spec.mixer == XATTN and self.frontend_dim:
+                    total += self.frontend_dim * d  # modality projector
+            elif spec.mixer == MAMBA:
+                di, ds, dtr = self.ssm_d_inner, self.ssm_d_state, self.resolved_dt_rank
+                total += d * 2 * di            # in_proj (x, z)
+                total += di * self.ssm_d_conv  # depthwise conv
+                total += di * (dtr + 2 * ds)   # x_proj
+                total += dtr * di + di         # dt_proj
+                total += di * ds + di          # A_log, D
+                total += di * d                # out_proj
+            elif spec.mixer == MLSTM:
+                di = self.xlstm_d_inner
+                nh = self.xlstm_n_heads
+                total += d * 2 * di            # up projection (x, z)
+                total += 3 * di * (di // nh)   # block-diag q,k,v per head
+                total += 2 * di * nh           # i,f gate projections
+                total += di * d                # down projection
+            elif spec.mixer == SLSTM:
+                nh = self.xlstm_n_heads
+                hd_s = d // nh
+                total += 4 * d * d             # W_{z,i,f,o}
+                total += 4 * nh * hd_s * hd_s  # block-diag recurrent R
+                total += 4 * d                 # biases
+                f = self.xlstm_ff_factor
+                total += int(2 * d * d * f)    # gated FFN up/down
+            if spec.ffn == MLP and self.d_ff:
+                total += 3 * d * self.d_ff     # gate, up, down (SwiGLU)
+            elif spec.ffn == MOE:
+                e, fe = self.n_experts, self.d_ff_expert or self.d_ff
+                total += d * e                 # router
+                total += e * 3 * d * fe
+                total += self.n_shared_experts * 3 * d * fe
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if not self.has_ffn(MOE):
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        e, k, fe = self.n_experts, self.top_k, self.d_ff_expert or self.d_ff
+        n_moe = sum(1 for s in self.layer_plan() if s.ffn == MOE)
+        total -= n_moe * (e - k) * 3 * d * fe
+        return int(total)

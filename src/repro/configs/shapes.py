@@ -1,0 +1,92 @@
+"""Assigned input shapes + ShapeDtypeStruct input specs for the dry-run.
+
+Shapes (assigned):
+    train_4k     seq_len=4096    global_batch=256   (training)
+    prefill_32k  seq_len=32768   global_batch=32    (inference prefill)
+    decode_32k   seq_len=32768   global_batch=128   (inference decode: ONE new
+                                                     token + seq_len KV cache)
+    long_500k    seq_len=524288  global_batch=1     (long-context decode;
+                                                     sub-quadratic archs only)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation. Decode
+shapes include the abstract cache tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm as lm_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_IDS = list(SHAPES)
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeCfg) -> bool:
+    """long_500k only runs on sub-quadratic archs (DESIGN.md §5)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(
+    cfg: ArchConfig,
+    shape: ShapeCfg,
+    cache_dtype=jnp.bfloat16,
+    batch_override: Optional[int] = None,
+) -> Dict:
+    """Abstract inputs for (architecture x shape). Keys match the step fns."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    media_spec = None
+    if cfg.arch_type == "vlm" and cfg.n_frontend_tokens:
+        media_spec = _sds((b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+        if media_spec is not None:
+            specs["media"] = media_spec
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {
+            "tokens": _sds((b, s), jnp.int32),
+            "caches": lm_mod.abstract_caches(cfg, b, s, cache_dtype),
+        }
+        if media_spec is not None:
+            specs["media"] = media_spec
+        return specs
+
+    # decode: ONE new token against a seq_len cache.
+    return {
+        "token": _sds((b, 1), jnp.int32),
+        "caches": lm_mod.abstract_caches(cfg, b, s, cache_dtype),
+        "pos": _sds((), jnp.int32),
+    }

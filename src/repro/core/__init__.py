@@ -1,0 +1,28 @@
+"""The paper's contribution: cost-aware cross-attention LLM routing."""
+from repro.core.predictors import PREDICTORS, attention_scores
+from repro.core.rewards import REWARDS, reward_exponential, reward_linear, route
+from repro.core.metrics import (
+    DEFAULT_LAMBDA_GRID,
+    aiq,
+    evaluate_router,
+    lam_sensitivity,
+    max_calls_fraction,
+    pareto_frontier,
+    routed_points,
+)
+from repro.core.model_repr import build_model_embeddings, embed_new_model
+from repro.core.router import (
+    PredictiveRouter,
+    evaluate_sweep,
+    oracle_sweep,
+)
+from repro.core.clustering import kmeans, pairwise_sq_dists
+
+__all__ = [
+    "PREDICTORS", "REWARDS", "attention_scores", "reward_exponential",
+    "reward_linear", "route", "DEFAULT_LAMBDA_GRID", "aiq", "evaluate_router",
+    "lam_sensitivity", "max_calls_fraction", "pareto_frontier",
+    "routed_points", "build_model_embeddings", "embed_new_model",
+    "PredictiveRouter", "evaluate_sweep", "oracle_sweep", "kmeans",
+    "pairwise_sq_dists",
+]

@@ -1,0 +1,152 @@
+"""Baseline routers from RouterBench (KNN, MLP, SVM) + LLM-Blender.
+
+Implemented from scratch (sklearn is unavailable offline):
+
+  * KNN (k=20): predicted quality of model m = mean observed quality of m on
+    the k nearest training prompts (euclidean in embedding space).
+  * SVM (margin=0): one linear SVM per model trained with hinge loss on
+    binarized correctness; the (calibrated) decision value is the quality
+    estimate.
+  * MLP: RouterBench's MLP router — same role as the 2-FCN predictor but
+    trained as a baseline quality head (cost estimated per-model mean).
+  * LLM-Blender: post-generation ensembling — queries EVERY pool member,
+    ranks responses pairwise, answers with the argmax-wins model. Its cost
+    is the sum of all model costs per prompt (paper §5). Without PairRM
+    offline, the pairwise judge is simulated: a comparison of the true
+    qualities observed under judge noise (flip probability eps), which is
+    exactly how a pairwise reward model behaves to first order.
+
+All baselines route through the same reward machinery so AIQ is comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import pairwise_sq_dists
+
+
+# ---------------------------------------------------------------------------
+# KNN router
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KNNRouter:
+    train_emb: np.ndarray        # (N, d)
+    train_quality: np.ndarray    # (N, K)
+    train_cost: np.ndarray       # (N, K)
+    k: int = 20
+
+    def predict(self, q_emb: np.ndarray, batch: int = 1024):
+        """Mean quality/cost of the k nearest training prompts."""
+        xt = jnp.asarray(self.train_emb)
+        sq = jnp.asarray(self.train_quality)
+        sc = jnp.asarray(self.train_cost)
+        k = min(self.k, self.train_emb.shape[0])
+
+        @jax.jit
+        def chunk(q):
+            d = pairwise_sq_dists(q, xt)                    # (B, N)
+            _, idx = jax.lax.top_k(-d, k)                   # (B, k)
+            return sq[idx].mean(axis=1), sc[idx].mean(axis=1)
+
+        outs_s, outs_c = [], []
+        for i in range(0, len(q_emb), batch):
+            s, c = chunk(jnp.asarray(q_emb[i : i + batch]))
+            outs_s.append(np.asarray(s))
+            outs_c.append(np.asarray(c))
+        return np.concatenate(outs_s), np.concatenate(outs_c)
+
+
+# ---------------------------------------------------------------------------
+# Linear SVM router (hinge loss, from scratch)
+# ---------------------------------------------------------------------------
+
+def _train_linear_svm(
+    x: np.ndarray, y: np.ndarray, *, c_reg: float = 1.0, epochs: int = 200,
+    lr: float = 0.05, seed: int = 0,
+) -> Tuple[np.ndarray, float]:
+    """Binary linear SVM via hinge-loss full-batch GD. y in {-1, +1}."""
+    xj, yj = jnp.asarray(x), jnp.asarray(y, jnp.float32)
+    d = x.shape[1]
+    w = jnp.zeros((d,))
+    b = jnp.float32(0.0)
+
+    def loss(params):
+        w, b = params
+        margins = yj * (xj @ w + b)
+        hinge = jnp.mean(jnp.maximum(0.0, 1.0 - margins))
+        return 0.5 / c_reg * jnp.sum(w * w) / len(x) + hinge
+
+    grad = jax.jit(jax.grad(loss))
+    params = (w, b)
+    for _ in range(epochs):
+        g = grad(params)
+        params = jax.tree.map(lambda p_, g_: p_ - lr * g_, params, g)
+    return np.asarray(params[0]), float(params[1])
+
+
+@dataclasses.dataclass
+class SVMRouter:
+    weights: np.ndarray          # (K, d)
+    biases: np.ndarray           # (K,)
+    mean_cost: np.ndarray        # (K,)
+    margin: float = 0.0
+
+    @classmethod
+    def fit(cls, train_emb, train_quality, train_cost, margin: float = 0.0):
+        n, k = train_quality.shape
+        ws, bs = [], []
+        for m in range(k):
+            y = np.where(train_quality[:, m] > 0.5, 1.0, -1.0)
+            w, b = _train_linear_svm(train_emb, y)
+            ws.append(w)
+            bs.append(b)
+        return cls(
+            weights=np.stack(ws),
+            biases=np.asarray(bs),
+            mean_cost=train_cost.mean(axis=0),
+            margin=margin,
+        )
+
+    def predict(self, q_emb: np.ndarray):
+        dec = q_emb @ self.weights.T + self.biases       # (B, K)
+        # Squash decision values to a [0,1] quality proxy; margin shifts the
+        # decision boundary (margin=0 in the paper's configuration).
+        s_hat = 1.0 / (1.0 + np.exp(-(dec - self.margin)))
+        c_hat = np.broadcast_to(self.mean_cost, s_hat.shape)
+        return s_hat, c_hat
+
+
+# ---------------------------------------------------------------------------
+# LLM-Blender (post-generation, simulated PairRM)
+# ---------------------------------------------------------------------------
+
+def llm_blender_choices(
+    quality: np.ndarray, *, judge_noise: float = 0.1, seed: int = 0
+) -> np.ndarray:
+    """Per-prompt argmax-wins over all pairwise comparisons. (B,) indices."""
+    rng = np.random.default_rng(seed)
+    b, k = quality.shape
+    wins = np.zeros((b, k), dtype=np.int32)
+    for i in range(k):
+        for j in range(i + 1, k):
+            better = quality[:, i] >= quality[:, j]
+            flip = rng.random(b) < judge_noise
+            i_wins = better ^ flip
+            wins[:, i] += i_wins
+            wins[:, j] += ~i_wins
+    return wins.argmax(axis=1)
+
+
+def llm_blender_eval(quality: np.ndarray, cost: np.ndarray, **kw):
+    """(perf, total_cost): quality of the winner, cost of querying everyone."""
+    ch = llm_blender_choices(quality, **kw)
+    b = np.arange(len(ch))
+    perf = float(quality[b, ch].mean())
+    total_cost = float(cost.sum(axis=1).mean())
+    return perf, total_cost

@@ -1,0 +1,66 @@
+"""K-means from scratch (no sklearn offline): kmeans++ init + Lloyd.
+
+Backs the training-free model embeddings (paper §5) and the KNN baseline's
+neighborhood machinery. Deterministic under a seed.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(N, d) x (K, d) -> (N, K) squared euclidean distances."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)
+    return jnp.maximum(x2 - 2.0 * (x @ c.T) + c2[None, :], 0.0)
+
+
+def _kmeanspp_init(key, x: jnp.ndarray, k: int) -> jnp.ndarray:
+    n = x.shape[0]
+    keys = jax.random.split(key, k)
+    idx0 = jax.random.randint(keys[0], (), 0, n)
+    centers = [x[idx0]]
+    d2 = pairwise_sq_dists(x, jnp.stack(centers))[:, 0]
+    for i in range(1, k):
+        probs = d2 / jnp.maximum(d2.sum(), 1e-12)
+        idx = jax.random.choice(keys[i], n, p=probs)
+        centers.append(x[idx])
+        d2 = jnp.minimum(d2, pairwise_sq_dists(x, x[idx][None])[:, 0])
+    return jnp.stack(centers)
+
+
+def kmeans(
+    x: np.ndarray, k: int, *, seed: int = 0, n_iters: int = 50
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Lloyd's algorithm. Returns (centroids (K,d), assignments (N,))."""
+    xj = jnp.asarray(x, jnp.float32)
+    centers = _kmeanspp_init(jax.random.key(seed), xj, k)
+
+    @jax.jit
+    def step(c):
+        assign = jnp.argmin(pairwise_sq_dists(xj, c), axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)     # (N,K)
+        counts = onehot.sum(axis=0)                                # (K,)
+        sums = onehot.T @ xj                                       # (K,d)
+        new_c = jnp.where(
+            counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), c
+        )
+        return new_c, assign
+
+    assign = None
+    for _ in range(n_iters):
+        new_centers, assign = step(centers)
+        if bool(jnp.allclose(new_centers, centers, atol=1e-6)):
+            centers = new_centers
+            break
+        centers = new_centers
+    return np.asarray(centers), np.asarray(assign)
+
+
+def assign_clusters(x: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    d = pairwise_sq_dists(jnp.asarray(x, jnp.float32), jnp.asarray(centers, jnp.float32))
+    return np.asarray(jnp.argmin(d, axis=1))

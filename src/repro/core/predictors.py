@@ -1,0 +1,186 @@
+"""Predictor architectures for the dual-predictor routing framework.
+
+One predictor estimates response *quality* of every pool member for a query,
+a second (same family) estimates generation *cost*. Variants (paper §3 +
+Appendix C):
+
+  reg        linear map   q_emb -> K scores
+  2fcn/3fcn  MLPs         q_emb -> K scores (params shared across models)
+  reg-emb / 2fcn-emb / 3fcn-emb
+             per-model input concat [q_emb ; m_emb_k] -> 1 score
+  attn       single-head cross-attention: q_emb as query, model embeddings
+             as keys/values (THE paper contribution)
+  attn-dot   same attention core with a pool-size-free scoring head
+             (preserves dynamic add/remove of models; see DESIGN.md §1)
+
+All are functional: ``init(key, dims) -> params``, ``apply(params, q, m) ->
+(B, K)``. Model embeddings ``m`` are (K, C) built by
+:mod:`repro.core.model_repr` and passed at call time — decoupled from
+training, so the pool can change without retraining (emb/attn variants).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class PredictorDef(NamedTuple):
+    init: Callable          # (key, d_query, n_models, d_model_emb) -> params
+    apply: Callable         # (params, q (B,dq), m (K,dm)) -> (B,K)
+    pool_free: bool         # True if params are independent of K
+
+
+# ---------------------------------------------------------------------------
+# Regression
+# ---------------------------------------------------------------------------
+
+def _init_reg(key, dq, k, dm):
+    return {"w": dense_init(key, dq, k), "b": jnp.zeros((k,))}
+
+
+def _apply_reg(p, q, m):
+    return q @ p["w"] + p["b"]
+
+
+def _init_reg_emb(key, dq, k, dm):
+    return {"w": dense_init(key, dq + dm, 1), "b": jnp.zeros(())}
+
+
+def _apply_reg_emb(p, q, m):
+    b, k = q.shape[0], m.shape[0]
+    qq = jnp.broadcast_to(q[:, None, :], (b, k, q.shape[1]))
+    mm = jnp.broadcast_to(m[None, :, :], (b, k, m.shape[1]))
+    x = jnp.concatenate([qq, mm], axis=-1)
+    return (x @ p["w"])[..., 0] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs (2-layer and 3-layer FCNs)
+# ---------------------------------------------------------------------------
+
+MLP_HIDDEN = 256
+
+
+def _init_fcn(key, d_in, d_out, n_hidden):
+    dims = [d_in] + [MLP_HIDDEN] * n_hidden + [d_out]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer{i}": {
+            "w": dense_init(ks[i], dims[i], dims[i + 1]),
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def _apply_fcn(p, x):
+    n = len(p)
+    for i in range(n):
+        x = x @ p[f"layer{i}"]["w"] + p[f"layer{i}"]["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _make_fcn(n_hidden):
+    def init(key, dq, k, dm):
+        return _init_fcn(key, dq, k, n_hidden)
+
+    def apply(p, q, m):
+        return _apply_fcn(p, q)
+
+    return init, apply
+
+
+def _make_fcn_emb(n_hidden):
+    def init(key, dq, k, dm):
+        return _init_fcn(key, dq + dm, 1, n_hidden)
+
+    def apply(p, q, m):
+        b, k = q.shape[0], m.shape[0]
+        qq = jnp.broadcast_to(q[:, None, :], (b, k, q.shape[1]))
+        mm = jnp.broadcast_to(m[None, :, :], (b, k, m.shape[1]))
+        x = jnp.concatenate([qq, mm], axis=-1)
+        return _apply_fcn(p, x)[..., 0]
+
+    return init, apply
+
+
+# ---------------------------------------------------------------------------
+# Single-head cross-attention (the paper's router head)
+# ---------------------------------------------------------------------------
+
+ATTN_LATENT = 20  # internal dimension (paper §5: cost predictor maps to 20)
+
+
+def _init_attn(key, dq, k, dm, latent=ATTN_LATENT):
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], dq, latent),
+        "wk": dense_init(ks[1], dm, latent),
+        "wv": dense_init(ks[2], dm, latent),
+        "wo": dense_init(ks[3], latent, k),
+        "bo": jnp.zeros((k,)),
+    }
+
+
+def attention_scores(p, q, m):
+    """Core single-head cross-attention (paper Fig. 2).
+
+    q (B, dq) -> queries; m (K, dm) -> keys & values. Returns the attended
+    context (B, latent) and the attention weights (B, K).
+    """
+    qp = q @ p["wq"]                                   # (B, d)
+    kp = m @ p["wk"]                                   # (K, d)
+    vp = m @ p["wv"]                                   # (K, d)
+    d_v = vp.shape[-1]
+    logits = (qp @ kp.T) / math.sqrt(d_v)              # (B, K)
+    alpha = jax.nn.softmax(logits, axis=-1)
+    ctx = alpha @ vp                                   # (B, d)
+    return ctx, alpha
+
+
+def _apply_attn(p, q, m):
+    ctx, _ = attention_scores(p, q, m)
+    return ctx @ p["wo"] + p["bo"]
+
+
+def _init_attn_dot(key, dq, k, dm, latent=ATTN_LATENT):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], dq, latent),
+        "wk": dense_init(ks[1], dm, latent),
+        "wv": dense_init(ks[2], dm, latent),
+        "scale": jnp.ones(()),
+        "bias": jnp.zeros(()),
+    }
+
+
+def _apply_attn_dot(p, q, m):
+    """Pool-size-free head: score_m = (ctx + q~) . v~_m (dynamic pools)."""
+    ctx, _ = attention_scores(p, q, m)
+    qp = q @ p["wq"]
+    vp = m @ p["wv"]
+    return p["scale"] * ((ctx + qp) @ vp.T) + p["bias"]
+
+
+_fcn2_init, _fcn2_apply = _make_fcn(1)
+_fcn3_init, _fcn3_apply = _make_fcn(2)
+_fcn2e_init, _fcn2e_apply = _make_fcn_emb(1)
+_fcn3e_init, _fcn3e_apply = _make_fcn_emb(2)
+
+PREDICTORS: Dict[str, PredictorDef] = {
+    "reg": PredictorDef(_init_reg, _apply_reg, pool_free=False),
+    "2fcn": PredictorDef(_fcn2_init, _fcn2_apply, pool_free=False),
+    "3fcn": PredictorDef(_fcn3_init, _fcn3_apply, pool_free=False),
+    "reg-emb": PredictorDef(_init_reg_emb, _apply_reg_emb, pool_free=True),
+    "2fcn-emb": PredictorDef(_fcn2e_init, _fcn2e_apply, pool_free=True),
+    "3fcn-emb": PredictorDef(_fcn3e_init, _fcn3e_apply, pool_free=True),
+    "attn": PredictorDef(_init_attn, _apply_attn, pool_free=False),
+    "attn-dot": PredictorDef(_init_attn_dot, _apply_attn_dot, pool_free=True),
+}

@@ -1,0 +1,36 @@
+"""Reward functions combining predicted quality and cost (paper Eq. 3).
+
+    R1(s, c; lam) = s - c / lam              (traditional linear trade-off)
+    R2(s, c; lam) = s * exp(-c / lam)        (proposed exponential trade-off)
+
+``lam`` ("lambda") is the user's willingness to pay. R2 is bounded on
+s in [0,1], c >= 0 — the paper attributes its drastically lower
+lambda-sensitivity to this boundedness.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+
+def reward_linear(s, c, lam):
+    """R1 = s - c/lam."""
+    return s - c / lam
+
+
+def reward_exponential(s, c, lam):
+    """R2 = s * exp(-c/lam)."""
+    return s * jnp.exp(-c / lam)
+
+
+REWARDS: Dict[str, Callable] = {
+    "R1": reward_linear,
+    "R2": reward_exponential,
+}
+
+
+def route(reward_name: str, s_hat, c_hat, lam):
+    """argmax_m Reward(s_hat[:, m], c_hat[:, m]; lam) -> (B,) model indices."""
+    r = REWARDS[reward_name](jnp.asarray(s_hat), jnp.asarray(c_hat), lam)
+    return jnp.argmax(r, axis=-1)

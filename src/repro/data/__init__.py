@@ -1,0 +1,16 @@
+"""Data pipeline: synthetic RouterBench, embedding frontend, LM token streams."""
+from repro.data.featurizer import EMB_DIM, embed_text, embed_texts
+from repro.data.routerbench import (
+    BENCHMARKS,
+    MODELS,
+    POOLS,
+    PRICES,
+    RouterBenchData,
+    generate,
+    load_csv,
+)
+
+__all__ = [
+    "EMB_DIM", "embed_text", "embed_texts", "BENCHMARKS", "MODELS", "POOLS",
+    "PRICES", "RouterBenchData", "generate", "load_csv",
+]

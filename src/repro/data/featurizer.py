@@ -1,0 +1,69 @@
+"""Prompt embedding frontend (DistilBERT stand-in — the carve-out stub).
+
+The paper encodes prompts with DistilBERT into 768-d, L2-normalized vectors.
+DistilBERT is not available offline, so this module provides a deterministic
+hashed-character-n-gram embedder:
+
+  1. extract character 3..5-grams,
+  2. hash each n-gram to one of ``n_buckets`` (blake2, stable across runs),
+  3. bucket counts -> a fixed seeded Gaussian random projection to 768-d,
+  4. L2 normalize (the paper normalizes too).
+
+Semantically weaker than DistilBERT, but: deterministic, offline, and it
+preserves the *structure* the routing experiments need (similar prompts map
+to nearby embeddings). The synthetic RouterBench generator additionally
+plants its latent domain signal in designated embedding directions so the
+learnability of query->quality relations matches the benchmark's character.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import List, Sequence
+
+import numpy as np
+
+EMB_DIM = 768
+N_BUCKETS = 4096
+_PROJ_SEED = 1234567
+
+
+def _ngrams(text: str, lo: int = 3, hi: int = 5) -> List[str]:
+    t = f"^{text.lower()}$"
+    out = []
+    for n in range(lo, hi + 1):
+        out.extend(t[i : i + n] for i in range(max(0, len(t) - n + 1)))
+    return out
+
+
+def _bucket(ngram: str) -> int:
+    h = hashlib.blake2s(ngram.encode("utf-8"), digest_size=4).digest()
+    return int.from_bytes(h, "little") % N_BUCKETS
+
+
+_PROJECTION = None
+
+
+def _projection() -> np.ndarray:
+    global _PROJECTION
+    if _PROJECTION is None:
+        rng = np.random.default_rng(_PROJ_SEED)
+        _PROJECTION = rng.standard_normal((N_BUCKETS, EMB_DIM)).astype(
+            np.float32
+        ) / np.sqrt(EMB_DIM)
+    return _PROJECTION
+
+
+def embed_text(text: str) -> np.ndarray:
+    """One prompt -> (768,) unit-norm embedding. Deterministic."""
+    counts = np.zeros((N_BUCKETS,), dtype=np.float32)
+    for g in _ngrams(text):
+        counts[_bucket(g)] += 1.0
+    if counts.sum() > 0:
+        counts = np.log1p(counts)
+    v = counts @ _projection()
+    n = np.linalg.norm(v)
+    return v / n if n > 0 else v
+
+
+def embed_texts(texts: Sequence[str]) -> np.ndarray:
+    return np.stack([embed_text(t) for t in texts])

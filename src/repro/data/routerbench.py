@@ -1,0 +1,317 @@
+"""RouterBench-shaped dataset: synthetic generator + real-CSV loader.
+
+RouterBench [arXiv:2403.12031] logs the responses of 11 LLMs on 8 benchmarks
+(~1 response per model per prompt), with exact-match quality for
+MMLU/GSM8K/HellaSwag/ARC-C/Winogrande and GPT-evaluated (normalized [0,1])
+quality for MBPP/MT-Bench/RAG; costs follow API pricing.
+
+The dataset itself is not redistributable/offline, so :func:`generate`
+produces a deterministic synthetic benchmark with the same shape and the
+properties the paper's analysis relies on:
+
+  * most queries answerable by a cheap model, a hard tail needing GPT-4
+    (the paper: "most answers an expensive model can answer, smaller models
+    can too");
+  * per-model skill profiles over latent domains; benchmarks are mixtures of
+    domains; MMLU carries sub-domains (for the paper's domain-wise figures);
+  * prompts are synthetic *text* whose wording encodes domain + difficulty,
+    so the full pipeline (text -> hashed featurizer -> predictors) is
+    exercised end-to-end, not short-circuited with oracle features.
+
+``load_csv`` ingests the real RouterBench dump (long format: one row per
+(prompt, model)) when available, producing the identical structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.featurizer import embed_texts
+
+# ---------------------------------------------------------------------------
+# Pool definitions (paper Appendix B) and API-pricing cost table ($/1M tok)
+# ---------------------------------------------------------------------------
+
+MODELS: List[str] = [
+    "mistral-7b-chat",        # 0
+    "mixtral-8x7b-chat",      # 1
+    "wizardlm-13b",           # 2
+    "codellama-34b-instruct", # 3
+    "yi-34b-chat",            # 4
+    "gpt-4",                  # 5
+    "gpt-3.5-turbo",          # 6
+    "claude-instant-v1",      # 7
+    "claude-v1",              # 8
+    "claude-v2",              # 9
+    "llama-2-70b-chat",       # 10
+]
+
+# (input, output) $ per 1M tokens — TogetherAI for OSS, vendor API otherwise.
+PRICES: Dict[str, Tuple[float, float]] = {
+    "mistral-7b-chat": (0.20, 0.20),
+    "mixtral-8x7b-chat": (0.60, 0.60),
+    "wizardlm-13b": (0.30, 0.30),
+    "codellama-34b-instruct": (0.78, 0.78),
+    "yi-34b-chat": (0.80, 0.80),
+    "gpt-4": (30.00, 60.00),
+    "gpt-3.5-turbo": (1.00, 2.00),
+    "claude-instant-v1": (0.80, 2.40),
+    "claude-v1": (8.00, 24.00),
+    "claude-v2": (8.00, 24.00),
+    "llama-2-70b-chat": (0.90, 0.90),
+}
+
+POOLS: Dict[str, List[str]] = {
+    # Paper Appendix B, name-for-name.
+    "pool1": ["mistral-7b-chat", "wizardlm-13b", "mixtral-8x7b-chat",
+              "codellama-34b-instruct", "gpt-4"],
+    "pool2": ["wizardlm-13b", "codellama-34b-instruct", "yi-34b-chat",
+              "claude-instant-v1", "claude-v2"],
+    "pool3": ["mistral-7b-chat", "mixtral-8x7b-chat",
+              "codellama-34b-instruct", "yi-34b-chat", "gpt-4"],
+    "pool4": ["llama-2-70b-chat", "claude-v1", "claude-v2", "gpt-4"],
+}
+
+BENCHMARKS = ["mmlu", "gsm8k", "hellaswag", "arc-challenge", "winogrande",
+              "mbpp", "mt-bench", "rag"]
+BINARY_BENCHMARKS = {"mmlu", "gsm8k", "hellaswag", "arc-challenge", "winogrande"}
+
+MMLU_DOMAINS = ["professional_law", "mathematics", "biology", "computer_science",
+                "world_history", "philosophy"]
+
+# Latent skill axes.
+_SKILLS = ["reasoning", "math", "code", "knowledge", "commonsense",
+           "reading", "instruction", "long_context"]
+_NSK = len(_SKILLS)
+
+# Benchmark -> skill mixture.
+_BENCH_MIX = {
+    "mmlu":          [0.3, 0.1, 0.0, 0.5, 0.0, 0.1, 0.0, 0.0],
+    "gsm8k":         [0.4, 0.6, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    "hellaswag":     [0.1, 0.0, 0.0, 0.1, 0.7, 0.1, 0.0, 0.0],
+    "arc-challenge": [0.4, 0.1, 0.0, 0.4, 0.1, 0.0, 0.0, 0.0],
+    "winogrande":    [0.2, 0.0, 0.0, 0.0, 0.7, 0.1, 0.0, 0.0],
+    "mbpp":          [0.2, 0.1, 0.7, 0.0, 0.0, 0.0, 0.0, 0.0],
+    "mt-bench":      [0.2, 0.0, 0.1, 0.2, 0.1, 0.1, 0.3, 0.0],
+    "rag":           [0.1, 0.0, 0.0, 0.2, 0.0, 0.4, 0.1, 0.2],
+}
+
+_MMLU_DOMAIN_MIX = {
+    "professional_law":  [0.5, 0.0, 0.0, 0.3, 0.0, 0.2, 0.0, 0.0],
+    "mathematics":       [0.3, 0.7, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    "biology":           [0.2, 0.0, 0.0, 0.7, 0.0, 0.1, 0.0, 0.0],
+    "computer_science":  [0.2, 0.1, 0.5, 0.2, 0.0, 0.0, 0.0, 0.0],
+    "world_history":     [0.1, 0.0, 0.0, 0.8, 0.0, 0.1, 0.0, 0.0],
+    "philosophy":        [0.4, 0.0, 0.0, 0.3, 0.0, 0.3, 0.0, 0.0],
+}
+
+# Model -> (overall strength, per-skill profile). Strength is a logit offset;
+# profiles are multiplied into the benchmark mixture. Loosely calibrated to
+# RouterBench's published orderings (gpt-4 strongest, codellama strong on
+# code, yi/mixtral mid-field, 7B/13B weakest).
+# Calibrated so the four pools' ORACLE statistics track the paper's Table 1
+# (AIQ ~0.86-0.89, max-calls-to-GPT-4 ~12-25%, GPT-4 mean ~0.85).
+_MODEL_STRENGTH = {
+    "mistral-7b-chat":        (-0.35, [0.6, 0.4, 0.5, 0.6, 0.8, 0.7, 0.7, 0.4]),
+    "mixtral-8x7b-chat":      (0.70,  [0.8, 0.7, 0.7, 0.8, 0.9, 0.8, 0.8, 0.6]),
+    "wizardlm-13b":           (-0.15, [0.7, 0.5, 0.5, 0.6, 0.8, 0.7, 0.8, 0.4]),
+    "codellama-34b-instruct": (0.05,  [0.6, 0.6, 1.1, 0.5, 0.6, 0.6, 0.6, 0.5]),
+    "yi-34b-chat":            (0.70,  [0.8, 0.6, 0.6, 0.9, 0.9, 0.8, 0.8, 0.6]),
+    "gpt-4":                  (1.15,  [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]),
+    "gpt-3.5-turbo":          (0.75,  [0.8, 0.7, 0.8, 0.8, 0.9, 0.8, 0.9, 0.6]),
+    "claude-instant-v1":      (0.55,  [0.8, 0.6, 0.6, 0.8, 0.8, 0.8, 0.8, 0.7]),
+    "claude-v1":              (0.85,  [0.9, 0.8, 0.7, 0.9, 0.9, 0.9, 0.9, 0.8]),
+    "claude-v2":              (0.95,  [0.9, 0.8, 0.8, 0.9, 0.9, 0.9, 0.9, 0.9]),
+    "llama-2-70b-chat":       (0.55,  [0.8, 0.6, 0.6, 0.8, 0.9, 0.8, 0.8, 0.6]),
+}
+
+# Vocabulary per skill axis for synthetic prompt text (the featurizer sees
+# only text — this is how the latent signal reaches the embeddings).
+_SKILL_WORDS = {
+    "reasoning": ["deduce", "therefore", "premise", "logic", "infer", "syllogism",
+                  "contradiction", "entail", "proof", "consistent"],
+    "math": ["integral", "equation", "algebra", "numerator", "polynomial",
+             "arithmetic", "fraction", "derivative", "modulo", "quotient"],
+    "code": ["function", "compile", "python", "variable", "recursion", "loop",
+             "array", "debug", "syntax", "algorithm"],
+    "knowledge": ["history", "capital", "discovered", "century", "theory",
+                  "empire", "element", "biology", "constitution", "treaty"],
+    "commonsense": ["kitchen", "umbrella", "breakfast", "neighbor", "holiday",
+                    "weather", "grocery", "garden", "traffic", "weekend"],
+    "reading": ["passage", "paragraph", "author", "summarize", "context",
+                "excerpt", "narrator", "tone", "quote", "article"],
+    "instruction": ["please", "rewrite", "steps", "format", "bullet", "draft",
+                    "polite", "email", "explain", "concise"],
+    "long_context": ["document", "archive", "transcript", "chapter", "appendix",
+                     "ledger", "catalogue", "minutes", "volume", "registry"],
+}
+
+_DIFFICULTY_WORDS = [
+    ["simple", "basic", "easy", "quick"],
+    ["standard", "typical", "common", "regular"],
+    ["tricky", "subtle", "layered", "detailed"],
+    ["hard", "complex", "advanced", "intricate"],
+    ["expert", "formidable", "exhaustive", "labyrinthine"],
+]
+
+
+@dataclasses.dataclass
+class RouterBenchData:
+    texts: List[str]
+    emb: np.ndarray               # (N, 768)
+    benchmark: np.ndarray         # (N,) str
+    domain: np.ndarray            # (N,) str (mmlu sub-domain or == benchmark)
+    quality: np.ndarray           # (N, K) in [0, 1]
+    cost: np.ndarray              # (N, K) $ per query
+    model_names: List[str]
+
+    def split(self, train=0.75, val=0.05, seed: int = 0):
+        """75/5/20 split (paper §5), stratified-free random permutation."""
+        n = len(self.texts)
+        rng = np.random.default_rng(seed)
+        perm = rng.permutation(n)
+        n_tr, n_val = int(train * n), int(val * n)
+        return perm[:n_tr], perm[n_tr : n_tr + n_val], perm[n_tr + n_val :]
+
+    def subset_models(self, names: Sequence[str]) -> "RouterBenchData":
+        idx = [self.model_names.index(m) for m in names]
+        return dataclasses.replace(
+            self,
+            quality=self.quality[:, idx],
+            cost=self.cost[:, idx],
+            model_names=list(names),
+        )
+
+    def pool(self, pool_name: str) -> "RouterBenchData":
+        return self.subset_models(POOLS[pool_name])
+
+    def select(self, mask: np.ndarray) -> "RouterBenchData":
+        idx = np.flatnonzero(mask)
+        return dataclasses.replace(
+            self,
+            texts=[self.texts[i] for i in idx],
+            emb=self.emb[idx],
+            benchmark=self.benchmark[idx],
+            domain=self.domain[idx],
+            quality=self.quality[idx],
+            cost=self.cost[idx],
+        )
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _make_prompt(rng, bench: str, mix: np.ndarray, difficulty: float) -> str:
+    words = [bench.replace("-", " ")]
+    n_words = 12
+    for _ in range(n_words):
+        skill = rng.choice(_NSK, p=mix)
+        words.append(rng.choice(_SKILL_WORDS[_SKILLS[skill]]))
+    tier = int(np.clip(difficulty * len(_DIFFICULTY_WORDS), 0,
+                       len(_DIFFICULTY_WORDS) - 1))
+    words.append(rng.choice(_DIFFICULTY_WORDS[tier]))
+    words.append(rng.choice(_DIFFICULTY_WORDS[tier]))
+    rng.shuffle(words)
+    return " ".join(words)
+
+
+def generate(
+    n_queries: int = 4000, *, seed: int = 0, embed: bool = True
+) -> RouterBenchData:
+    """Deterministic synthetic RouterBench. ~even benchmark coverage."""
+    rng = np.random.default_rng(seed)
+    texts, benches, domains, mixes, diffs = [], [], [], [], []
+    for _ in range(n_queries):
+        bench = BENCHMARKS[rng.integers(len(BENCHMARKS))]
+        if bench == "mmlu":
+            dom = MMLU_DOMAINS[rng.integers(len(MMLU_DOMAINS))]
+            mix = np.asarray(_MMLU_DOMAIN_MIX[dom], np.float64)
+        else:
+            dom = bench
+            mix = np.asarray(_BENCH_MIX[bench], np.float64)
+        mix = mix + 0.02
+        mix = mix / mix.sum()
+        difficulty = float(np.clip(rng.beta(2.0, 2.6), 0.0, 1.0))
+        texts.append(_make_prompt(rng, bench, mix, difficulty))
+        benches.append(bench)
+        domains.append(dom)
+        mixes.append(mix)
+        diffs.append(difficulty)
+
+    mixes = np.stack(mixes)                     # (N, S)
+    diffs = np.asarray(diffs)                   # (N,)
+
+    k = len(MODELS)
+    quality = np.zeros((n_queries, k), np.float32)
+    cost = np.zeros((n_queries, k), np.float32)
+    len_in = rng.integers(120, 900, size=n_queries)          # prompt tokens
+
+    for mi, name in enumerate(MODELS):
+        strength, profile = _MODEL_STRENGTH[name]
+        profile = np.asarray(profile, np.float64)
+        skill_match = mixes @ profile                        # (N,)
+        logit = 1.2 * strength + 2.6 * skill_match - 6.0 * diffs + 0.6
+        p = _sigmoid(logit)
+        for qi in range(n_queries):
+            bench = benches[qi]
+            if bench in BINARY_BENCHMARKS:
+                quality[qi, mi] = float(rng.random() < p[qi])
+            else:
+                # GPT-evaluated scores are coarse (MT-Bench: 1-10 scale
+                # normalized) — quantize to 0.1 so ties exist and the oracle
+                # can prefer the cheaper model, as in real RouterBench.
+                raw = np.clip(p[qi] + rng.normal(0, 0.20), 0.0, 1.0)
+                quality[qi, mi] = float(np.round(raw * 10.0) / 10.0)
+        p_in, p_out = PRICES[name]
+        len_out = rng.integers(80, 600, size=n_queries)
+        cost[:, mi] = (p_in * len_in + p_out * len_out) / 1e6
+
+    emb = embed_texts(texts) if embed else np.zeros((n_queries, 768), np.float32)
+    return RouterBenchData(
+        texts=texts,
+        emb=emb,
+        benchmark=np.asarray(benches),
+        domain=np.asarray(domains),
+        quality=quality,
+        cost=cost,
+        model_names=list(MODELS),
+    )
+
+
+def load_csv(path: str, model_names: Optional[List[str]] = None) -> RouterBenchData:
+    """Load a real RouterBench dump (long CSV:
+    prompt,benchmark,domain,model,quality,cost). Rows for the same prompt are
+    merged across models; prompts missing any pool member are dropped."""
+    import csv
+    from collections import defaultdict
+
+    rows = defaultdict(dict)
+    meta = {}
+    with open(path, newline="") as f:
+        for r in csv.DictReader(f):
+            key = r["prompt"]
+            rows[key][r["model"]] = (float(r["quality"]), float(r["cost"]))
+            meta[key] = (r.get("benchmark", "unknown"), r.get("domain", "unknown"))
+    names = model_names or sorted({m for d in rows.values() for m in d})
+    texts, bench, dom, qual, cost = [], [], [], [], []
+    for prompt, per_model in rows.items():
+        if not all(m in per_model for m in names):
+            continue
+        texts.append(prompt)
+        b, d = meta[prompt]
+        bench.append(b)
+        dom.append(d)
+        qual.append([per_model[m][0] for m in names])
+        cost.append([per_model[m][1] for m in names])
+    return RouterBenchData(
+        texts=texts,
+        emb=embed_texts(texts),
+        benchmark=np.asarray(bench),
+        domain=np.asarray(dom),
+        quality=np.asarray(qual, np.float32),
+        cost=np.asarray(cost, np.float32),
+        model_names=names,
+    )

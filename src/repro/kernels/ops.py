@@ -1,0 +1,83 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to TPU tile granularity (128 lanes), interpret-mode fallback
+on CPU (this container), and un-padding of results. The rest of the codebase
+calls only these entry points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_l2 import pairwise_l2_pallas
+from repro.kernels.router_xattn import router_xattn_pallas
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def router_xattn(
+    q, wq, wk, wv, wo, bo, m_emb, *, block_b: int = 256, interpret: bool = None
+):
+    """Fused routing scores: q (B, dq), m_emb (K, dm) -> (B, K) fp32.
+
+    Pads d_latent and K to 128 lanes and B to the batch tile; the pool-side
+    projections (K~ = m_emb Wk etc.) are tiny and computed outside the
+    kernel (they are per-pool constants at serving time).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, dq = q.shape
+    k = m_emb.shape[0]
+    d = wq.shape[1]
+
+    d_pad = _round_up(d, LANE)
+    k_pad = _round_up(k, LANE)
+    b_pad = _round_up(b, block_b)
+
+    qp = jnp.pad(q, ((0, b_pad - b), (0, 0)))
+    wq_p = jnp.pad(wq, ((0, 0), (0, d_pad - d)))
+    kt = m_emb.astype(jnp.float32) @ wk.astype(jnp.float32)      # (K, d)
+    vt = m_emb.astype(jnp.float32) @ wv.astype(jnp.float32)
+    kt_p = jnp.pad(kt, ((0, k_pad - k), (0, d_pad - d)))
+    vt_p = jnp.pad(vt, ((0, k_pad - k), (0, d_pad - d)))
+    wo_p = jnp.pad(wo, ((0, d_pad - d), (0, k_pad - k)))
+    bo_p = jnp.pad(bo, (0, k_pad - k))[None, :]
+    kmask = (jnp.arange(k_pad) < k).astype(jnp.float32)[None, :]
+
+    out = router_xattn_pallas(
+        qp, wq_p, kt_p, vt_p, wo_p, bo_p, kmask,
+        d_latent=d, block_b=block_b, interpret=interpret,
+    )
+    return out[:b, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def pairwise_l2(
+    x, c, *, block_n: int = 256, block_k: int = 256, interpret: bool = None
+):
+    """Squared L2 distances x (N,d) vs c (K,d) -> (N,K) fp32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = x.shape
+    k = c.shape[0]
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(k, 8))
+    n_pad = _round_up(n, block_n)
+    k_pad = _round_up(k, block_k)
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    cp = jnp.pad(c, ((0, k_pad - k), (0, 0)))
+    out = pairwise_l2_pallas(
+        xp, cp, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+    return out[:n, :k]

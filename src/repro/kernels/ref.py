@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These match :mod:`repro.core.predictors.attention_scores` /
+:mod:`repro.core.clustering.pairwise_sq_dists` semantics exactly; kernel
+tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def router_xattn_ref(q, wq, wk, wv, wo, bo, m_emb):
+    """Reference fused routing scores.
+
+    q (B, dq); m_emb (K, dm); wq (dq, d); wk/wv (dm, d); wo (d, K); bo (K,).
+    Returns (B, K) fp32 scores.
+    """
+    qf = q.astype(jnp.float32)
+    qp = qf @ wq.astype(jnp.float32)
+    kt = m_emb.astype(jnp.float32) @ wk.astype(jnp.float32)
+    vt = m_emb.astype(jnp.float32) @ wv.astype(jnp.float32)
+    d = qp.shape[-1]
+    logits = (qp @ kt.T) / math.sqrt(d)
+    alpha = jnp.exp(logits - logits.max(-1, keepdims=True))
+    alpha = alpha / alpha.sum(-1, keepdims=True)
+    ctx = alpha @ vt
+    return ctx @ wo.astype(jnp.float32) + bo.astype(jnp.float32)
+
+
+def pairwise_l2_ref(x, c):
+    """(N, d), (K, d) -> (N, K) squared euclidean distances, fp32."""
+    xf = x.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=1, keepdims=True)
+    c2 = jnp.sum(cf * cf, axis=1)
+    return jnp.maximum(x2 - 2.0 * (xf @ cf.T) + c2[None, :], 0.0)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, proving the distribution config is coherent without
+real hardware.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    ... --probe-repeats 2   (roofline probe: inner loops unrolled, see
+                             models/runtime_flags.py)
+
+Writes one JSON record per run under --out-dir (default reports/dryrun/).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import SHAPES, ShapeCfg, input_specs, shape_applicable
+from repro.launch.hlo_analysis import summarize_compiled
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.sharding import (
+    batch_shardings, cache_shardings, param_shardings,
+)
+from repro.launch.steps import (
+    abstract_opt_state, make_decode_step, make_prefill_step, make_train_step,
+)
+from repro.models import lm as lm_mod
+from repro.models import runtime_flags
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+def probe_config(cfg: ArchConfig, n_repeats: int) -> ArchConfig:
+    """Shrink to n_repeats pattern repeats (roofline probe)."""
+    return dataclasses.replace(
+        cfg,
+        n_repeats=n_repeats,
+        n_layers=len(cfg.pattern) * n_repeats + len(cfg.remainder),
+    )
+
+
+def lower_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    probe_repeats: int = 0,
+    donate: bool = True,
+    microbatch: int = 1,
+    moment_dtype: str = "fp32",
+    seq_shard: bool = False,
+    xlstm_gather: bool = False,
+    variant: str = "",
+):
+    """Lower + compile one (arch, shape, mesh). Returns the report dict."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "long_500k requires sub-quadratic decode "
+                          "(DESIGN.md §5)"}
+    if probe_repeats:
+        cfg = probe_config(cfg, probe_repeats)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    abstract_params = lm_mod.abstract_params(cfg, dtype=PARAM_DTYPE)
+    p_shardings = param_shardings(cfg, mesh, abstract_params)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        import dataclasses as _dc
+        from repro.launch.steps import TRAIN_ADAM
+        adam_cfg = _dc.replace(
+            TRAIN_ADAM,
+            moment_dtype=jnp.bfloat16 if moment_dtype == "bf16" else jnp.float32,
+        )
+        rules_override = {}
+        if seq_shard:
+            rules_override["seq"] = "model"
+        if xlstm_gather:
+            rules_override["xlstm_gather_params"] = True
+        rules_override = rules_override or None
+        step = make_train_step(cfg, mesh, adam_cfg, microbatch=microbatch,
+                               rules_override=rules_override)
+        opt_abs = abstract_opt_state(cfg, abstract_params, adam_cfg)
+        opt_shardings = param_shardings(
+            cfg, mesh, opt_abs.m
+        )  # moments mirror params (ZeRO-3)
+        from repro.training.optim import AdamState
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        opt_sh = AdamState(
+            step=NamedSharding(mesh, P()), m=opt_shardings, v=opt_shardings
+        )
+        in_sh = (p_shardings, opt_sh, batch_shardings(mesh, specs))
+        args = (abstract_params, opt_abs, specs)
+        jitted = jax.jit(
+            step, in_shardings=in_sh,
+            donate_argnums=(0, 1) if donate else (),
+        )
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh)
+        c_sh = cache_shardings(cfg, mesh, specs["caches"])
+        b_sh = {"tokens": batch_shardings(mesh, specs["tokens"]),
+                "caches": c_sh}
+        if "media" in specs:
+            b_sh["media"] = batch_shardings(mesh, specs["media"])
+        args = (abstract_params, specs)
+        jitted = jax.jit(
+            step, in_shardings=(p_shardings, b_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+    else:  # decode
+        step = make_decode_step(cfg, mesh)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        b_sh = {
+            "token": batch_shardings(mesh, specs["token"]),
+            "caches": cache_shardings(cfg, mesh, specs["caches"]),
+            "pos": NamedSharding(mesh, P()),
+        }
+        args = (abstract_params, specs)
+        jitted = jax.jit(
+            step, in_shardings=(p_shardings, b_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        summary = summarize_compiled(compiled)
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": mesh_chips(mesh),
+        "probe_repeats": probe_repeats,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        **summary,
+    }
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--probe-repeats", type=int, default=0,
+                    help="roofline probe: n pattern repeats, inner loops unrolled")
+    ap.add_argument("--out-dir", default="reports/dryrun")
+    ap.add_argument("--no-donate", action="store_true")
+    # §Perf hillclimb levers (train shapes):
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--moment-dtype", choices=["fp32", "bf16"], default="fp32")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="shard train activations' seq dim over 'model'")
+    ap.add_argument("--xlstm-gather", action="store_true",
+                    help="ZeRO-3 gathered-weights mode for xLSTM blocks")
+    ap.add_argument("--variant", default="",
+                    help="tag appended to the output file name")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = 0
+    for arch, shape in pairs:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.probe_repeats:
+            tag += f"__probe{args.probe_repeats}"
+        if args.variant:
+            tag += f"__{args.variant}"
+        out_path = os.path.join(args.out_dir, tag + ".json")
+        try:
+            ctx = (runtime_flags.unroll_inner() if args.probe_repeats
+                   else _Null())
+            with ctx:
+                rep = lower_one(
+                    arch, shape,
+                    multi_pod=args.multi_pod,
+                    probe_repeats=args.probe_repeats,
+                    donate=not args.no_donate,
+                    microbatch=args.microbatch,
+                    moment_dtype=args.moment_dtype,
+                    seq_shard=args.seq_shard,
+                    xlstm_gather=args.xlstm_gather,
+                    variant=args.variant,
+                )
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rep = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            failures += 1
+        with open(out_path, "w") as f:
+            json.dump(rep, f, indent=2)
+        status = rep["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f"flops={rep['flops']:.3e} "
+                     f"coll={rep['collective_bytes_per_device']:.3e}B "
+                     f"peak={rep['peak_bytes_per_device']/2**30:.2f}GiB "
+                     f"compile={rep['compile_s']}s")
+        elif status == "error":
+            extra = rep["error"][:200]
+        print(f"[dryrun] {tag}: {status} {extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+class _Null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Post-SPMD HLO analysis: collective inventory + roofline inputs.
+
+``compiled.cost_analysis()`` provides FLOPs and bytes (with the documented
+caveat that ``while`` bodies count once — see models/runtime_flags.py for how
+the roofline probe removes that undercount). Collective traffic is NOT in
+cost_analysis, so this module parses the optimized HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op's shape and replica-group size, converted to per-device ICI bytes with the
+standard ring formulas:
+
+    all-gather       out_bytes * (g-1)/g
+    all-reduce       2 * bytes * (g-1)/g
+    reduce-scatter   out_bytes * (g-1)         (out is the scattered shard)
+    all-to-all       bytes * (g-1)/g
+    collective-permute   bytes
+
+Shapes in post-SPMD HLO are per-device, so the result is per-device traffic.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of possibly-tuple HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """Inventory of collectives: kind, per-device result bytes, group size."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, is_start = m.group(1), m.group(2), m.group(3)
+        if is_start:
+            # async start returns (operand, result, ...): count the largest
+            # element once, not the whole tuple.
+            sizes = [_shape_bytes(t.group(0))
+                     for t in _SHAPE_RE.finditer(shape_str)]
+            nbytes = max(sizes) if sizes else 0
+        else:
+            nbytes = _shape_bytes(shape_str)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        out.append({"kind": kind, "result_bytes": nbytes, "group": g})
+    return out
+
+
+def collective_bytes_per_device(collectives: List[Dict]) -> Tuple[float, Dict]:
+    """ICI bytes per device + per-kind breakdown (ring formulas above)."""
+    total = 0.0
+    by_kind: Dict[str, float] = {}
+    for c in collectives:
+        g = max(c["group"], 1)
+        b = float(c["result_bytes"])
+        if c["kind"] == "collective-permute":
+            contrib = b          # point-to-point: no replica_groups attr
+        elif g == 1:
+            contrib = 0.0
+        elif c["kind"] == "all-gather":
+            contrib = b * (g - 1) / g
+        elif c["kind"] == "all-reduce":
+            contrib = 2.0 * b * (g - 1) / g
+        elif c["kind"] == "reduce-scatter":
+            contrib = b * (g - 1)
+        elif c["kind"] == "all-to-all":
+            contrib = b * (g - 1) / g
+        else:  # pragma: no cover
+            contrib = b
+        total += contrib
+        by_kind[c["kind"]] = by_kind.get(c["kind"], 0.0) + contrib
+    return total, by_kind
+
+
+def summarize_compiled(compiled) -> Dict:
+    """Everything the roofline needs from one compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll = parse_collectives(text)
+    coll_bytes, by_kind = collective_bytes_per_device(coll)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes_per_device": int(mem.argument_size_in_bytes),
+        "output_bytes_per_device": int(mem.output_size_in_bytes),
+        "temp_bytes_per_device": int(mem.temp_size_in_bytes),
+        "alias_bytes_per_device": int(mem.alias_size_in_bytes),
+        "peak_bytes_per_device": int(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+        ),
+        "collective_bytes_per_device": coll_bytes,
+        "collective_breakdown": by_kind,
+        "n_collectives": len(coll),
+    }

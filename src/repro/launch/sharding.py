@@ -1,0 +1,315 @@
+"""Sharding rules: parameters (2-D TP x FSDP), activations, caches, batches.
+
+Strategy (DESIGN.md §6):
+  * Tensor parallel ("model" axis): head/ff/expert/vocab dimension of every
+    projection; experts for MoE; d_inner for Mamba/mLSTM value paths.
+  * FSDP ("data" axis, plus "pod" folded in when present): the complementary
+    weight dimension. Optimizer moments mirror param specs => ZeRO-3.
+  * Activations: batch over (pod, data); train shards heads/ff over "model",
+    decode shards the KV-cache *sequence* over "model" (works for any
+    kv-head count; XLA lowers the softmax over the sharded axis to the
+    flash-decoding two-pass combine).
+  * sLSTM: fully replicated params (full recurrent coupling is TP-hostile;
+    the block is small) — data parallel only.
+
+Param rules dispatch on (block spec, leaf path, rank) resolved through the
+ArchConfig layer plan, because leaf names alone are ambiguous (mLSTM and
+attention both have "wq").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ATTN, MAMBA, MLSTM, SLSTM, XATTN, ArchConfig, LayerSpec,
+)
+from repro.common.tree import flatten_with_paths
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the batch dim: ("pod","data") on the 2-pod mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def fsdp_axis(mesh: Mesh):
+    """Weight-sharding data axis (ZeRO): pod folded in when present."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# ---------------------------------------------------------------------------
+# Activation logical-axis rule tables (consumed by models.sharding_ctx)
+# ---------------------------------------------------------------------------
+
+def train_rules(mesh: Mesh) -> Dict[str, Any]:
+    # NOTE: heads/kv_heads are deliberately UNCONSTRAINED: kv-head counts
+    # (8) below the 16-way model axis force GSPMD into "involuntary full
+    # rematerialization" replication copies when pinned. Letting sharding
+    # propagate from the (model-sharded) projection weights avoids the
+    # copies entirely (verified on qwen3 train_4k: peak memory 15.5 -> see
+    # EXPERIMENTS.md §Dry-run).
+    return {
+        "batch": batch_axes(mesh),
+        "seq": None,
+        "embed": None,
+        "heads": None,
+        "kv_heads": None,
+        "ff": "model",
+        "ssm_inner": "model",
+        "expert": "model",
+        "cache_seq": None,
+    }
+
+
+def decode_rules(mesh: Mesh) -> Dict[str, Any]:
+    return {
+        "batch": batch_axes(mesh),
+        "seq": None,
+        "embed": None,
+        "heads": None,
+        "kv_heads": None,
+        "ff": "model",
+        "ssm_inner": "model",
+        "expert": "model",
+        "cache_seq": "model",     # sequence-sharded KV (flash-decoding style)
+    }
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding
+# ---------------------------------------------------------------------------
+
+def _attn_param_spec(name: str, rank: int, dp) -> P:
+    if name in ("wq", "wk", "wv"):
+        return P(dp, "model")
+    if name == "wo":
+        return P("model", dp)
+    if name in ("bq", "bk", "bv"):
+        return P("model")
+    if name == "w_proj":                      # modality projector (Fd, D)
+        return P(None, "model")
+    return P(*([None] * rank))                # norms etc.
+
+
+def _mamba_param_spec(name: str, rank: int, dp) -> P:
+    table = {
+        "in_proj": P(dp, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "x_proj": P("model", None),
+        "dt_proj": P(None, "model"),
+        "dt_bias": P("model"),
+        "A_log": P("model", None),
+        "D": P("model"),
+        "out_proj": P("model", dp),
+    }
+    return table.get(name, P(*([None] * rank)))
+
+
+def _mlstm_param_spec(name: str, rank: int, dp) -> P:
+    table = {
+        "up_proj": P(dp, "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        # Block-diag (H, dh, dh) per-head projections: q,k shard the
+        # contraction dh (outputs replicated, as the state math wants);
+        # v shards its OUTPUT dh so the matrix state C shards on dv.
+        # Replicating these put >1B params (x10 bytes of Adam) per chip.
+        "wq": P(None, "model", None),
+        "wk": P(None, "model", None),
+        "wv": P(None, None, "model"),
+        "w_igate": P("model", None),
+        "w_fgate": P("model", None),
+        "skip": P("model"),
+        "down_proj": P("model", dp),
+    }
+    return table.get(name, P(*([None] * rank)))
+
+
+def _slstm_param_spec(name: str, rank: int, dp) -> P:
+    # Recurrent coupling is TP-hostile: keep cell *activations* replicated,
+    # but shard the big input projection on its contraction dim (memory).
+    if name == "w":
+        return P("model", None)
+    if name == "ff_up":
+        return P(dp, "model")
+    if name == "ff_down":
+        return P("model", dp)
+    return P(*([None] * rank))
+
+
+def _ffn_param_spec(name: str, rank: int, dp) -> P:
+    if rank == 3:                              # MoE expert-stacked weights
+        if name in ("w_gate", "w_up"):
+            return P("model", dp, None)        # (E, D, F): experts on model
+        if name == "w_down":
+            return P("model", None, dp)        # (E, F, D)
+    if name in ("w_gate", "w_up", "ff_up"):
+        return P(dp, "model")
+    if name in ("w_down", "ff_down"):
+        return P("model", dp)
+    if name == "router":
+        return P(None, None)                   # small; replicate
+    return P(*([None] * rank))
+
+
+def _block_param_spec(spec: LayerSpec, sub: Tuple[str, ...], rank: int, dp) -> P:
+    """sub e.g. ("mixer", "wq") or ("ffn", "shared", "w_gate") or ("norm1","scale")."""
+    head, name = sub[0], sub[-1]
+    if head in ("norm1", "norm2"):
+        return P(*([None] * rank))
+    if head == "mixer":
+        if name in ("scale",):                 # q_norm/k_norm/proj_norm
+            return P(*([None] * rank))
+        if spec.mixer in (ATTN, XATTN):
+            return _attn_param_spec(name, rank, dp)
+        if spec.mixer == MAMBA:
+            return _mamba_param_spec(name, rank, dp)
+        if spec.mixer == MLSTM:
+            return _mlstm_param_spec(name, rank, dp)
+        if spec.mixer == SLSTM:
+            return _slstm_param_spec(name, rank, dp)
+    if head == "ffn":
+        if len(sub) >= 3 and sub[1] == "shared":
+            # Shared expert = plain MLP.
+            if name in ("w_gate", "w_up"):
+                return P(dp, "model")
+            if name == "w_down":
+                return P("model", dp)
+        return _ffn_param_spec(name, rank, dp)
+    return P(*([None] * rank))
+
+
+def param_spec(cfg: ArchConfig, mesh: Mesh, path: str, rank: int) -> P:
+    """PartitionSpec for one parameter leaf by its tree path."""
+    dp = fsdp_axis(mesh)
+    parts = tuple(path.split("/"))
+    if parts[0] == "embedding":
+        if parts[1] == "table":                # (V, D)
+            return P("model", dp)
+        if parts[1] == "head":                 # (D, V)
+            return P(dp, "model")
+    if parts[0] == "final_norm":
+        return P(*([None] * rank))
+    if parts[0] in ("pattern", "remainder"):
+        pos = int(parts[1])
+        spec = (cfg.pattern[pos] if parts[0] == "pattern" else cfg.remainder[pos])
+        inner = _block_param_spec(spec, parts[2:], rank if parts[0] == "remainder" else rank - 1, dp)
+        if parts[0] == "pattern":              # stacked: leading repeat axis
+            return P(None, *inner)
+        return inner
+    return P(*([None] * rank))
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, abstract_params: Any):
+    """NamedSharding tree matching ``abstract_params``."""
+    flat = flatten_with_paths(abstract_params)
+    specs = {
+        path: NamedSharding(mesh, param_spec(cfg, mesh, path, len(leaf.shape)))
+        for path, leaf in flat.items()
+    }
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = []
+    for path, leaf in leaves:
+        from repro.common.tree import _path_str
+        out.append(specs[_path_str(path)])
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding (decode/prefill)
+# ---------------------------------------------------------------------------
+#
+# jit *argument* shardings must divide their dimensions exactly (GSPMD only
+# pads intermediates), so every rule here checks divisibility and falls back:
+#   * batch=1 (long_500k): KV sequence shards over ALL mesh axes instead;
+#   * cross-attention media caches (1601 tokens): batch-sharded only.
+
+
+def _axes_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def _divisible(n: int, mesh: Mesh, ax) -> bool:
+    return ax is not None and n % _axes_size(mesh, ax) == 0
+
+
+def _cache_leaf_spec(
+    cfg: ArchConfig, mesh: Mesh, spec: Optional[LayerSpec], name: str,
+    shape: Tuple[int, ...],
+) -> P:
+    b_ax = batch_axes(mesh)
+    rank = len(shape)
+    bsz = shape[0] if rank >= 1 else 1
+    bspec = b_ax if _divisible(bsz, mesh, b_ax) else None
+
+    if name in ("k", "v") and rank == 4:
+        if spec is not None and spec.mixer == XATTN:
+            return P(bspec, None, None, None)       # media cache: batch only
+        length = shape[1]
+        if bspec is None:
+            every = tuple(mesh.axis_names)          # single long request
+            if _divisible(length, mesh, every):
+                return P(None, every, None, None)
+        seq_ax = "model" if _divisible(length, mesh, "model") else None
+        return P(bspec, seq_ax, None, None)
+    if name == "slot_pos":
+        return P(*([None] * rank))
+    if name == "h" and rank == 3:                   # mamba state (B, di, ds)
+        return P(bspec, "model" if _divisible(shape[1], mesh, "model") else None, None)
+    if name == "conv" and rank == 3:                # (B, dc-1, di)
+        return P(bspec, None, "model" if _divisible(shape[2], mesh, "model") else None)
+    if name == "C" and rank == 4:                   # mlstm (B, H, dk, dv)
+        return P(bspec, None, None,
+                 "model" if _divisible(shape[3], mesh, "model") else None)
+    if name == "n" and rank == 3:                   # mlstm (B, H, dk)
+        return P(bspec, None, None)
+    if rank >= 1:
+        return P(bspec, *([None] * (rank - 1)))     # slstm states etc.
+    return P()
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, abstract_caches: Any):
+    def one(path_str: str, leaf):
+        parts = path_str.split("/")
+        stacked = parts[0] == "pattern"
+        spec = None
+        if parts[0] in ("pattern", "remainder"):
+            pos = int(parts[1])
+            plan = cfg.pattern if parts[0] == "pattern" else cfg.remainder
+            spec = plan[pos]
+        name = parts[-1]
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        inner = _cache_leaf_spec(cfg, mesh, spec, name, tuple(shape))
+        return NamedSharding(mesh, P(None, *inner) if stacked else inner)
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(abstract_caches)
+    from repro.common.tree import _path_str
+    out = [one(_path_str(p), leaf) for p, leaf in leaves]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Batch input sharding
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_tree: Any):
+    b = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if not _divisible(leaf.shape[0], mesh, b):
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(mesh, P(b, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(one, batch_tree)

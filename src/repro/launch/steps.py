@@ -1,0 +1,130 @@
+"""Step-function factories shared by the dry-run and the real drivers.
+
+Each factory closes over (cfg, mesh) and installs the right logical-axis
+rule table *inside* the traced body (so the same model code shards under the
+production mesh and runs unsharded in unit tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import decode_rules, train_rules
+from repro.models import lm as lm_mod
+from repro.models.sharding_ctx import logical_sharding
+from repro.training.optim import AdamConfig, adam_update
+
+TRAIN_ADAM = AdamConfig(lr=3e-4, b1=0.9, b2=0.95, weight_decay=0.1)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    mesh=None,
+    adam_cfg: AdamConfig = TRAIN_ADAM,
+    microbatch: int = 1,
+    rules_override: Optional[Dict] = None,
+):
+    """(params, opt_state, batch) -> (loss, params, opt_state).
+
+    ``microbatch > 1`` runs gradient accumulation: the global batch is split
+    into ``microbatch`` sequential chunks under ``lax.scan``, dividing the
+    live activation footprint by the same factor (a §Perf memory lever).
+    """
+    rules = train_rules(mesh) if mesh is not None else None
+    if rules is not None and rules_override:
+        rules = {**rules, **rules_override}
+
+    def loss_fn(params, batch):
+        return lm_mod.lm_loss(
+            cfg, params, batch["tokens"], batch["labels"],
+            media=batch.get("media"),
+        )
+
+    def grad_fn(params, batch):
+        if microbatch <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatch == 0, (b, microbatch)
+            return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+        mbs = {k: split(v) for k, v in batch.items()}
+
+        def body(carry, mb):
+            loss_sum, gsum = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            gsum = jax.tree.map(lambda a, b_: a + b_, gsum, g)
+            return (loss_sum + l, gsum), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (loss_sum, gsum), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zeros), mbs
+        )
+        inv = 1.0 / microbatch
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(params, opt_state, batch):
+        ctx = (
+            logical_sharding(mesh, rules) if rules is not None
+            else _null_ctx()
+        )
+        with ctx:
+            loss, grads = grad_fn(params, batch)
+            params, opt_state = adam_update(adam_cfg, grads, opt_state, params)
+        return loss, params, opt_state
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None):
+    """(params, batch{tokens, caches[, media]}) -> (last_logits, caches)."""
+    rules = train_rules(mesh) if mesh is not None else None
+
+    def prefill_step(params, batch):
+        ctx = (
+            logical_sharding(mesh, rules) if rules is not None
+            else _null_ctx()
+        )
+        with ctx:
+            return lm_mod.apply_lm_prefill(
+                cfg, params, batch["tokens"], batch["caches"],
+                media=batch.get("media"),
+            )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh=None):
+    """(params, batch{token, caches, pos}) -> (logits, caches)."""
+    rules = decode_rules(mesh) if mesh is not None else None
+
+    def decode_step(params, batch):
+        ctx = (
+            logical_sharding(mesh, rules) if rules is not None
+            else _null_ctx()
+        )
+        with ctx:
+            return lm_mod.apply_lm_decode(
+                cfg, params, batch["token"], batch["caches"], batch["pos"]
+            )
+
+    return decode_step
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def abstract_opt_state(cfg: ArchConfig, abstract_params, adam_cfg=TRAIN_ADAM):
+    from repro.training.optim import adam_init
+
+    return jax.eval_shape(functools.partial(adam_init, adam_cfg), abstract_params)

@@ -1,0 +1,94 @@
+"""LM training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --smoke --steps 50 --batch 8 --seq 128
+
+``--smoke`` uses the reduced per-arch config (CPU-runnable); without it the
+full config is used (requires the production mesh / real hardware). The
+~100M end-to-end example (examples/train_lm.py) drives this module's API.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data.lm_data import MarkovCorpus
+from repro.launch.steps import TRAIN_ADAM, make_train_step
+from repro.models import lm as lm_mod
+from repro.training.optim import AdamConfig, adam_init
+
+
+def train_loop(
+    cfg,
+    *,
+    steps: int,
+    batch: int,
+    seq: int,
+    mesh=None,
+    lr: float = 3e-4,
+    seed: int = 0,
+    log_every: int = 10,
+    checkpoint_path: Optional[str] = None,
+    media_fn=None,
+):
+    """Returns (params, list of losses)."""
+    adam_cfg = AdamConfig(lr=lr, b1=0.9, b2=0.95, weight_decay=0.1, t_max=steps)
+    params = lm_mod.init_lm(jax.random.key(seed), cfg)
+    opt_state = adam_init(adam_cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, mesh, adam_cfg), donate_argnums=(0, 1))
+
+    corpus = MarkovCorpus(cfg.vocab_size, seed=seed)
+    batches = corpus.batches(batch, seq, seed=seed + 1)
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        tokens, labels = next(batches)
+        b = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        if media_fn is not None:
+            b["media"] = media_fn(i)
+        loss, params, opt_state = step_fn(params, opt_state, b)
+        losses.append(float(loss))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:5d}  loss {losses[-1]:.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, params, {"arch": cfg.name, "steps": steps})
+        print(f"saved checkpoint to {checkpoint_path}")
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    media_fn = None
+    if cfg.arch_type == "vlm" and cfg.n_frontend_tokens:
+        key = jax.random.key(7)
+        media = jax.random.normal(
+            key, (args.batch, cfg.n_frontend_tokens, cfg.frontend_dim)
+        )
+        media_fn = lambda i: media
+    _, losses = train_loop(
+        cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+        lr=args.lr, checkpoint_path=args.checkpoint, media_fn=media_fn,
+    )
+    print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

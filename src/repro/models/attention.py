@@ -1,0 +1,396 @@
+"""Grouped-query attention: full / sliding-window / cross variants.
+
+Covers the attention needs of the assigned pool:
+  * GQA with arbitrary (n_heads, n_kv_heads)      [all dense archs]
+  * QKV bias                                      [qwen1.5-4b]
+  * qk RMSNorm                                    [qwen3-0.6b]
+  * sliding-window + ring-buffer KV cache         [gemma3-27b locals]
+  * cross attention to stubbed modality tokens    [llama-3.2-vision]
+
+Long sequences (prefill_32k) use a chunked online-softmax ("flash") path in
+pure JAX: the q-chunk loop is unrolled at trace time so the causal band is
+*statically* skipped — compiled FLOPs match the true banded cost instead of
+the full S^2 rectangle. Decode reads a preallocated cache (full or ring).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec, XATTN
+from repro.models.layers import apply_rmsnorm, apply_rope, dense_init, init_rmsnorm
+from repro.models import runtime_flags
+from repro.models.runtime_flags import inner_scan
+from repro.models.sharding_ctx import shard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, spec: LayerSpec, dtype=jnp.float32) -> Dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    if spec.mixer == XATTN and cfg.frontend_dim:
+        # Learned projector from the (stubbed) modality encoder space.
+        p["w_proj"] = dense_init(ks[4], cfg.frontend_dim, d, dtype)
+        p["proj_norm"] = init_rmsnorm(d, dtype)
+    return p
+
+
+def _project_q(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, hq, hd)
+    if cfg.qk_norm:
+        q = apply_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    return q
+
+
+def _project_kv(cfg: ArchConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    b, s, _ = x.shape
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        k = apply_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Dense (small-S) attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,Sq,Hkv,G,D), k (B,Sk,Hkv,D) -> (B,Hkv,G,Sq,Sk) fp32."""
+    return jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs (B,Hkv,G,Sq,Sk), v (B,Sk,Hkv,D) -> (B,Sq,Hkv,G,D)."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(probs.dtype))
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: Optional[jax.Array],
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Unchunked GQA attention. q (B,Sq,Hq,D); k,v (B,Sk,Hkv,D)."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd) * (1.0 / math.sqrt(hd))
+    scores = _gqa_scores(qg, k)
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, hd)
+
+
+def causal_mask(sq: int, sk: int, q_offset: int = 0, window: int = 0) -> jax.Array:
+    """(1, Sq, Sk) bool mask: key j visible to query i iff j<=i (& in window)."""
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    m = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m[None]
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (statically banded)
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention, O(band) compute.
+
+    The q-chunk loop is a Python loop (static), so each q chunk's k-range
+    [lo, hi] is known at trace time and out-of-band chunks are never emitted
+    into the HLO. The inner k loop is a ``lax.scan`` over the band with an
+    online-softmax carry — peak memory is one (B,Hkv,G,qc,kc) tile.
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    if runtime_flags.UNROLL_INNER:
+        # Roofline probe: coarser tiles bound the unrolled HLO size. The
+        # masked diagonal-tile waste grows from ~qc/2S to ~4096/2S of the
+        # causal band (<5% deviation), documented in benchmarks/roofline.py.
+        q_chunk = max(q_chunk, 4096)
+        k_chunk = max(k_chunk, 4096)
+    q_chunk = min(q_chunk, s)
+    k_chunk = min(k_chunk, s)
+    assert s % q_chunk == 0 and s % k_chunk == 0, (s, q_chunk, k_chunk)
+
+    qg = (q * scale).reshape(b, s, hkv, g, hd)
+    outs = []
+    for qi in range(s // q_chunk):
+        q_lo, q_hi = qi * q_chunk, (qi + 1) * q_chunk
+        qc = qg[:, q_lo:q_hi]
+        # Band of k-chunks this q chunk can see.
+        k_lo_chunk = 0 if window <= 0 else max(0, (q_lo - window) // k_chunk)
+        k_hi_chunk = (q_hi + k_chunk - 1) // k_chunk  # causal bound
+        n_band = k_hi_chunk - k_lo_chunk
+
+        def kv_at(ci):
+            start = (k_lo_chunk + ci) * k_chunk
+            kc = jax.lax.dynamic_slice_in_dim(k, start, k_chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, k_chunk, axis=1)
+            return kc, vc, start
+
+        def step(carry, ci):
+            m_prev, l_prev, acc = carry
+            kc, vc, start = kv_at(ci)
+            scores = _gqa_scores(qc, kc)  # (B,Hkv,G,qc,kc) fp32
+            if softcap > 0.0:
+                scores = jnp.tanh(scores / softcap) * softcap
+            qpos = q_lo + jnp.arange(q_chunk)
+            kpos = start + jnp.arange(k_chunk)
+            msk = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            scores = jnp.where(msk[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+            alpha = jnp.exp(m_prev - m_new)
+            probs = jnp.exp(scores - m_new[..., None])
+            l_new = l_prev * alpha + probs.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", probs, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, hd), jnp.float32)
+        # Remat per kv chunk: AD must not save the (.., qc, kc) probs tile
+        # for every band step.
+        (m_f, l_f, acc), _ = inner_scan(jax.checkpoint(step), (m0, l0, a0),
+                                        jnp.arange(n_band), n_band)
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, hd))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+# Threshold above which the chunked path is used (keeps smoke tests simple).
+FLASH_MIN_SEQ = 2048
+
+
+def self_attention_full_seq(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+) -> jax.Array:
+    """Causal self attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if s >= FLASH_MIN_SEQ:
+        out = flash_attention(
+            q, k, v, window=spec.window, softcap=cfg.attn_logit_softcap
+        )
+    else:
+        mask = causal_mask(s, s, window=spec.window)
+        out = dense_attention(q, k, v, mask, cfg.attn_logit_softcap)
+    out = out.reshape(b, s, -1)
+    return out @ p["wo"]
+
+
+def cross_attention_full_seq(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jax.Array,
+    media: jax.Array,
+) -> jax.Array:
+    """Cross attention: text queries attend to projected modality tokens.
+
+    ``media`` is (B, n_frontend_tokens, frontend_dim) from the stub encoder.
+    """
+    b, s, _ = x.shape
+    mtok = apply_rmsnorm(p["proj_norm"], media @ p["w_proj"], cfg.norm_eps)
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, mtok)
+    # No RoPE across modalities (media tokens carry their own ordering).
+    out = dense_attention(q, k, v, mask=None, softcap=cfg.attn_logit_softcap)
+    out = out.reshape(b, s, -1)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    batch: int,
+    max_len: int,
+    dtype=jnp.float32,
+) -> Dict:
+    """Preallocated cache. Sliding-window layers use a ring buffer of size W."""
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if spec.mixer == XATTN:
+        n = cfg.n_frontend_tokens
+        return {
+            "k": jnp.zeros((batch, n, hkv, hd), dtype),
+            "v": jnp.zeros((batch, n, hkv, hd), dtype),
+        }
+    length = min(spec.window, max_len) if spec.window > 0 else max_len
+    return {
+        "k": jnp.zeros((batch, length, hkv, hd), dtype),
+        "v": jnp.zeros((batch, length, hkv, hd), dtype),
+        # Absolute position stored in each slot (-1 = empty).
+        "slot_pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def _write_slot(cache: Dict, k_new, v_new, pos: jax.Array, ring: bool) -> Dict:
+    """Write one token's k,v at ring/linear slot for position ``pos``."""
+    length = cache["k"].shape[1]
+    slot = pos % length if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0
+    )
+    return {**cache, "k": k, "v": v, "slot_pos": slot_pos}
+
+
+def self_attention_decode(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,
+    cache: Dict,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x (B,1,D); pos scalar int32 (same for whole batch)."""
+    b = x.shape[0]
+    q = _project_q(cfg, p, x)
+    k_new, v_new = _project_kv(cfg, p, x)
+    pos_b = jnp.broadcast_to(pos, (b, 1))
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
+    cache = _write_slot(cache, k_new.astype(cache["k"].dtype),
+                        v_new.astype(cache["v"].dtype), pos, spec.window > 0)
+
+    k, v = cache["k"], cache["v"]
+    k = shard(k, "batch", "cache_seq", "kv_heads", None)
+    v = shard(v, "batch", "cache_seq", "kv_heads", None)
+    # Valid = slot holds a position in (pos - W, pos].
+    sp = cache["slot_pos"]
+    valid = (sp >= 0) & (sp <= pos)
+    if spec.window > 0:
+        valid &= sp > pos - spec.window
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, k.shape[1]))
+    out = dense_attention(q, k, v, mask, cfg.attn_logit_softcap)
+    out = out.reshape(b, 1, -1)
+    return out @ p["wo"], cache
+
+
+def cross_attention_decode(
+    cfg: ArchConfig,
+    p: Dict,
+    x: jax.Array,
+    cache: Dict,
+) -> Tuple[jax.Array, Dict]:
+    """Decode-time cross attention reads the prefilled media cache."""
+    b = x.shape[0]
+    q = _project_q(cfg, p, x)
+    out = dense_attention(q, cache["k"], cache["v"], mask=None,
+                          softcap=cfg.attn_logit_softcap)
+    out = out.reshape(b, 1, -1)
+    return out @ p["wo"], cache
+
+
+def prefill_cross_cache(
+    cfg: ArchConfig, p: Dict, media: jax.Array, cache: Dict
+) -> Dict:
+    mtok = apply_rmsnorm(p["proj_norm"], media @ p["w_proj"], cfg.norm_eps)
+    k, v = _project_kv(cfg, p, mtok)
+    return {**cache, "k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+
+
+def prefill_self_cache(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Dict,
+) -> Dict:
+    """Fill a decode cache from a full prefill sequence.
+
+    Ring caches keep only the trailing ``window`` tokens (the only ones a
+    future decode step may attend to).
+    """
+    s = x.shape[1]
+    k, v = _project_kv(cfg, p, x)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    length = cache["k"].shape[1]
+    if spec.window > 0 and s >= length:
+        # Trailing `length` positions land at slots pos % length.
+        tail_pos = positions[0, s - length:]
+        order = jnp.argsort(tail_pos % length)
+        k_tail = k[:, s - length:][:, order]
+        v_tail = v[:, s - length:][:, order]
+        slot_pos = tail_pos[order].astype(jnp.int32)
+        return {**cache, "k": k_tail.astype(cache["k"].dtype),
+                "v": v_tail.astype(cache["v"].dtype), "slot_pos": slot_pos}
+    n = min(s, length)
+    k_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k[:, :n].astype(cache["k"].dtype), 0, axis=1)
+    v_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v[:, :n].astype(cache["v"].dtype), 0, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], positions[0, :n].astype(jnp.int32), 0, axis=0)
+    return {**cache, "k": k_c, "v": v_c, "slot_pos": slot_pos}

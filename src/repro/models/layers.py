@@ -1,0 +1,155 @@
+"""Core layers: initializers, RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Plain functional style: ``init_*`` returns a nested-dict param tree,
+``apply_*`` consumes it. No module framework (flax is not available offline).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_ctx import shard
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float = 1.0):
+    """Truncated-normal fan-in init (what most LLM codebases use)."""
+    std = scale / math.sqrt(d_in)
+    return (
+        jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out), jnp.float32)
+        * std
+    ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x`` (..., seq, heads, head_dim) by ``positions`` (..., seq)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                      # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard(h, "batch", "seq", "ff")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Token embedding + LM head (vocab padded for clean 16-way TP sharding)
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, padded_vocab: int, d_model: int, dtype=jnp.float32) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "table": embed_init(k1, padded_vocab, d_model, dtype),
+        "head": dense_init(k2, d_model, padded_vocab, dtype),
+    }
+
+
+def embed_tokens(params: Dict, token_ids: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], token_ids, axis=0)
+
+
+def lm_logits(params: Dict, x: jax.Array) -> jax.Array:
+    return x @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(
+    logits: jax.Array,
+    labels: jax.Array,
+    vocab_size: int,
+    mask: Optional[jax.Array] = None,
+    seq_chunk: int = 0,
+) -> jax.Array:
+    """Mean next-token cross entropy, ignoring padded vocab entries.
+
+    ``seq_chunk`` > 0 computes the loss in sequence chunks under ``lax.map``
+    so the (batch, seq, padded_vocab) fp32 logsumexp intermediate never
+    materializes at once — this matters for gemma3's 262k vocab.
+    """
+
+    def _ce(lg, lb):
+        lg = lg.astype(jnp.float32)
+        pad = lg.shape[-1] - vocab_size
+        if pad > 0:
+            neg = jnp.full((pad,), -1e30, dtype=jnp.float32)
+            lg = lg + jnp.concatenate([jnp.zeros((vocab_size,)), neg])
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+        return lse - gold
+
+    if seq_chunk and logits.shape[1] > seq_chunk:
+        b, s = labels.shape
+        n = s // seq_chunk
+        lg = logits[:, : n * seq_chunk].reshape(b, n, seq_chunk, -1)
+        lb = labels[:, : n * seq_chunk].reshape(b, n, seq_chunk)
+        losses = jax.lax.map(lambda args: _ce(*args), (lg.swapaxes(0, 1), lb.swapaxes(0, 1)))
+        losses = losses.swapaxes(0, 1).reshape(b, n * seq_chunk)
+        if n * seq_chunk < s:
+            tail = _ce(logits[:, n * seq_chunk :], labels[:, n * seq_chunk :])
+            losses = jnp.concatenate([losses, tail], axis=1)
+    else:
+        losses = _ce(logits, labels)
+
+    if mask is not None:
+        return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(losses)

@@ -1,0 +1,47 @@
+"""Runtime flags for roofline probing.
+
+``xla.cost_analysis()`` counts a ``while`` body ONCE, not trip_count times
+(verified empirically). All inner loops in this codebase have *static* trip
+counts, so the roofline tool lowers a "probe" variant with inner loops
+Python-unrolled (exact HLO cost) at n_repeats in {1, 2} and extrapolates
+per-repeat costs; the production lowering keeps ``lax.scan`` for bounded
+compile time. The sLSTM time scan (4096 steps) is the one loop never
+unrolled — its cost is corrected analytically (see benchmarks/roofline.py).
+"""
+import contextlib
+
+UNROLL_INNER = False
+
+
+@contextlib.contextmanager
+def unroll_inner():
+    global UNROLL_INNER
+    prev = UNROLL_INNER
+    UNROLL_INNER = True
+    try:
+        yield
+    finally:
+        UNROLL_INNER = prev
+
+
+def inner_scan(step, carry, xs_list, length: int):
+    """lax.scan over a list-like of per-step inputs, or a Python loop when
+    probing. ``xs_list`` is a tuple of arrays with leading dim ``length``.
+
+    Returns (final_carry, stacked_ys) like ``lax.scan``; ys may be None.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not UNROLL_INNER:
+        return jax.lax.scan(step, carry, xs_list, length=length)
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a, i=i: a[i], xs_list) if xs_list is not None else None
+        carry, y = step(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs, 0), *ys)
+    else:
+        ys = None
+    return carry, ys

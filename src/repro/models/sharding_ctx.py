@@ -1,0 +1,75 @@
+"""Logical-axis activation sharding (MaxText-style, minimal).
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``). The launcher installs a mesh and a
+logical->mesh-axis rule table; outside a context (unit tests, examples on one
+CPU device) the annotation is a no-op, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+def _current() -> Tuple[Optional[Mesh], Dict[str, MeshAxes]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh, rules: Dict[str, MeshAxes]):
+    """Install ``mesh`` + logical-axis ``rules`` for the enclosed trace."""
+    prev = _current()
+    _state.mesh, _state.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules=None) -> P:
+    """Map logical axis names to a PartitionSpec under the active rules."""
+    if rules is None:
+        rules = _current()[1]
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o context)."""
+    mesh, rules = _current()
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard(): {len(axes)} axes for rank-{x.ndim} array")
+    spec = logical_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def get_rule(name: str, default=None):
+    """Read a boolean/strategy entry from the active rule table."""
+    return _current()[1].get(name, default)
+
+
+def replicate(x: jax.Array) -> jax.Array:
+    """Constrain to fully replicated (forces a weight all-gather when the
+    stored array is sharded — the ZeRO-3 gathered-weights pattern)."""
+    mesh, _ = _current()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim)))
+    )
+
+
+def gather_tree(tree):
+    """Replicate every leaf of a param subtree at compute time."""
+    if _current()[0] is None:
+        return tree
+    return jax.tree.map(replicate, tree)

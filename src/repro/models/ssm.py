@@ -1,0 +1,181 @@
+"""Mamba-1 selective SSM block (jamba's recurrent mixer).
+
+TPU adaptation of the CUDA selective-scan kernel: the recurrence
+``h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t`` is evaluated as a ``lax.scan``
+over fixed-size time *chunks*, with a log-space ``associative_scan`` inside
+each chunk. This keeps the materialized state tensor at
+(B, chunk, d_inner, d_state) — the full (B, T, d_inner, d_state) tensor that
+a naive associative scan would allocate is ~TBs at jamba's train shape.
+
+Decode carries the (B, d_inner, d_state) state explicitly: O(1) per token,
+which is what makes jamba eligible for the 500k-context shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.models.runtime_flags import inner_scan
+from repro.models.sharding_ctx import shard
+
+SSM_CHUNK = 128
+
+
+def init_mamba(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    ds, dc, dtr = cfg.ssm_d_state, cfg.ssm_d_conv, cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias initialized so softplus(dt) spans
+    # (1e-3, 1e-1) as in the reference implementation.
+    a_init = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[0], (di,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )
+    inv_softplus = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": dense_init(ks[1], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (dc, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[3], di, dtr + 2 * ds, dtype),
+        "dt_proj": dense_init(ks[4], dtr, di, dtype, scale=dtr**0.5),
+        "dt_bias": inv_softplus.astype(jnp.float32),
+        "A_log": jnp.log(a_init),                     # fp32: recurrence basis
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _ssm_inputs(cfg: ArchConfig, p: Dict, x: jax.Array):
+    """Shared front section: projections, causal conv, dt/B/C computation."""
+    di, ds, dtr = cfg.ssm_d_inner, cfg.ssm_d_state, cfg.resolved_dt_rank
+    xz = x @ p["in_proj"]                              # (B,S,2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard(xi, "batch", "seq", "ssm_inner")
+    return xi, z, di, ds, dtr
+
+
+def _causal_conv(p: Dict, xi: jax.Array, conv_state=None):
+    """Depthwise causal conv along time. conv_state (B, dc-1, di) for decode."""
+    dc = p["conv_w"].shape[0]
+    if conv_state is not None:
+        window = jnp.concatenate([conv_state, xi], axis=1)   # (B,dc,di)
+        out = jnp.einsum("bti,ti->bi", window.astype(jnp.float32),
+                         p["conv_w"].astype(jnp.float32))[:, None]
+        new_state = window[:, 1:]
+        return (jax.nn.silu(out + p["conv_b"].astype(jnp.float32))
+                .astype(xi.dtype), new_state)
+    pad = jnp.zeros(xi.shape[:1] + (dc - 1,) + xi.shape[2:], xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)                  # (B,S+dc-1,di)
+    out = sum(
+        xp[:, i : i + xi.shape[1]] * p["conv_w"][i] for i in range(dc)
+    )
+    return jax.nn.silu(out + p["conv_b"]), None
+
+
+def _dt_b_c(cfg, p, xc):
+    ds, dtr = cfg.ssm_d_state, cfg.resolved_dt_rank
+    dbc = xc @ p["x_proj"]                                   # (B,S,dtr+2ds)
+    dt_r, b_mat, c_mat = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                        # (B,S,di) fp32
+    return dt, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def _chunk_recurrence(dA_log, dBx, h0):
+    """Within-chunk linear recurrence via associative scan.
+
+    dA_log (B,Q,di,ds) = dt*(-A)  (log of decay, <= 0);
+    dBx    (B,Q,di,ds) = dt*B*x.
+    Returns h for every step (B,Q,di,ds) given carry h0 (B,di,ds).
+    """
+    def combine(a, b):
+        (la, xa), (lb, xb) = a, b
+        return la + lb, xb + jnp.exp(lb) * xa
+
+    _, h_inner = jax.lax.associative_scan(combine, (dA_log, dBx), axis=1)
+    # Fold the incoming state: h_t += exp(cumsum dA_log) * h0
+    p_t = jnp.exp(jnp.cumsum(dA_log, axis=1))
+    return h_inner + p_t * h0[:, None]
+
+
+def apply_mamba_train(
+    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False
+):
+    """Full-sequence selective scan, chunked along time.
+
+    ``return_state=True`` additionally returns the decode cache captured at
+    the end of the sequence (used by the prefill step).
+    """
+    b, s, _ = x.shape
+    xi, z, di, ds, _ = _ssm_inputs(cfg, p, x)
+    xc, _ = _causal_conv(p, xi)
+    dt, b_mat, c_mat = _dt_b_c(cfg, p, xc)
+
+    neg_a = -jnp.exp(p["A_log"])                             # (di,ds)
+    q = min(SSM_CHUNK, s)
+    if s % q:
+        q = s                        # odd lengths: single chunk (tests only)
+    n_chunks = s // q
+
+    def to_chunks(t):  # (B,S,...) -> (n,B,q,...)
+        return t.reshape(b, n_chunks, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xcs, dts, bs, cs = map(to_chunks, (xc.astype(jnp.float32), dt, b_mat, c_mat))
+
+    def step(h, inputs):
+        xq, dtq, bq, cq = inputs
+        dA_log = dtq[..., None] * neg_a                      # (B,q,di,ds)
+        dBx = (dtq * xq)[..., None] * bq[:, :, None, :]      # (B,q,di,ds)
+        hs = _chunk_recurrence(dA_log, dBx, h)
+        y = jnp.einsum("bqis,bqs->bqi", hs, cq)              # (B,q,di)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    # Remat each chunk: AD otherwise saves the (B,q,di,ds) recurrence
+    # tensors for EVERY chunk (hundreds of GB at jamba's train shape).
+    h_final, ys = inner_scan(jax.checkpoint(step), h0, (xcs, dts, bs, cs), n_chunks)
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, "batch", "seq", "ssm_inner")
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_tail = xi[:, -(cfg.ssm_d_conv - 1):, :]
+        state = {"h": h_final, "conv": conv_tail}
+        return out, state
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    di, ds, dc = cfg.ssm_d_inner, cfg.ssm_d_state, cfg.ssm_d_conv
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+    }
+
+
+def apply_mamba_decode(
+    cfg: ArchConfig, p: Dict, x: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """One-token step: x (B,1,D)."""
+    b = x.shape[0]
+    xi, z, di, ds, _ = _ssm_inputs(cfg, p, x)
+    xc, conv_state = _causal_conv(p, xi, cache["conv"])
+    dt, b_mat, c_mat = _dt_b_c(cfg, p, xc)                   # (B,1,·)
+
+    neg_a = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * neg_a)                  # (B,di,ds)
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_mat[:, 0, None, :]
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bis,bs->bi", h, c_mat[:, 0])[:, None]    # (B,1,di)
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return out, {**cache, "h": h, "conv": conv_state}

@@ -1,0 +1,382 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+xlstm-1.3b [arXiv:2405.04517] interleaves sLSTM and mLSTM blocks 1:7. The
+spec's d_ff=0 means blocks own their projections (mLSTM: pre-up-projection
+x2; sLSTM: post gated FFN).
+
+TPU adaptation (the reference implementation is a fused CUDA kernel):
+  * mLSTM trains with the *chunkwise-stabilized* parallel form — a scan over
+    time chunks carrying (C, n, m); within a chunk, a (Q x Q) decay-masked
+    quadratic term (linear-attention style) plus an inter-chunk term against
+    the carried state. Exactly equivalent to the recurrence (unit-tested
+    against the step-by-step reference), O(T*Q) not O(T^2), and MXU-friendly.
+  * sLSTM is strictly sequential (recurrent weights R * h_{t-1}); it runs as
+    a ``lax.scan`` over time with all input projections hoisted out of the
+    scan body.
+  * Decode carries (C, n, m) / (c, n, m, h) states — O(1) per token, which is
+    what makes xlstm-1.3b eligible for long_500k.
+
+Forget gates use log-sigmoid (one of the two variants in the paper), input
+gates are exponential with max-stabilizers, matching the official stabilized
+formulation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.models.runtime_flags import inner_scan
+from repro.models.sharding_ctx import gather_tree, get_rule, shard
+
+MLSTM_CHUNK = 256
+SLSTM_SEG = 64
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _maybe_gather(p: Dict) -> Dict:
+    """ZeRO-3 gathered-weights mode (rule "xlstm_gather_params"): keep
+    *storage* sharded but compute with replicated weights and fully local
+    activations. Every consumer of the di-sharded stream otherwise pays an
+    activation-sized all-reduce (~1 GB fp32 at train_4k) while the weights
+    it would gather instead are ~10 MB — see EXPERIMENTS.md §Perf
+    "xlstm-gathered-weights"."""
+    if get_rule("xlstm_gather_params"):
+        return gather_tree(p)
+    return p
+
+def init_mlstm(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, di = cfg.d_model, cfg.xlstm_d_inner
+    h = cfg.xlstm_n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        # Block-diagonal per-head projections (official xLSTM structure;
+        # dense (di, di) would double the model's parameter count).
+        "wq": _blockdiag_init(ks[2], h, di // h, dtype),
+        "wk": _blockdiag_init(ks[3], h, di // h, dtype),
+        "wv": _blockdiag_init(ks[4], h, di // h, dtype),
+        "w_igate": dense_init(ks[5], di, h, dtype),
+        "b_igate": jnp.full((h,), -10.0, jnp.float32),  # official init
+        "w_fgate": dense_init(ks[6], di, h, dtype),
+        "b_fgate": jnp.full((h,), 3.0, jnp.float32),
+        "skip": jnp.ones((di,), dtype),
+        "down_proj": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def _mlstm_gates(p: Dict, xc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (log_i_pre, log_f) — (B,T,H) fp32; log_f = logsigmoid(f~)."""
+    i_pre = (xc @ p["w_igate"]).astype(jnp.float32) + p["b_igate"]
+    f_pre = (xc @ p["w_fgate"]).astype(jnp.float32) + p["b_fgate"]
+    return i_pre, jax.nn.log_sigmoid(f_pre)
+
+
+def _blockdiag_init(key, h, dh, dtype):
+    ks = jax.random.split(key, h)
+    return jnp.stack([dense_init(k_, dh, dh, dtype) for k_ in ks])
+
+
+def _mlstm_qkv(cfg: ArchConfig, p: Dict, xc, xv):
+    b, t, di = xc.shape
+    h = cfg.xlstm_n_heads
+    dh = di // h
+    xh = xc.reshape(b, t, h, dh)
+    q = jnp.einsum("bthd,hde->bthe", xh, p["wq"])
+    k = jnp.einsum("bthd,hde->bthe", xh, p["wk"]) * (dh ** -0.5)
+    v = jnp.einsum("bthd,hde->bthe", xv.reshape(b, t, h, dh), p["wv"])
+    return q, k, v
+
+
+def mlstm_chunkwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_i: jax.Array,
+    log_f: jax.Array,
+    state: Dict = None,
+    chunk: int = MLSTM_CHUNK,
+):
+    """Chunkwise-stabilized mLSTM sequence evaluation.
+
+    q,k,v (B,T,H,dh); log_i/log_f (B,T,H).
+    Returns (h_out (B,T,H,dh), final_state {C (B,H,dh,dh), n (B,H,dh), m (B,H)}).
+    """
+    b, t, h, dh = q.shape
+    qc = min(chunk, t)
+    assert t % qc == 0, (t, qc)
+    n_chunks = t // qc
+
+    def to_chunks(x):
+        return x.reshape(b, n_chunks, qc, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = map(to_chunks, (q.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))
+    lis, lfs = map(to_chunks, (log_i, log_f))
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    else:
+        c0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, inputs):
+        c_in, n_in, m_in = carry
+        qq, kk, vv, li, lf = inputs               # (B,qc,H,·)
+        # Cumulative log decay within chunk: F[t] = sum_{s<=t} lf[s]
+        fcum = jnp.cumsum(lf, axis=1)             # (B,qc,H)
+        # log weight of in-chunk source s at target t (s<=t):
+        #   li[s] + F[t] - F[s]
+        log_w = (li - fcum)[:, None, :, :] + fcum[:, :, None, :]  # (B,t,s,H)
+        tidx = jnp.arange(qc)
+        causal = tidx[:, None] >= tidx[None, :]
+        log_w = jnp.where(causal[None, :, :, None], log_w, NEG_INF)
+        # log weight of the carried state at target t: m_in + F[t]
+        log_carry = m_in[:, None, :] + fcum                        # (B,t,H)
+        # Every target t has itself as an in-chunk source, so m_t is finite.
+        m_t = jnp.maximum(log_w.max(axis=2), log_carry)            # (B,t,H)
+        w = jnp.exp(log_w - m_t[:, :, None, :])                    # (B,t,s,H)
+        carry_scale = jnp.exp(log_carry - m_t)                     # (B,t,H)
+
+        scores = jnp.einsum("bthd,bshd->btsh", qq, kk)             # (B,t,s,H)
+        num_intra = jnp.einsum("btsh,btsh,bshd->bthd", scores, w, vv)
+        den_intra = jnp.einsum("btsh,btsh->bth", scores, w)
+        # C[d,e] = k[d] v[e]: contract q with the KEY index d.
+        num_inter = jnp.einsum("bhde,bthd->bthe", c_in, qq) * carry_scale[..., None]
+        den_inter = jnp.einsum("bhd,bthd->bth", n_in, qq) * carry_scale
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        h_t = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # Carry update to the end of the chunk.
+        f_total = fcum[:, -1]                                       # (B,H)
+        log_src = li + (f_total[:, None, :] - fcum)                 # (B,s,H)
+        m_out = jnp.maximum(m_in + f_total, log_src.max(axis=1))
+        w_src = jnp.exp(log_src - m_out[:, None, :])                # (B,s,H)
+        scale_old = jnp.exp(m_in + f_total - m_out)                 # (B,H)
+        c_out = c_in * scale_old[..., None, None] + jnp.einsum(
+            "bshd,bsh,bshe->bhde", kk, w_src, vv
+        )
+        n_out = n_in * scale_old[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", kk, w_src
+        )
+        return (c_out, n_out, m_out), h_t
+
+    # Remat per chunk (bounds AD residuals to one chunk's quadratic term).
+    (c_f, n_f, m_f), hs = inner_scan(jax.checkpoint(step), (c0, n0, m0),
+                                     (qs, ks, vs, lis, lfs), n_chunks)
+    h_out = hs.swapaxes(0, 1).reshape(b, t, h, dh)
+    return h_out, {"C": c_f, "n": n_f, "m": m_f}
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single-token recurrence (decode + reference oracle for the chunked form).
+
+    q,k,v (B,H,dh); log_i/log_f (B,H).
+    """
+    c_in, n_in, m_in = state["C"], state["n"], state["m"]
+    m_t = jnp.maximum(log_f + m_in, log_i)
+    f_s = jnp.exp(log_f + m_in - m_t)
+    i_s = jnp.exp(log_i - m_t)
+    c_t = c_in * f_s[..., None, None] + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_t = n_in * f_s[..., None] + i_s[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", c_t, q)
+    den = jnp.einsum("bhd,bhd->bh", n_t, q)
+    h_t = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    return h_t, {"C": c_t, "n": n_t, "m": m_t}
+
+
+def _mlstm_front(cfg, p, x, conv_state=None):
+    """Up-projection + causal conv; returns (xc, xv, z, new_conv_state)."""
+    xz = x @ p["up_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if not get_rule("xlstm_gather_params"):
+        xi = shard(xi, "batch", "seq", "ssm_inner")
+    dc = p["conv_w"].shape[0]
+    if conv_state is not None:
+        window = jnp.concatenate([conv_state, xi], axis=1)
+        out = jnp.einsum("bti,ti->bi", window.astype(jnp.float32),
+                         p["conv_w"].astype(jnp.float32))[:, None]
+        xc = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(xi.dtype)
+        return xc, xi, z, window[:, 1:]
+    pad = jnp.zeros(xi.shape[:1] + (dc - 1,) + xi.shape[2:], xi.dtype)
+    xp = jnp.concatenate([pad, xi], axis=1)
+    xc = sum(xp[:, i : i + xi.shape[1]] * p["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"])
+    return xc, xi, z, None
+
+
+def apply_mlstm_train(
+    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False
+):
+    p = _maybe_gather(p)
+    b, t, _ = x.shape
+    di = cfg.xlstm_d_inner
+    xc, xv, z, _ = _mlstm_front(cfg, p, x)
+    q, k, v = _mlstm_qkv(cfg, p, xc, xv)
+    log_i, log_f = _mlstm_gates(p, xc)
+    h, state = mlstm_chunkwise(q, k, v, log_i, log_f)
+    h = h.reshape(b, t, di).astype(x.dtype) + p["skip"] * xc
+    out = (h * jax.nn.silu(z)) @ p["down_proj"]
+    if return_state:
+        conv_tail = xv[:, -3:, :] if t >= 3 else jnp.pad(xv, ((0, 0), (3 - t, 0), (0, 0)))
+        return out, {**state, "conv": conv_tail}
+    return out
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    di = cfg.xlstm_d_inner
+    h = cfg.xlstm_n_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), NEG_INF, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),
+    }
+
+
+def apply_mlstm_decode(
+    cfg: ArchConfig, p: Dict, x: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    p = _maybe_gather(p)
+    b = x.shape[0]
+    di = cfg.xlstm_d_inner
+    xc, xv, z, conv_state = _mlstm_front(cfg, p, x, cache["conv"])
+    q, k, v = _mlstm_qkv(cfg, p, xc, xv)
+    log_i, log_f = _mlstm_gates(p, xc)
+    h, new_state = mlstm_step(
+        q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0],
+        cache,
+    )
+    h = h.reshape(b, 1, di).astype(x.dtype) + p["skip"] * xc
+    out = (h * jax.nn.silu(z)) @ p["down_proj"]
+    return out, {**cache, **new_state, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    h = cfg.xlstm_n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    def rinit(k_):
+        return (jax.random.normal(k_, (h, dh, dh), jnp.float32) / dh**0.5).astype(dtype)
+    # Round the FFN width up to 256 so it shards cleanly on the 16-way axis.
+    f_ff = -(-int(cfg.xlstm_ff_factor * d) // 256) * 256
+    return {
+        "w": dense_init(ks[0], d, 4 * d, dtype),        # z,i,f,o input projections
+        "r_z": rinit(ks[1]),
+        "r_i": rinit(ks[2]),
+        "r_f": rinit(ks[3]),
+        "r_o": rinit(ks[4]),
+        "b": jnp.concatenate([
+            jnp.zeros((d,)), jnp.full((d,), -5.0), jnp.full((d,), 3.0),
+            jnp.zeros((d,)),
+        ]).astype(jnp.float32),
+        "ff_up": dense_init(ks[5], d, 2 * f_ff, dtype),
+        "ff_down": dense_init(ks[6], f_ff, d, dtype),
+    }
+
+
+def _slstm_cell(p: Dict, wx_t: jax.Array, state: Dict, nheads: int):
+    """One sLSTM step. wx_t (B,4d) precomputed W@x_t + b; state holds
+    c,n,m,h each (B,d) (h additionally feeds the recurrent matrices)."""
+    b_, four_d = wx_t.shape
+    d = four_d // 4
+    dh = d // nheads
+    h_prev = state["h"].reshape(b_, nheads, dh)
+
+    def rec(r):
+        return jnp.einsum("bhd,hde->bhe", h_prev.astype(jnp.float32),
+                          r.astype(jnp.float32)).reshape(b_, d)
+
+    z_pre, i_pre, f_pre, o_pre = jnp.split(wx_t.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z_pre + rec(p["r_z"]))
+    i_log = i_pre + rec(p["r_i"])
+    f_log = jax.nn.log_sigmoid(f_pre + rec(p["r_f"]))
+    o = jax.nn.sigmoid(o_pre + rec(p["r_o"]))
+
+    m_t = jnp.maximum(f_log + state["m"], i_log)
+    i_s = jnp.exp(i_log - m_t)
+    f_s = jnp.exp(f_log + state["m"] - m_t)
+    c_t = f_s * state["c"] + i_s * z
+    n_t = f_s * state["n"] + i_s
+    h_t = o * c_t / jnp.maximum(n_t, 1e-6)
+    return {"c": c_t, "n": n_t, "m": m_t, "h": h_t}
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    zeros = jnp.zeros((batch, d), jnp.float32)
+    return {"c": zeros, "n": zeros, "m": jnp.full((batch, d), NEG_INF, jnp.float32),
+            "h": zeros}
+
+
+def _slstm_ffn(p: Dict, x: jax.Array) -> jax.Array:
+    up = x @ p["ff_up"]
+    a, g = jnp.split(up, 2, axis=-1)
+    return (jax.nn.gelu(a) * g) @ p["ff_down"]
+
+
+def apply_slstm_train(
+    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False
+):
+    p = _maybe_gather(p)
+    b, t, d = x.shape
+    nh = cfg.xlstm_n_heads
+    wx = x @ p["w"] + p["b"].astype(x.dtype)          # hoisted out of the scan
+
+    def step(state, wx_t):
+        new = _slstm_cell(p, wx_t, state, nh)
+        return new, new["h"]
+
+    state0 = init_slstm_cache(cfg, b)
+    wxt = wx.swapaxes(0, 1)                           # (T,B,4d)
+    seg = SLSTM_SEG
+    if t % seg == 0 and t > seg:
+        # Two-level scan: AD saves carries only at segment boundaries and
+        # recomputes within a segment (T x per-step states would otherwise
+        # dominate training memory at 4k seq).
+        @jax.checkpoint
+        def seg_fn(state, wx_seg):
+            return jax.lax.scan(step, state, wx_seg)
+
+        final, hs = jax.lax.scan(seg_fn, state0, wxt.reshape(t // seg, seg, b, -1))
+        h = hs.reshape(t, b, -1).swapaxes(0, 1).astype(x.dtype)
+    else:
+        final, hs = jax.lax.scan(step, state0, wxt)
+        h = hs.swapaxes(0, 1).astype(x.dtype)         # (B,T,d)
+    out = _slstm_ffn(p, h)
+    if return_state:
+        return out, final
+    return out
+
+
+def apply_slstm_decode(
+    cfg: ArchConfig, p: Dict, x: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    p = _maybe_gather(p)
+    b = x.shape[0]
+    nh = cfg.xlstm_n_heads
+    wx = (x @ p["w"] + p["b"].astype(x.dtype))[:, 0]
+    new = _slstm_cell(p, wx, cache, nh)
+    out = _slstm_ffn(p, new["h"][:, None].astype(x.dtype))
+    return out, {**cache, **new}

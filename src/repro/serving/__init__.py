@@ -1,0 +1,9 @@
+"""Routed serving: the paper's router as a first-class serving feature."""
+from repro.serving.engine import (
+    DOLLARS_PER_TFLOP,
+    PoolMember,
+    RoutedEngine,
+    arch_cost_rate,
+)
+
+__all__ = ["DOLLARS_PER_TFLOP", "PoolMember", "RoutedEngine", "arch_cost_rate"]

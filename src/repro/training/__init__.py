@@ -1,0 +1,22 @@
+"""Training substrate: optimizers, schedules, predictor & LM trainers."""
+from repro.training.optim import (
+    AdamConfig,
+    AdamState,
+    adam_init,
+    adam_update,
+    cosine_lr,
+    make_train_step,
+)
+from repro.training.predictor_trainer import (
+    COST_TRAIN,
+    QUALITY_TRAIN,
+    TrainConfig,
+    train_dual_predictors,
+    train_predictor,
+)
+
+__all__ = [
+    "AdamConfig", "AdamState", "adam_init", "adam_update", "cosine_lr",
+    "make_train_step", "COST_TRAIN", "QUALITY_TRAIN", "TrainConfig",
+    "train_dual_predictors", "train_predictor",
+]

@@ -1,0 +1,93 @@
+"""Optimizers from scratch (optax is not available offline).
+
+Adam with decoupled weight decay (AdamW) + CosineAnnealingLR, matching the
+paper's training recipe (Adam, MSE, CosineAnnealingLR). The optimizer state
+is a plain pytree mirroring the params, so it shards with the same
+PartitionSpecs (ZeRO-3 by construction under the launch layer's rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # Cosine annealing (eta_min..lr over t_max steps); None = constant lr.
+    t_max: Optional[int] = None
+    eta_min: float = 0.0
+    moment_dtype: Any = jnp.float32   # set bf16 for the factored-memory mode
+
+
+def cosine_lr(cfg: AdamConfig, step: jax.Array) -> jax.Array:
+    if cfg.t_max is None:
+        return jnp.float32(cfg.lr)
+    t = jnp.minimum(step.astype(jnp.float32), cfg.t_max)
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * t / cfg.t_max))
+    return cfg.eta_min + (cfg.lr - cfg.eta_min) * cos
+
+
+def adam_init(cfg: AdamConfig, params: Any) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adam_update(cfg: AdamConfig, grads: Any, state: AdamState, params: Any):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = lr * m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + lr * cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - delta).astype(p.dtype)
+        return p_new, m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, m=new_m, v=new_v)
+
+
+def make_train_step(cfg: AdamConfig, loss_fn: Callable):
+    """jit-able ``(params, state, *batch) -> (loss, params, state)``."""
+
+    def step(params, state, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        params, state = adam_update(cfg, grads, state, params)
+        return loss, params, state
+
+    return step

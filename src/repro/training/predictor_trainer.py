@@ -1,0 +1,124 @@
+"""Trainer for the routing predictors (paper §5 recipe).
+
+All predictors train with MSE, Adam, CosineAnnealingLR. Paper hypers:
+quality predictor lr=1e-3 wd=1e-5; cost predictor lr=1e-4 wd=1e-7; batch
+1024; 1000 epochs; 75/5/20 split; model selection on validation loss.
+(Epochs are configurable — the synthetic benchmark converges much earlier,
+and tests use small counts.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictors import PREDICTORS
+from repro.training.optim import AdamConfig, adam_init, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 1e-3
+    weight_decay: float = 1e-5
+    batch_size: int = 1024
+    epochs: int = 200
+    seed: int = 0
+    eval_every: int = 10
+
+
+# Paper §5 settings per predictor role.
+QUALITY_TRAIN = TrainConfig(lr=1e-3, weight_decay=1e-5)
+COST_TRAIN = TrainConfig(lr=1e-4, weight_decay=1e-7)
+
+
+def train_predictor(
+    kind: str,
+    q_emb: np.ndarray,            # (N, dq)
+    targets: np.ndarray,          # (N, K)
+    model_emb: np.ndarray,        # (K, C)
+    cfg: TrainConfig,
+    val: Optional[Tuple[np.ndarray, np.ndarray]] = None,
+) -> Tuple[Dict, Dict[str, float]]:
+    """Train one predictor with MSE. Returns (best_params, history)."""
+    pred = PREDICTORS[kind]
+    n, dq = q_emb.shape
+    k = targets.shape[1]
+    m = jnp.asarray(model_emb)
+    params = pred.init(jax.random.key(cfg.seed), dq, k, model_emb.shape[1])
+
+    def loss_fn(p, qb, tb):
+        out = pred.apply(p, qb, m)
+        return jnp.mean((out - tb) ** 2)
+
+    steps_per_epoch = max(1, n // cfg.batch_size)
+    opt_cfg = AdamConfig(
+        lr=cfg.lr, weight_decay=cfg.weight_decay,
+        t_max=cfg.epochs * steps_per_epoch,
+    )
+    state = adam_init(opt_cfg, params)
+    step = jax.jit(make_train_step(opt_cfg, loss_fn))
+
+    @jax.jit
+    def eval_loss(p, qv, tv):
+        return jnp.mean((pred.apply(p, qv, m) - tv) ** 2)
+
+    rng = np.random.default_rng(cfg.seed)
+    qj, tj = jnp.asarray(q_emb), jnp.asarray(targets)
+    best_params, best_val = params, np.inf
+    history = {"train_loss": [], "val_loss": []}
+    for epoch in range(cfg.epochs):
+        perm = rng.permutation(n)
+        ep_loss = 0.0
+        for i in range(steps_per_epoch):
+            idx = perm[i * cfg.batch_size : (i + 1) * cfg.batch_size]
+            if len(idx) == 0:
+                continue
+            loss, params, state = step(params, state, qj[idx], tj[idx])
+            ep_loss += float(loss)
+        history["train_loss"].append(ep_loss / steps_per_epoch)
+        if val is not None and (epoch % cfg.eval_every == 0 or epoch == cfg.epochs - 1):
+            vl = float(eval_loss(params, jnp.asarray(val[0]), jnp.asarray(val[1])))
+            history["val_loss"].append(vl)
+            if vl < best_val:
+                best_val, best_params = vl, jax.tree.map(lambda x: x, params)
+    if val is None:
+        best_params = params
+    return best_params, history
+
+
+def train_dual_predictors(
+    quality_kind: str,
+    cost_kind: str,
+    q_emb_train: np.ndarray,
+    quality_train: np.ndarray,
+    cost_train: np.ndarray,
+    model_emb: np.ndarray,
+    *,
+    q_emb_val=None, quality_val=None, cost_val=None,
+    epochs: int = 200,
+    seed: int = 0,
+):
+    """Trains the (quality, cost) pair with the paper's per-role hypers.
+
+    Costs are normalized to zero-mean/unit-std per model before regression
+    (targets restored at predict time by the caller via the returned scaler).
+    """
+    qcfg = dataclasses.replace(QUALITY_TRAIN, epochs=epochs, seed=seed)
+    ccfg = dataclasses.replace(COST_TRAIN, epochs=epochs, seed=seed + 1)
+    qval = (q_emb_val, quality_val) if q_emb_val is not None else None
+
+    mu, sd = cost_train.mean(0), cost_train.std(0) + 1e-9
+    cost_norm = (cost_train - mu) / sd
+    cval = None
+    if q_emb_val is not None and cost_val is not None:
+        cval = (q_emb_val, (cost_val - mu) / sd)
+
+    q_params, q_hist = train_predictor(
+        quality_kind, q_emb_train, quality_train, model_emb, qcfg, qval)
+    c_params, c_hist = train_predictor(
+        cost_kind, q_emb_train, cost_norm, model_emb, ccfg, cval)
+    scaler = {"mu": mu, "sd": sd}
+    return q_params, c_params, scaler, {"quality": q_hist, "cost": c_hist}

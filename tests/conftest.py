@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override is exclusive to launch/dryrun.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_routerbench():
+    from repro.data import generate
+
+    return generate(600, seed=7)
+
+
+@pytest.fixture(scope="session")
+def pool1(small_routerbench):
+    return small_routerbench.pool("pool1")

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture instantiates its REDUCED same-family config
+(<=2 pattern repeats, d_model<=512, <=4 experts) and runs:
+  * one forward/train step (loss + grads finite, shapes correct),
+  * one prefill + one decode step, asserting decode == full-sequence logits
+    (MoE archs use a generous capacity factor so capacity dispatch is exact).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import MOE
+from repro.models import lm
+
+B, S = 2, 16
+
+
+def _setup(name):
+    cfg = get_smoke_config(name)
+    if cfg.has_ffn(MOE):
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = lm.init_lm(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    media = None
+    if cfg.arch_type == "vlm":
+        media = jax.random.normal(
+            jax.random.key(2), (B, cfg.n_frontend_tokens, cfg.frontend_dim)
+        )
+    return cfg, params, tokens, media
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_reduced_config_bounds(name):
+    cfg = get_smoke_config(name)
+    assert cfg.d_model <= 512
+    assert cfg.n_repeats <= 2
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    assert len(cfg.layer_plan()) == cfg.n_layers
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_forward_and_train_step(name):
+    cfg, params, tokens, media = _setup(name)
+    logits, aux = lm.apply_lm_train(cfg, params, tokens, media=media)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.lm_loss(cfg, p, tokens, tokens, media=media)
+    )(params)
+    assert np.isfinite(float(loss))
+    gsq = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+              for g in jax.tree.leaves(grads))
+    assert np.isfinite(gsq) and gsq > 0.0
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_prefill_decode_matches_full_forward(name):
+    cfg, params, tokens, media = _setup(name)
+    caches = lm.init_caches(cfg, B, S)
+    _, caches = lm.apply_lm_prefill(cfg, params, tokens[:, : S - 1], caches,
+                                    media=media)
+    logits_dec, _ = lm.apply_lm_decode(
+        cfg, params, tokens[:, S - 1 : S], caches, jnp.int32(S - 1)
+    )
+    logits_full, _ = lm.apply_lm_train(cfg, params, tokens, media=media)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(logits_full[:, -1]),
+        rtol=2e-3, atol=2e-4,
+    )
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_full_config_matches_assignment(name):
+    """The full (dry-run) configs carry the exact published dimensions."""
+    spec = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+    }[name]
+    cfg = get_config(name)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec
+    moe = {
+        "granite-moe-1b-a400m": (32, 8),
+        "jamba-1.5-large-398b": (16, 2),
+        "llama4-maverick-400b-a17b": (128, 1),
+    }
+    if name in moe:
+        assert (cfg.n_experts, cfg.top_k) == moe[name]
+
+
+def test_param_counts_are_plausible():
+    """Sanity-check analytic parameter counts against the model names."""
+    expected_range = {
+        "xlstm-1.3b": (0.9e9, 2.4e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.8e9),
+        "jamba-1.5-large-398b": (300e9, 480e9),
+        "gemma3-27b": (22e9, 34e9),
+        "qwen1.5-4b": (3e9, 5.5e9),
+        "qwen3-0.6b": (0.5e9, 1.0e9),
+        "llama4-maverick-400b-a17b": (330e9, 480e9),
+        "llama-3.2-vision-90b": (75e9, 100e9),
+        "granite-3-8b": (7e9, 10e9),
+    }
+    for name, (lo, hi) in expected_range.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]B"
+
+
+def test_active_params_below_total_for_moe():
+    for name in ("granite-moe-1b-a400m", "jamba-1.5-large-398b",
+                 "llama4-maverick-400b-a17b"):
+        cfg = get_config(name)
+        assert cfg.active_param_count() < cfg.param_count()

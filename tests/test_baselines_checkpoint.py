@@ -1,0 +1,177 @@
+"""Baseline routers, checkpointing, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.baselines import (
+    KNNRouter, SVMRouter, llm_blender_choices, llm_blender_eval,
+)
+from repro.data import POOLS, PRICES, generate
+from repro.data.lm_data import MarkovCorpus
+
+
+class TestKNN:
+    def test_neighbors_average(self):
+        # Two well-separated clusters with distinct quality profiles.
+        rng = np.random.default_rng(0)
+        emb = np.concatenate([
+            rng.standard_normal((30, 8)) * 0.05 + 3.0,
+            rng.standard_normal((30, 8)) * 0.05 - 3.0,
+        ]).astype(np.float32)
+        quality = np.concatenate([
+            np.tile([1.0, 0.0], (30, 1)), np.tile([0.0, 1.0], (30, 1))
+        ]).astype(np.float32)
+        cost = np.ones_like(quality)
+        knn = KNNRouter(emb, quality, cost, k=5)
+        s, c = knn.predict(np.array([[3.0] * 8, [-3.0] * 8], np.float32))
+        assert s[0, 0] > 0.9 and s[0, 1] < 0.1
+        assert s[1, 1] > 0.9 and s[1, 0] < 0.1
+
+
+class TestSVM:
+    def test_learns_linear_separation(self):
+        rng = np.random.default_rng(1)
+        emb = rng.standard_normal((200, 6)).astype(np.float32)
+        w = rng.standard_normal(6)
+        quality = np.stack([
+            (emb @ w > 0).astype(np.float32),
+            (emb @ w < 0).astype(np.float32),
+        ], axis=1)
+        cost = np.ones_like(quality)
+        svm = SVMRouter.fit(emb, quality, cost)
+        s, _ = svm.predict(emb)
+        acc = ((s[:, 0] > 0.5) == (quality[:, 0] > 0.5)).mean()
+        assert acc > 0.9
+
+
+class TestBlender:
+    def test_noiseless_judge_picks_best(self):
+        quality = np.array([[0.1, 0.9, 0.5], [0.8, 0.2, 0.3]])
+        ch = llm_blender_choices(quality, judge_noise=0.0)
+        assert list(ch) == [1, 0]
+
+    def test_cost_is_sum_of_all(self):
+        quality = np.array([[0.1, 0.9]])
+        cost = np.array([[1.0, 2.0]])
+        perf, total = llm_blender_eval(quality, cost, judge_noise=0.0)
+        assert np.isclose(total, 3.0)
+        assert np.isclose(perf, 0.9)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {
+            "a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": (jnp.ones((4,), jnp.bfloat16), jnp.int32(7)),
+        }
+        path = os.path.join(tmp_path, "ckpt.npz")
+        save_checkpoint(path, tree, {"step": 42})
+        restored, meta = load_checkpoint(path, tree)
+        assert meta["step"] == 42
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert x.dtype == y.dtype
+            np.testing.assert_allclose(
+                np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+    def test_shape_mismatch_fails_loudly(self, tmp_path):
+        path = os.path.join(tmp_path, "ckpt.npz")
+        save_checkpoint(path, {"w": jnp.ones((2, 2))})
+        with pytest.raises(ValueError, match="shape mismatch"):
+            load_checkpoint(path, {"w": jnp.ones((3, 3))})
+
+    def test_missing_key_fails_loudly(self, tmp_path):
+        path = os.path.join(tmp_path, "ckpt.npz")
+        save_checkpoint(path, {"w": jnp.ones((2,))})
+        with pytest.raises(KeyError):
+            load_checkpoint(path, {"w": jnp.ones((2,)), "extra": jnp.ones((1,))})
+
+
+class TestRouterBenchData:
+    def test_deterministic(self):
+        d1 = generate(50, seed=3, embed=False)
+        d2 = generate(50, seed=3, embed=False)
+        np.testing.assert_allclose(d1.quality, d2.quality)
+        np.testing.assert_allclose(d1.cost, d2.cost)
+        assert d1.texts == d2.texts
+
+    def test_eleven_models_eight_benchmarks(self, small_routerbench):
+        d = small_routerbench
+        assert d.quality.shape[1] == 11
+        assert set(d.benchmark) <= {
+            "mmlu", "gsm8k", "hellaswag", "arc-challenge", "winogrande",
+            "mbpp", "mt-bench", "rag"}
+
+    def test_binary_benchmarks_are_binary(self, small_routerbench):
+        d = small_routerbench
+        mask = np.isin(d.benchmark, ["mmlu", "gsm8k", "hellaswag",
+                                     "arc-challenge", "winogrande"])
+        vals = d.quality[mask]
+        assert np.all((vals == 0.0) | (vals == 1.0))
+
+    def test_gpt4_strongest_and_priciest(self, small_routerbench):
+        d = small_routerbench
+        gi = d.model_names.index("gpt-4")
+        assert d.quality.mean(0).argmax() == gi
+        assert d.cost.mean(0).argmax() == gi
+
+    def test_pools_match_appendix_b(self):
+        assert POOLS["pool4"] == ["llama-2-70b-chat", "claude-v1", "claude-v2",
+                                  "gpt-4"]
+        for pool in POOLS.values():
+            for m in pool:
+                assert m in PRICES
+
+    def test_split_fractions(self, small_routerbench):
+        tr, va, te = small_routerbench.split()
+        n = len(small_routerbench.texts)
+        assert len(tr) + len(va) + len(te) == n
+        assert abs(len(tr) / n - 0.75) < 0.02
+        # disjoint
+        assert not (set(tr) & set(te)) and not (set(tr) & set(va))
+
+    def test_paper_property_cheap_models_cover_most_of_gpt4(self, small_routerbench):
+        """RouterBench's key observation: most GPT-4-answerable queries are
+        answerable by at least one cheaper model."""
+        d = small_routerbench
+        gi = d.model_names.index("gpt-4")
+        others = [i for i in range(11) if i != gi]
+        gpt4_right = d.quality[:, gi] > 0.5
+        any_cheap = (d.quality[:, others] > 0.5).any(axis=1)
+        coverage = (gpt4_right & any_cheap).sum() / max(gpt4_right.sum(), 1)
+        assert coverage > 0.8
+
+    def test_csv_roundtrip(self, tmp_path, small_routerbench):
+        import csv
+        d = small_routerbench.select(np.arange(len(small_routerbench.texts)) < 20)
+        path = os.path.join(tmp_path, "rb.csv")
+        with open(path, "w", newline="") as f:
+            wr = csv.writer(f)
+            wr.writerow(["prompt", "benchmark", "domain", "model", "quality", "cost"])
+            for i, text in enumerate(d.texts):
+                for j, m in enumerate(d.model_names):
+                    wr.writerow([text, d.benchmark[i], d.domain[i], m,
+                                 d.quality[i, j], d.cost[i, j]])
+        from repro.data import load_csv
+        loaded = load_csv(path, model_names=d.model_names)
+        assert len(loaded.texts) == 20
+        np.testing.assert_allclose(
+            np.sort(loaded.quality.sum(1)), np.sort(d.quality.sum(1)), rtol=1e-5)
+
+
+class TestMarkovCorpus:
+    def test_learnable_structure(self):
+        c = MarkovCorpus(64, seed=0)
+        toks, labels = next(c.batches(4, 128, seed=1))
+        assert toks.shape == (4, 128) and labels.shape == (4, 128)
+        assert toks.min() >= 0 and toks.max() < 64
+
+    def test_deterministic(self):
+        c1 = MarkovCorpus(64, seed=0)
+        c2 = MarkovCorpus(64, seed=0)
+        t1, _ = next(c1.batches(2, 32, seed=5))
+        t2, _ = next(c2.batches(2, 32, seed=5))
+        np.testing.assert_array_equal(t1, t2)

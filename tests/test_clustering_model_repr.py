@@ -1,0 +1,94 @@
+"""k-means, model embeddings, and the featurizer."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import assign_clusters, kmeans, pairwise_sq_dists
+from repro.core.model_repr import build_model_embeddings, embed_new_model
+from repro.data.featurizer import EMB_DIM, embed_text, embed_texts
+
+
+class TestKMeans:
+    def test_separated_clusters_recovered(self):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((50, 4)) * 0.1 + 5.0
+        b = rng.standard_normal((50, 4)) * 0.1 - 5.0
+        x = np.concatenate([a, b])
+        centers, assign = kmeans(x, 2, seed=0)
+        assert len(set(assign[:50])) == 1
+        assert len(set(assign[50:])) == 1
+        assert assign[0] != assign[-1]
+
+    def test_assignment_is_nearest_centroid(self):
+        rng = np.random.default_rng(1)
+        x = rng.standard_normal((80, 6)).astype(np.float32)
+        centers, assign = kmeans(x, 5, seed=1)
+        d = np.asarray(pairwise_sq_dists(x, centers))
+        assert np.array_equal(assign, d.argmin(axis=1))
+
+    @given(st.integers(2, 6), st.integers(20, 60))
+    @settings(max_examples=10, deadline=None)
+    def test_kmeans_deterministic(self, k, n):
+        rng = np.random.default_rng(42)
+        x = rng.standard_normal((n, 5)).astype(np.float32)
+        c1, a1 = kmeans(x, k, seed=3)
+        c2, a2 = kmeans(x, k, seed=3)
+        assert np.allclose(c1, c2)
+        assert np.array_equal(a1, a2)
+
+
+class TestModelRepr:
+    def test_embedding_shape_and_range(self):
+        rng = np.random.default_rng(0)
+        emb = rng.standard_normal((200, 16)).astype(np.float32)
+        quality = rng.random((200, 4)).astype(np.float32)
+        memb, centers = build_model_embeddings(emb, quality, n_clusters=8, seed=0)
+        assert memb.shape == (4, 8)
+        assert centers.shape == (8, 16)
+        assert memb.min() >= 0.0 and memb.max() <= 1.0
+
+    def test_perfect_model_embeds_to_ones(self):
+        rng = np.random.default_rng(1)
+        emb = rng.standard_normal((100, 8)).astype(np.float32)
+        quality = np.ones((100, 2), np.float32)
+        memb, _ = build_model_embeddings(emb, quality, n_clusters=4, seed=0)
+        assert np.allclose(memb, 1.0)
+
+    def test_dynamic_model_addition(self):
+        rng = np.random.default_rng(2)
+        emb = rng.standard_normal((150, 8)).astype(np.float32)
+        quality = rng.random((150, 3)).astype(np.float32)
+        memb, centers = build_model_embeddings(emb, quality, n_clusters=5, seed=0)
+        new = embed_new_model(centers, emb, quality[:, 0])
+        assert new.shape == (5,)
+        assert 0.0 <= new.min() and new.max() <= 1.0
+
+
+class TestFeaturizer:
+    def test_deterministic(self):
+        assert np.allclose(embed_text("what is 2+2?"), embed_text("what is 2+2?"))
+
+    def test_unit_norm(self):
+        v = embed_text("solve this equation for x")
+        assert np.isclose(np.linalg.norm(v), 1.0, atol=1e-5)
+
+    def test_dim(self):
+        assert embed_text("hello").shape == (EMB_DIM,)
+
+    def test_similar_texts_closer_than_different(self):
+        a = embed_text("integral derivative equation algebra")
+        b = embed_text("integral derivative equation arithmetic")
+        c = embed_text("kitchen umbrella breakfast weekend")
+        assert a @ b > a @ c
+
+    @given(st.text(min_size=0, max_size=40))
+    @settings(max_examples=50, deadline=None)
+    def test_never_nan(self, text):
+        v = embed_text(text)
+        assert np.all(np.isfinite(v))
+
+    def test_batch_matches_single(self):
+        texts = ["alpha beta", "gamma delta"]
+        batch = embed_texts(texts)
+        assert np.allclose(batch[0], embed_text(texts[0]))
+        assert np.allclose(batch[1], embed_text(texts[1]))

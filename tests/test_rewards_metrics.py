@@ -1,0 +1,143 @@
+"""Unit + property tests for rewards (paper Eq. 3) and metrics (Eqs. 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DEFAULT_LAMBDA_GRID, aiq, lam_sensitivity, max_calls_fraction,
+    pareto_frontier, reward_exponential, reward_linear, route, routed_points,
+)
+
+
+class TestRewards:
+    def test_linear_matches_formula(self):
+        s, c, lam = 0.8, 0.002, 0.1
+        assert np.isclose(float(reward_linear(s, c, lam)), 0.8 - 0.02)
+
+    def test_exponential_matches_formula(self):
+        s, c, lam = 0.8, 0.002, 0.1
+        assert np.isclose(float(reward_exponential(s, c, lam)), 0.8 * np.exp(-0.02))
+
+    def test_route_prefers_quality_at_high_lambda(self):
+        s = np.array([[0.5, 0.9]])
+        c = np.array([[0.001, 1.0]])
+        assert int(route("R2", s, c, 1e6)[0]) == 1
+        assert int(route("R1", s, c, 1e6)[0]) == 1
+
+    def test_route_prefers_cheap_at_low_lambda(self):
+        s = np.array([[0.5, 0.9]])
+        c = np.array([[0.001, 1.0]])
+        assert int(route("R2", s, c, 1e-4)[0]) == 0
+        assert int(route("R1", s, c, 1e-4)[0]) == 0
+
+    @given(
+        s=st.floats(0.0, 1.0),
+        c=st.floats(0.0, 100.0),
+        lam=st.floats(1e-4, 1e4),
+    )
+    def test_r2_bounded(self, s, c, lam):
+        """The paper attributes R2's stability to boundedness: 0<=R2<=s."""
+        r = float(reward_exponential(s, c, lam))
+        assert 0.0 <= r <= s * (1 + 1e-6) + 1e-7   # fp32 slack
+
+    @given(
+        s=st.floats(0.01, 1.0),
+        c=st.floats(0.001, 100.0),
+        lam1=st.floats(1e-4, 1e3),
+        factor=st.floats(1.01, 100.0),
+    )
+    def test_rewards_monotone_in_lambda(self, s, c, lam1, factor):
+        """Higher willingness to pay never lowers either reward."""
+        lam2 = lam1 * factor
+        assert float(reward_linear(s, c, lam2)) >= float(reward_linear(s, c, lam1))
+        assert float(reward_exponential(s, c, lam2)) >= float(
+            reward_exponential(s, c, lam1)
+        )
+
+
+class TestPareto:
+    def test_hull_of_two_points(self):
+        costs = np.array([1.0, 2.0])
+        perfs = np.array([0.5, 1.0])
+        hx, hy = pareto_frontier(costs, perfs)
+        assert np.allclose(hx, [1.0, 2.0]) and np.allclose(hy, [0.5, 1.0])
+
+    def test_dominated_point_removed(self):
+        costs = np.array([1.0, 1.5, 2.0])
+        perfs = np.array([0.5, 0.4, 1.0])  # middle point dominated
+        hx, hy = pareto_frontier(costs, perfs)
+        assert 1.5 not in hx
+
+    def test_aiq_constant_router(self):
+        """All lambdas identical -> AIQ = the single perf value."""
+        assert np.isclose(aiq(np.full(5, 2.0), np.full(5, 0.7)), 0.7)
+
+    def test_aiq_analytic_triangle(self):
+        # frontier: (0, 0) -> (1, 1): area 0.5 over range 1.
+        costs = np.array([0.0, 1.0])
+        perfs = np.array([0.0, 1.0])
+        assert np.isclose(aiq(costs, perfs), 0.5)
+
+    @given(
+        st.lists(
+            st.tuples(st.floats(0.0, 10.0), st.floats(0.0, 1.0)),
+            min_size=2, max_size=30,
+        )
+    )
+    @settings(max_examples=200)
+    def test_aiq_permutation_invariant_and_bounded(self, pts):
+        costs = np.array([p[0] for p in pts])
+        perfs = np.array([p[1] for p in pts])
+        a1 = aiq(costs, perfs)
+        rng = np.random.default_rng(0)
+        perm = rng.permutation(len(pts))
+        a2 = aiq(costs[perm], perfs[perm])
+        assert np.isclose(a1, a2)
+        assert -1e-9 <= a1 <= 1.0 + 1e-9
+
+    @given(
+        st.lists(
+            st.tuples(st.floats(0.0, 10.0), st.floats(0.0, 1.0)),
+            min_size=2, max_size=30,
+        )
+    )
+    @settings(max_examples=100)
+    def test_hull_dominates_all_points(self, pts):
+        costs = np.array([p[0] for p in pts])
+        perfs = np.array([p[1] for p in pts])
+        hx, hy = pareto_frontier(costs, perfs)
+        # Hull is non-decreasing and >= every point at same-or-lower cost.
+        assert np.all(np.diff(hy) >= -1e-9)
+        for c, p in zip(costs, perfs):
+            j = np.searchsorted(hx, c, side="right") - 1
+            if j >= 0:
+                interp = np.interp(c, hx, hy)
+                assert interp >= p - 1e-6
+
+
+class TestSensitivity:
+    def test_constant_series_zero(self):
+        lams = [0.01, 0.1, 1.0]
+        assert lam_sensitivity(lams, [0.5, 0.5, 0.5]) == 0.0
+
+    def test_paper_equation_two_points(self):
+        # Eq 2 with 3 lambdas reduces to weighted average of deltas.
+        lams = [0.1, 1.0, 10.0]
+        vals = [0.2, 0.5, 0.6]
+        expect = (np.log(10) * 0.3 + np.log(10) * 0.1) / np.log(100)
+        assert np.isclose(lam_sensitivity(lams, vals), expect)
+
+    def test_max_calls(self):
+        choices = np.array([[0, 1, 1], [1, 1, 1]])
+        assert max_calls_fraction(choices, 1) == 1.0
+        assert max_calls_fraction(choices, 0) == pytest.approx(1 / 3)
+
+
+class TestRoutedPoints:
+    def test_averaging(self):
+        quality = np.array([[0.0, 1.0], [1.0, 0.0]])
+        cost = np.array([[1.0, 2.0], [3.0, 4.0]])
+        choices = np.array([[0, 1]])     # one lambda: q0->m0, q1->m1
+        costs, perfs = routed_points(choices, quality, cost)
+        assert np.isclose(costs[0], (1.0 + 4.0) / 2)
+        assert np.isclose(perfs[0], 0.0)

@@ -1,0 +1,150 @@
+"""End-to-end behaviour tests for the routing system (the paper's claims,
+executed small): train the dual predictors on synthetic RouterBench, route,
+and verify the framework-level properties the paper reports.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_LAMBDA_GRID, build_model_embeddings, evaluate_sweep, oracle_sweep,
+)
+from repro.core.router import PredictiveRouter
+from repro.training import train_dual_predictors
+
+EPOCHS = 80  # enough for the small fixture; benchmarks use the paper's 1000
+
+
+@pytest.fixture(scope="module")
+def trained(pool1):
+    tr, va, te = pool1.split()
+    memb, cents = build_model_embeddings(pool1.emb[tr], pool1.quality[tr], seed=0)
+    qp, cp, scaler, hist = train_dual_predictors(
+        "attn", "attn", pool1.emb[tr], pool1.quality[tr], pool1.cost[tr], memb,
+        q_emb_val=pool1.emb[va], quality_val=pool1.quality[va],
+        cost_val=pool1.cost[va], epochs=EPOCHS, seed=0,
+    )
+    router = PredictiveRouter("attn", "attn", qp, cp, memb, reward="R2",
+                              cost_scaler=scaler)
+    return router, (tr, va, te), hist
+
+
+class TestEndToEnd:
+    def test_training_converges(self, trained):
+        _, _, hist = trained
+        assert hist["quality"]["train_loss"][-1] < hist["quality"]["train_loss"][0]
+        assert hist["cost"]["train_loss"][-1] < hist["cost"]["train_loss"][0]
+
+    def test_router_beats_cheapest_single_model(self, pool1, trained):
+        router, (tr, va, te), _ = trained
+        ch = router.sweep(pool1.emb[te], DEFAULT_LAMBDA_GRID)
+        m = evaluate_sweep(ch, pool1.quality[te], pool1.cost[te])
+        cheapest = int(np.argmin(pool1.cost[te].mean(0)))
+        cheapest_perf = float(pool1.quality[te][:, cheapest].mean())
+        assert m["perf_max"] > cheapest_perf
+
+    def test_lambda_monotone_cost(self, pool1, trained):
+        """Higher willingness to pay must not lower average routed cost
+        (up to small prediction noise)."""
+        router, (_, _, te), _ = trained
+        lams = np.array([1e-4, 1e-2, 1.0, 100.0])
+        ch = router.sweep(pool1.emb[te], lams)
+        b = np.arange(len(te))
+        costs = [float(pool1.cost[te][b, c].mean()) for c in ch]
+        assert costs[-1] >= costs[0] * 0.99
+
+    def test_oracle_dominates_predictive_router(self, pool1, trained):
+        router, (_, _, te), _ = trained
+        ch_r = router.sweep(pool1.emb[te], DEFAULT_LAMBDA_GRID)
+        m_r = evaluate_sweep(ch_r, pool1.quality[te], pool1.cost[te])
+        ch_o = oracle_sweep(pool1.quality[te], pool1.cost[te],
+                            DEFAULT_LAMBDA_GRID, "R2")
+        m_o = evaluate_sweep(ch_o, pool1.quality[te], pool1.cost[te])
+        assert m_o["aiq"] >= m_r["aiq"]
+        assert m_o["perf_max"] >= m_r["perf_max"] - 1e-9
+
+    def test_r2_oracle_less_sensitive_than_r1(self, pool1):
+        """Paper Table 1's headline: R2's lambda-sensitivity << R1's."""
+        _, _, te = pool1.split()
+        q, c = pool1.quality[te], pool1.cost[te]
+        m1 = evaluate_sweep(oracle_sweep(q, c, DEFAULT_LAMBDA_GRID, "R1"), q, c)
+        m2 = evaluate_sweep(oracle_sweep(q, c, DEFAULT_LAMBDA_GRID, "R2"), q, c)
+        assert m2["lam_sens_perf"] < m1["lam_sens_perf"]
+
+    def test_router_beats_random_routing(self, pool1, trained):
+        router, (_, _, te), _ = trained
+        ch = router.sweep(pool1.emb[te], DEFAULT_LAMBDA_GRID)
+        m = evaluate_sweep(ch, pool1.quality[te], pool1.cost[te])
+        rng = np.random.default_rng(0)
+        ch_rand = rng.integers(0, pool1.quality.shape[1], size=ch.shape)
+        m_rand = evaluate_sweep(ch_rand, pool1.quality[te], pool1.cost[te])
+        assert m["aiq"] > m_rand["aiq"]
+
+    def test_dynamic_pool_growth_with_dot_head(self, pool1):
+        """attn-dot router scores a pool member added after training."""
+        from repro.core.predictors import PREDICTORS
+        from repro.core.model_repr import embed_new_model
+
+        tr, va, te = pool1.split()
+        memb4, cents = build_model_embeddings(
+            pool1.emb[tr], pool1.quality[tr][:, :4], seed=0)
+        qp, cp, scaler, _ = train_dual_predictors(
+            "attn-dot", "attn-dot", pool1.emb[tr], pool1.quality[tr][:, :4],
+            pool1.cost[tr][:, :4], memb4, epochs=30, seed=0)
+        new_emb = embed_new_model(cents, pool1.emb[tr], pool1.quality[tr][:, 4])
+        memb5 = np.concatenate([memb4, new_emb[None]], axis=0)
+        out = PREDICTORS["attn-dot"].apply(qp, pool1.emb[te][:16], memb5)
+        assert out.shape == (16, 5)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+class TestServingEngine:
+    @pytest.fixture(scope="class")
+    def engine_parts(self):
+        from repro.launch.serve import build_pool, synthetic_pool_traffic
+
+        pool = build_pool(["qwen3-0.6b", "granite-3-8b"])
+        data, quality, cost = synthetic_pool_traffic(pool, n=400)
+        tr, va, te = data.split()
+        memb, _ = build_model_embeddings(data.emb[tr], quality[tr], seed=0)
+        qp, cp, scaler, _ = train_dual_predictors(
+            "attn", "attn", data.emb[tr], quality[tr], cost[tr], memb,
+            epochs=30)
+        router = PredictiveRouter("attn", "attn", qp, cp, memb,
+                                  reward="R2", cost_scaler=scaler)
+        return router, pool, data, te
+
+    def test_routed_serving_end_to_end(self, engine_parts):
+        import jax.numpy as jnp
+        from repro.serving import RoutedEngine
+
+        router, pool, data, te = engine_parts
+        engine = RoutedEngine(router=router, pool=pool, lam=1.0)
+        texts = [data.texts[i] for i in te[:6]]
+        prompts = jnp.zeros((6, 8), jnp.int32)
+        res = engine.serve(texts, prompts, max_new=2)
+        assert len(res["outputs"]) == 6
+        assert all(o is not None and o.shape == (2,) for o in res["outputs"])
+        assert res["total_cost"] > 0
+        assert res["per_member_counts"].sum() == 6
+
+    def test_lambda_zero_routes_cheap(self, engine_parts):
+        from repro.serving import RoutedEngine
+
+        router, pool, data, te = engine_parts
+        engine = RoutedEngine(router=router, pool=pool, lam=1e-9)
+        texts = [data.texts[i] for i in te[:24]]
+        choices = engine.route_texts(texts)
+        cheap = int(np.argmin([m.cost_rate for m in pool]))
+        assert (choices == cheap).mean() > 0.9
+
+    def test_pallas_scoring_path_matches_reference(self, engine_parts):
+        from repro.serving import RoutedEngine
+
+        router, pool, data, te = engine_parts
+        texts = [data.texts[i] for i in te[:16]]
+        eng_ref = RoutedEngine(router=router, pool=pool, lam=1.0,
+                               use_pallas=False)
+        eng_pal = RoutedEngine(router=router, pool=pool, lam=1.0,
+                               use_pallas=True)
+        np.testing.assert_array_equal(
+            eng_ref.route_texts(texts), eng_pal.route_texts(texts))

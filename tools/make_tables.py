@@ -1,0 +1,82 @@
+"""Render markdown tables for EXPERIMENTS.md from reports/dryrun + roofline.
+
+    PYTHONPATH=src python tools/make_tables.py dryrun|roofline
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = [
+    "musicgen-large", "xlstm-1.3b", "granite-moe-1b-a400m",
+    "jamba-1.5-large-398b", "gemma3-27b", "qwen1.5-4b", "qwen3-0.6b",
+    "llama4-maverick-400b-a17b", "llama-3.2-vision-90b", "granite-3-8b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load_all(directory="reports/dryrun"):
+    out = {}
+    for path in glob.glob(os.path.join(directory, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        tag = os.path.basename(path)[: -len(".json")]
+        out[tag] = r
+    return out
+
+
+def dryrun_table():
+    recs = _load_all()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Mesh {mesh} ({256 if mesh=='16x16' else 512} chips)\n")
+        print("| arch | shape | status | HLO GFLOP/dev | coll GB/dev | "
+              "peak GiB/dev | args GiB | compile s |")
+        print("|---|---|---|---|---|---|---|---|")
+        for arch in ARCH_ORDER:
+            for shape in SHAPE_ORDER:
+                r = recs.get(f"{arch}__{shape}__{mesh}")
+                if r is None:
+                    print(f"| {arch} | {shape} | MISSING | | | | | |")
+                    continue
+                if r["status"] == "skipped":
+                    print(f"| {arch} | {shape} | skip (full attention) "
+                          f"| — | — | — | — | — |")
+                    continue
+                if r["status"] != "ok":
+                    print(f"| {arch} | {shape} | ERROR | | | | | |")
+                    continue
+                print(
+                    f"| {arch} | {shape} | ok "
+                    f"| {r['flops']/1e9:.1f} "
+                    f"| {r['collective_bytes_per_device']/1e9:.2f} "
+                    f"| {r['peak_bytes_per_device']/2**30:.2f} "
+                    f"| {r['argument_bytes_per_device']/2**30:.2f} "
+                    f"| {r['compile_s']} |"
+                )
+
+
+def roofline_table():
+    with open("reports/roofline.json") as f:
+        rows = json.load(f)
+    idx = {(r["arch"], r["shape"]): r for r in rows}
+    print("| arch | shape | compute s | memory s | collective s | dominant | "
+          "MODEL/HLO | peak GiB | probe |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = idx.get((arch, shape))
+            if r is None:
+                continue
+            print(
+                f"| {arch} | {shape} "
+                f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+                f"| {r['useful_ratio']:.2f} | {r['peak_gib']:.1f} "
+                f"| {'y' if r['probe_corrected'] else 'RAW'} |"
+            )
+
+
+if __name__ == "__main__":
+    {"dryrun": dryrun_table, "roofline": roofline_table}[sys.argv[1]]()
