@@ -17,6 +17,7 @@ from benchmarks import (
     fig6_distribution,
     kernel_bench,
     roofline,
+    serving_bench,
     table1_rewards,
     table2_routers,
     table3_6_ablation,
@@ -30,6 +31,7 @@ SUITES = {
     "fig6": fig6_distribution.main,
     "kernels": kernel_bench.main,
     "roofline": roofline.main,
+    "serving": serving_bench.main,
 }
 
 

@@ -1,55 +1,71 @@
-"""Routed serving: the paper's router fronting the assigned-architecture
-pool, end to end.
+"""Streaming routed serving: the paper's router fronting the
+assigned-architecture pool under simulated open-loop traffic.
 
     PYTHONPATH=src python examples/routed_serving.py
 
-Builds three pool members (reduced configs on CPU: a dense, an MoE, and an
-SSM family member), maps synthetic RouterBench traffic onto them with
-FLOPs-derived cost rates, trains the attention router, and serves a request
-batch at three willingness-to-pay levels — showing traffic shift from the
-cheap member to the expensive one as lambda grows.
-"""
-import jax.numpy as jnp
-import numpy as np
+Builds three pool members (reduced configs on CPU: a dense, an MoE, and a
+second dense family member), trains the attention router on synthetic
+RouterBench traffic mapped onto them, then drives the continuous
+micro-batching scheduler three ways:
 
-from repro.core import build_model_embeddings
-from repro.core.router import PredictiveRouter
-from repro.launch.serve import build_pool, synthetic_pool_traffic
-from repro.serving import RoutedEngine
-from repro.training import train_dual_predictors
+  1. steady Poisson traffic at the nominal willingness-to-pay;
+  2. the same traffic at a near-zero lambda (everything routes cheap);
+  3. a bursty trace under a tight rolling budget — the governor shifts
+     traffic toward cheaper members as the window overspends.
+"""
+from repro.configs import get_config
+from repro.launch.serve import build_routed_engine
+from repro.serving import (
+    BudgetGovernor,
+    MicroBatchScheduler,
+    SchedulerConfig,
+    TraceConfig,
+    default_service_model,
+    make_trace,
+)
 
 POOL = ["qwen3-0.6b", "granite-moe-1b-a400m", "granite-3-8b"]
+SEED = 0
+
+
+def run(engine, data, te, *, kind, lam, budget=None, n=48, score_batch=32):
+    trace = make_trace(
+        TraceConfig(kind=kind, n_requests=n, rate=400.0, seed=SEED,
+                    max_new=2, prompt_len_max=24, vocab=64),
+        texts=[data.texts[i] for i in te],
+        benchmarks=[data.benchmark[i] for i in te],
+    )
+    engine.lam = lam
+    governor = None
+    if budget is not None:
+        governor = BudgetGovernor(budget, window_s=0.2, lam0=lam)
+    sched = MicroBatchScheduler(
+        engine, SchedulerConfig(score_batch=score_batch, max_batch=8),
+        governor=governor, service_time=default_service_model())
+    summary = sched.run_trace(trace)
+    label = f"{kind} lam={lam:g}" + (f" budget=${budget:g}" if budget else "")
+    print(f"--- {label}")
+    print("   routed:", summary["per_member_counts"],
+          f" spend ${summary['total_spend']:.6f}")
+    if governor is not None:
+        print(f"   governor: final lambda {governor.lam:.3g} "
+              f"(tightened x{governor.tightened})")
+    return summary
 
 
 def main():
-    from repro.configs import get_config
-    pool = build_pool(POOL)
-    for m in pool:
+    engine, data, te = build_routed_engine(POOL, seed=SEED, epochs=150)
+    for m in engine.pool:
         full = get_config(m.name)
         print(f"member {m.name:24s} cost ${m.cost_rate:.6f}/request "
               f"({full.active_param_count()/1e9:.2f}B active params full-size)")
 
-    data, quality, cost = synthetic_pool_traffic(pool, n=1200)
-    tr, va, te = data.split()
-    memb, _ = build_model_embeddings(data.emb[tr], quality[tr], seed=0)
-    qp, cp, scaler, _ = train_dual_predictors(
-        "attn", "attn", data.emb[tr], quality[tr], cost[tr], memb,
-        q_emb_val=data.emb[va], quality_val=quality[va], cost_val=cost[va],
-        epochs=150,
-    )
-    router = PredictiveRouter("attn", "attn", qp, cp, memb, reward="R2",
-                              cost_scaler=scaler)
-
-    texts = [data.texts[i] for i in te[:32]]
-    prompts = jnp.asarray(
-        np.random.default_rng(0).integers(0, 256, size=(32, 12)), jnp.int32)
-
-    for lam in (1e-7, 3e-6, 1.0):
-        engine = RoutedEngine(router=router, pool=pool, lam=lam)
-        res = engine.serve(texts, prompts, max_new=4)
-        counts = dict(zip(POOL, res["per_member_counts"].tolist()))
-        print(f"lambda={lam:g}: routed {counts}  "
-              f"total ${res['total_cost']:.6f}  {res['latency_s']:.1f}s")
+    run(engine, data, te, kind="poisson", lam=1.0)
+    run(engine, data, te, kind="poisson", lam=1e-7)
+    # Small score batches -> more dispatch rounds -> the governor gets
+    # enough controller steps to visibly shift traffic mid-trace.
+    run(engine, data, te, kind="bursty", lam=1.0, budget=5e-4, n=96,
+        score_batch=12)
 
 
 if __name__ == "__main__":

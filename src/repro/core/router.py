@@ -32,15 +32,24 @@ class PredictiveRouter:
     reward: str = "R2"
     cost_scaler: Optional[Dict] = None   # {"mu","sd"} from the cost trainer
 
+    def denormalize_cost(self, c_hat: np.ndarray) -> np.ndarray:
+        """Undo the cost trainer's target normalization and clamp at zero.
+
+        The single place this happens — every scoring path (predict here,
+        the serving engine's fused Pallas path) must route through it so the
+        two cannot drift.
+        """
+        c_hat = np.asarray(c_hat)
+        if self.cost_scaler is not None:
+            c_hat = c_hat * self.cost_scaler["sd"] + self.cost_scaler["mu"]
+        return np.maximum(c_hat, 0.0)
+
     def predict(self, q_emb: np.ndarray):
         m = jnp.asarray(self.model_emb)
         q = jnp.asarray(q_emb)
         s_hat = PREDICTORS[self.quality_kind].apply(self.quality_params, q, m)
         c_hat = PREDICTORS[self.cost_kind].apply(self.cost_params, q, m)
-        s_hat, c_hat = np.asarray(s_hat), np.asarray(c_hat)
-        if self.cost_scaler is not None:
-            c_hat = c_hat * self.cost_scaler["sd"] + self.cost_scaler["mu"]
-        return s_hat, np.maximum(c_hat, 0.0)
+        return np.asarray(s_hat), self.denormalize_cost(c_hat)
 
     def route(self, q_emb: np.ndarray, lam: float) -> np.ndarray:
         s_hat, c_hat = self.predict(q_emb)

@@ -25,6 +25,42 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def pool_projections(wk, wv, m_emb):
+    """Pool-side K~ = m_emb Wk and V~ = m_emb Wv (fp32, (K, d)).
+
+    Per-pool constants at serving time: compute once when the pool is
+    (re)built and reuse across every score batch via
+    :func:`router_xattn_pool`.
+    """
+    kt = m_emb.astype(jnp.float32) @ wk.astype(jnp.float32)
+    vt = m_emb.astype(jnp.float32) @ wv.astype(jnp.float32)
+    return kt, vt
+
+
+def _xattn_padded(q, wq, kt, vt, wo, bo, *, block_b, interpret):
+    """Pad to TPU tile granularity and invoke the Pallas kernel."""
+    b, dq = q.shape
+    k, d = kt.shape
+
+    d_pad = _round_up(d, LANE)
+    k_pad = _round_up(k, LANE)
+    b_pad = _round_up(b, block_b)
+
+    qp = jnp.pad(q, ((0, b_pad - b), (0, 0)))
+    wq_p = jnp.pad(wq, ((0, 0), (0, d_pad - d)))
+    kt_p = jnp.pad(kt, ((0, k_pad - k), (0, d_pad - d)))
+    vt_p = jnp.pad(vt, ((0, k_pad - k), (0, d_pad - d)))
+    wo_p = jnp.pad(wo, ((0, d_pad - d), (0, k_pad - k)))
+    bo_p = jnp.pad(bo, (0, k_pad - k))[None, :]
+    kmask = (jnp.arange(k_pad) < k).astype(jnp.float32)[None, :]
+
+    out = router_xattn_pallas(
+        qp, wq_p, kt_p, vt_p, wo_p, bo_p, kmask,
+        d_latent=d, block_b=block_b, interpret=interpret,
+    )
+    return out[:b, :k]
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def router_xattn(
     q, wq, wk, wv, wo, bo, m_emb, *, block_b: int = 256, interpret: bool = None
@@ -37,29 +73,25 @@ def router_xattn(
     """
     if interpret is None:
         interpret = not _on_tpu()
-    b, dq = q.shape
-    k = m_emb.shape[0]
-    d = wq.shape[1]
+    kt, vt = pool_projections(wk, wv, m_emb)
+    return _xattn_padded(q, wq, kt, vt, wo, bo,
+                         block_b=block_b, interpret=interpret)
 
-    d_pad = _round_up(d, LANE)
-    k_pad = _round_up(k, LANE)
-    b_pad = _round_up(b, block_b)
 
-    qp = jnp.pad(q, ((0, b_pad - b), (0, 0)))
-    wq_p = jnp.pad(wq, ((0, 0), (0, d_pad - d)))
-    kt = m_emb.astype(jnp.float32) @ wk.astype(jnp.float32)      # (K, d)
-    vt = m_emb.astype(jnp.float32) @ wv.astype(jnp.float32)
-    kt_p = jnp.pad(kt, ((0, k_pad - k), (0, d_pad - d)))
-    vt_p = jnp.pad(vt, ((0, k_pad - k), (0, d_pad - d)))
-    wo_p = jnp.pad(wo, ((0, d_pad - d), (0, k_pad - k)))
-    bo_p = jnp.pad(bo, (0, k_pad - k))[None, :]
-    kmask = (jnp.arange(k_pad) < k).astype(jnp.float32)[None, :]
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def router_xattn_pool(
+    q, wq, kt, vt, wo, bo, *, block_b: int = 256, interpret: bool = None
+):
+    """Fused routing scores against precomputed pool projections.
 
-    out = router_xattn_pallas(
-        qp, wq_p, kt_p, vt_p, wo_p, bo_p, kmask,
-        d_latent=d, block_b=block_b, interpret=interpret,
-    )
-    return out[:b, :k]
+    The serving scheduler's hot path: K~/V~ from :func:`pool_projections`
+    are computed once per pool and reused across every score micro-batch,
+    so the per-batch work is only the query-side projection + attention.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _xattn_padded(q, wq, kt, vt, wo, bo,
+                         block_b=block_b, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))

@@ -1,18 +1,24 @@
-"""Routed serving driver.
+"""Streaming routed-serving driver: simulated open-loop traffic end to end.
 
-    PYTHONPATH=src python -m repro.launch.serve --pool qwen3-0.6b,xlstm-1.3b \
-        --requests 32 --lam 1.0
+    PYTHONPATH=src python -m repro.launch.serve --trace poisson --requests 200
+    PYTHONPATH=src python -m repro.launch.serve --trace bursty --requests 200 \
+        --budget 0.02 --budget-window 0.5 --lam 1.0
 
 Builds reduced pool members on CPU (full configs require the production
 mesh), trains the attention router on synthetic RouterBench traffic mapped
-onto the pool, then serves a batch of requests end to end.
+onto the pool, then replays a simulated traffic scenario (poisson / bursty /
+drift) through the admission queue + continuous micro-batching scheduler,
+reporting per-member counts, spend vs. budget, and latency percentiles.
+
+Every random path — pool init, synthetic traffic, router training, the
+trace arrival/content sampling, and the prompt token RNG — derives from
+``--seed``, so runs are reproducible end to end.
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
@@ -20,11 +26,21 @@ from repro.core import build_model_embeddings
 from repro.core.router import PredictiveRouter
 from repro.data import generate
 from repro.models import lm as lm_mod
-from repro.serving import PoolMember, RoutedEngine, arch_cost_rate
+from repro.serving import (
+    BudgetGovernor,
+    MicroBatchScheduler,
+    PoolMember,
+    RoutedEngine,
+    SchedulerConfig,
+    TraceConfig,
+    arch_cost_rate,
+    default_service_model,
+    make_trace,
+)
 from repro.training import train_dual_predictors
 
 
-def build_pool(names, seed: int = 0, vocab: int = 512):
+def build_pool(names, seed: int = 0):
     """Reduced configs execute on CPU; cost rates come from the FULL
     configs (the economics the router must learn are those of the real
     architectures, not of the smoke-test stand-ins)."""
@@ -58,41 +74,97 @@ def synthetic_pool_traffic(pool, n: int = 1200, seed: int = 0):
     return data, quality, cost
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pool", default="qwen3-0.6b,granite-moe-1b-a400m,granite-3-8b")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--lam", type=float, default=1.0)
-    ap.add_argument("--epochs", type=int, default=120)
-    args = ap.parse_args()
-
-    names = args.pool.split(",")
-    pool = build_pool(names)
-    data, quality, cost = synthetic_pool_traffic(pool)
-    tr, va, te = data.split()
-
-    memb, _ = build_model_embeddings(data.emb[tr], quality[tr])
+def build_routed_engine(names, *, seed: int = 0, epochs: int = 120,
+                        lam: float = 1.0, n_traffic: int = 1200,
+                        use_pallas: bool = False):
+    """Pool + trained router + engine, all seeded. Returns (engine, data, te)."""
+    pool = build_pool(names, seed=seed)
+    data, quality, cost = synthetic_pool_traffic(pool, n=n_traffic, seed=seed)
+    tr, va, te = data.split(seed=seed)
+    memb, _ = build_model_embeddings(data.emb[tr], quality[tr], seed=seed)
     qp, cp, scaler, _ = train_dual_predictors(
         "attn", "attn", data.emb[tr], quality[tr], cost[tr], memb,
         q_emb_val=data.emb[va], quality_val=quality[va], cost_val=cost[va],
-        epochs=args.epochs,
+        epochs=epochs, seed=seed,
     )
     router = PredictiveRouter("attn", "attn", qp, cp, memb,
                               reward="R2", cost_scaler=scaler)
-    engine = RoutedEngine(router=router, pool=pool, lam=args.lam)
+    engine = RoutedEngine(router=router, pool=pool, lam=lam,
+                          use_pallas=use_pallas)
+    return engine, data, te
 
-    texts = [data.texts[i] for i in te[: args.requests]]
-    prompts = jnp.asarray(
-        np.random.default_rng(0).integers(
-            0, min(m.cfg.vocab_size for m in pool), size=(len(texts), 16)
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pool", default="qwen3-0.6b,granite-moe-1b-a400m,granite-3-8b")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--trace", default="poisson",
+                    choices=("poisson", "bursty", "drift"))
+    ap.add_argument("--rate", type=float, default=400.0,
+                    help="mean arrivals per virtual second")
+    ap.add_argument("--lam", type=float, default=1.0,
+                    help="nominal willingness-to-pay")
+    ap.add_argument("--budget", type=float, default=0.0,
+                    help="$ budget per rolling window (0 disables governor)")
+    ap.add_argument("--budget-window", type=float, default=0.5,
+                    help="governor window, virtual seconds")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds pool init, traffic, training, trace and prompts")
+    ap.add_argument("--epochs", type=int, default=80)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait", type=float, default=0.05)
+    ap.add_argument("--score-batch", type=int, default=64)
+    ap.add_argument("--queue-capacity", type=int, default=512)
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline, virtual seconds after arrival")
+    ap.add_argument("--pallas", action="store_true",
+                    help="score through the fused Pallas router_xattn path")
+    ap.add_argument("--wall-time", action="store_true",
+                    help="advance the virtual clock by measured wall time "
+                         "instead of the deterministic service model")
+    args = ap.parse_args(argv)
+
+    names = args.pool.split(",")
+    engine, data, te = build_routed_engine(
+        names, seed=args.seed, epochs=args.epochs, lam=args.lam,
+        use_pallas=args.pallas)
+
+    trace = make_trace(
+        TraceConfig(
+            kind=args.trace, n_requests=args.requests, rate=args.rate,
+            seed=args.seed, max_new=args.max_new, deadline_s=args.deadline,
+            prompt_len_max=48,
+            vocab=min(m.cfg.vocab_size for m in engine.pool),
         ),
-        jnp.int32,
+        texts=[data.texts[i] for i in te],
+        benchmarks=[data.benchmark[i] for i in te],
     )
-    result = engine.serve(texts, prompts, max_new=4)
-    print("routed counts per member:",
-          dict(zip(names, result["per_member_counts"].tolist())))
-    print(f"total cost ${result['total_cost']:.6f}  "
-          f"latency {result['latency_s']:.2f}s")
+
+    governor = None
+    if args.budget > 0:
+        governor = BudgetGovernor(args.budget, args.budget_window,
+                                  lam0=args.lam)
+    sched = MicroBatchScheduler(
+        engine,
+        SchedulerConfig(score_batch=args.score_batch,
+                        max_batch=args.max_batch,
+                        max_wait_s=args.max_wait,
+                        queue_capacity=args.queue_capacity),
+        governor=governor,
+        service_time=None if args.wall_time else default_service_model(),
+    )
+    summary = sched.run_trace(trace)
+
+    print(f"trace={args.trace} requests={args.requests} seed={args.seed}")
+    print(sched.telemetry.report(summary.get("duration_s")))
+    if governor is not None:
+        g = governor.summary(sched.clock.now)
+        print(f"budget ${g['budget_per_window']:.4f}/{args.budget_window}s "
+              f"window  spend ${g['total_spend']:.6f}  "
+              f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
+              f"tightened x{int(g['tightened'])} relaxed x{int(g['relaxed'])}")
+    return summary
 
 
 if __name__ == "__main__":

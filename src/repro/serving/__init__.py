@@ -1,9 +1,40 @@
-"""Routed serving: the paper's router as a first-class serving feature."""
+"""Routed serving: the paper's router as a first-class streaming runtime.
+
+Layers (bottom up): :mod:`engine` — stateless scoring/dispatch core;
+:mod:`queue` — bounded admission with deadlines/backpressure;
+:mod:`budget` — rolling $/window governor steering effective lambda;
+:mod:`scheduler` — continuous micro-batching over the queue;
+:mod:`traffic` — open-loop scenario traces; :mod:`telemetry` — metrics.
+"""
+from repro.serving.budget import BudgetGovernor
 from repro.serving.engine import (
     DOLLARS_PER_TFLOP,
     PoolMember,
     RoutedEngine,
     arch_cost_rate,
+    pad_prompts,
 )
+from repro.serving.queue import (
+    DONE,
+    EXPIRED,
+    PENDING,
+    REJECTED,
+    AdmissionQueue,
+    Request,
+)
+from repro.serving.scheduler import (
+    MicroBatchScheduler,
+    SchedulerConfig,
+    SimClock,
+    default_service_model,
+)
+from repro.serving.telemetry import Histogram, Telemetry
+from repro.serving.traffic import TRACE_KINDS, TraceConfig, make_trace
 
-__all__ = ["DOLLARS_PER_TFLOP", "PoolMember", "RoutedEngine", "arch_cost_rate"]
+__all__ = [
+    "DOLLARS_PER_TFLOP", "PoolMember", "RoutedEngine", "arch_cost_rate",
+    "pad_prompts", "AdmissionQueue", "Request", "PENDING", "DONE", "REJECTED",
+    "EXPIRED", "BudgetGovernor", "MicroBatchScheduler", "SchedulerConfig",
+    "SimClock", "default_service_model", "Histogram", "Telemetry",
+    "TRACE_KINDS", "TraceConfig", "make_trace",
+]

@@ -1,6 +1,6 @@
 """Routed serving engine: the paper's router fronting the architecture pool.
 
-Flow per request batch:
+Flow per score batch:
     text -> featurizer -> dual predictors (quality, cost) -> reward argmax
          -> dispatch to the chosen pool member's generate loop.
 
@@ -10,16 +10,20 @@ from its *active* parameter count — 2*N_active FLOPs/token at a fixed
 $/FLOP — so the router's cost axis is grounded in real model economics
 rather than API price tables.
 
-The router's scoring hot path runs through the fused Pallas kernel
-(``repro.kernels.ops.router_xattn``) when the quality predictor is the
-attention variant on TPU; elsewhere it falls back to the jnp reference path
-(identical math, see kernels/ref.py).
+:class:`RoutedEngine` is the *stateless* scoring/dispatch core: it owns no
+queue, no clock, and no budget — the streaming scheduler
+(:mod:`repro.serving.scheduler`) drives it. The router's scoring hot path
+runs through the fused Pallas kernel (``repro.kernels.ops.router_xattn_pool``)
+when the quality predictor is the attention variant, with the pool-side
+K~/V~ projections computed once per pool and reused across every score
+batch; elsewhere it falls back to the jnp reference path (identical math,
+see kernels/ref.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,53 +58,129 @@ class PoolMember:
         return lm_mod.greedy_generate(self.cfg, self.params, prompts, max_new)
 
 
+def pad_prompts(prompts: Sequence[np.ndarray], pad_id: int = 0) -> jax.Array:
+    """Left-pad variable-length token rows into one (B, S_max) int32 batch.
+
+    Left padding keeps the *last* prompt position real, which is what the
+    greedy prefill conditions the first generated token on.
+
+    Known limitation: the pool's smoke LMs have no prefill attention mask,
+    so pad positions are attended and a request's generated tokens can
+    depend on its micro-batch neighbors' lengths. Runs are reproducible
+    (same seed -> same batching -> same outputs), but outputs are not
+    invariant to batch composition until masked prefill lands (ROADMAP).
+    """
+    s_max = max(int(len(p)) for p in prompts)
+    out = np.full((len(prompts), s_max), pad_id, np.int32)
+    for i, p in enumerate(prompts):
+        p = np.asarray(p, np.int32)
+        out[i, s_max - len(p):] = p
+    return jnp.asarray(out)
+
+
 @dataclasses.dataclass
 class RoutedEngine:
+    """Stateless scoring/dispatch core driven by the streaming scheduler.
+
+    Holds only the trained router and the model pool; every method is a pure
+    function of its arguments (plus the lazily cached per-pool K~/V~
+    projections, invalidated via :meth:`refresh_pool`).
+    """
+
     router: PredictiveRouter
     pool: List[PoolMember]
     lam: float = 1.0
     use_pallas: bool = False
+    _pool_proj: Optional[Tuple[jax.Array, jax.Array]] = dataclasses.field(
+        default=None, repr=False)
+
+    # -- scoring ------------------------------------------------------------
+
+    def pool_projections(self) -> Tuple[jax.Array, jax.Array]:
+        """Cached pool-side K~/V~ for the fused scoring path (once per pool)."""
+        if self._pool_proj is None:
+            qp = self.router.quality_params
+            self._pool_proj = kops.pool_projections(
+                qp["wk"], qp["wv"], jnp.asarray(self.router.model_emb))
+        return self._pool_proj
+
+    def refresh_pool(self) -> None:
+        """Invalidate cached projections after the pool/router changes."""
+        self._pool_proj = None
 
     def _scores(self, q_emb: np.ndarray):
         if self.use_pallas and self.router.quality_kind == "attn":
             qp = self.router.quality_params
-            s_hat = np.asarray(kops.router_xattn(
-                jnp.asarray(q_emb), qp["wq"], qp["wk"], qp["wv"],
-                qp["wo"], qp["bo"], jnp.asarray(self.router.model_emb),
-            ))
+            kt, vt = self.pool_projections()
+            # Bucket the batch dim to multiples of 64 *outside* the jit
+            # boundary: scheduler batches vary per round, and jit keys on
+            # the raw shape — without bucketing every distinct batch size
+            # would retrace and recompile the kernel.
+            b = q_emb.shape[0]
+            b_pad = -(-b // 64) * 64
+            q = jnp.asarray(np.pad(np.asarray(q_emb, np.float32),
+                                   ((0, b_pad - b), (0, 0))))
+            s_hat = np.asarray(kops.router_xattn_pool(
+                q, qp["wq"], kt, vt, qp["wo"], qp["bo"]))[:b]
             cp = self.router.cost_params
-            c_hat = np.asarray(PREDICTORS[self.router.cost_kind].apply(
-                cp, jnp.asarray(q_emb), jnp.asarray(self.router.model_emb)))
-            if self.router.cost_scaler is not None:
-                c_hat = c_hat * self.router.cost_scaler["sd"] + self.router.cost_scaler["mu"]
-            return s_hat, np.maximum(c_hat, 0.0)
+            c_hat = self.router.denormalize_cost(
+                PREDICTORS[self.router.cost_kind].apply(
+                    cp, jnp.asarray(q_emb), jnp.asarray(self.router.model_emb)))
+            return s_hat, c_hat
         return self.router.predict(q_emb)
 
-    def route_texts(self, texts: Sequence[str]) -> np.ndarray:
-        emb = embed_texts(texts)
-        s_hat, c_hat = self._scores(emb)
-        r = REWARDS[self.router.reward](s_hat, c_hat, self.lam)
+    def score_texts(self, texts: Sequence[str]):
+        """(s_hat, c_hat), both (B, K) — one fused pass over the batch."""
+        return self._scores(embed_texts(texts))
+
+    def choose(self, s_hat: np.ndarray, c_hat: np.ndarray,
+               lam: Optional[float] = None) -> np.ndarray:
+        """Reward argmax over the pool at willingness-to-pay ``lam``."""
+        lam = self.lam if lam is None else lam
+        r = REWARDS[self.router.reward](s_hat, c_hat, lam)
         return np.argmax(np.asarray(r), axis=-1)
+
+    def route_texts(self, texts: Sequence[str],
+                    lam: Optional[float] = None) -> np.ndarray:
+        s_hat, c_hat = self.score_texts(texts)
+        return self.choose(s_hat, c_hat, lam)
+
+    # -- dispatch -----------------------------------------------------------
+
+    def generate_member(self, member_idx: int, prompts: Sequence[np.ndarray],
+                        max_new: int = 8) -> Tuple[List[np.ndarray], float]:
+        """Run one generate micro-batch on a pool member.
+
+        ``prompts`` are variable-length token rows; they are left-padded into
+        one batch. Returns (per-request output tokens, $ cost of the call).
+        """
+        member = self.pool[member_idx]
+        toks = member.generate(pad_prompts(prompts), max_new=max_new)
+        outs = [np.asarray(toks[i]) for i in range(len(prompts))]
+        return outs, member.cost_rate * len(prompts)
 
     def serve(self, texts: Sequence[str], prompts: jax.Array,
               max_new: int = 8) -> Dict:
-        """Route a batch and run generation on each chosen member.
+        """One-shot batch serving (no queue): route, then generate.
 
-        ``prompts`` are the token ids (same order as texts). Requests routed
-        to the same member are batched into one generate call.
+        Requests routed to the same member are coalesced into one generate
+        call. The streaming scheduler supersedes this for sustained traffic;
+        it remains the simple synchronous entry point.
         """
         t0 = time.time()
         choices = self.route_texts(texts)
         out_tokens = [None] * len(texts)
         total_cost = 0.0
-        for mi, member in enumerate(self.pool):
+        prompts = np.asarray(prompts)
+        for mi in range(len(self.pool)):
             idx = np.flatnonzero(choices == mi)
             if len(idx) == 0:
                 continue
-            toks = member.generate(prompts[idx], max_new=max_new)
+            outs, cost = self.generate_member(
+                mi, [prompts[i] for i in idx], max_new=max_new)
             for j, ii in enumerate(idx):
-                out_tokens[ii] = np.asarray(toks[j])
-            total_cost += member.cost_rate * len(idx)
+                out_tokens[ii] = outs[j]
+            total_cost += cost
         return {
             "choices": choices,
             "outputs": out_tokens,

@@ -1,0 +1,115 @@
+"""Admission queue for the streaming serving runtime.
+
+Open-loop traffic lands here before the micro-batching scheduler drains it.
+Admission control is explicit: a bounded queue exerts *backpressure* by
+rejecting arrivals when full (the client-visible 429), and per-request
+*deadlines* expire requests that waited too long to be worth serving
+(routing latency budgets in the RouterBench setting are milliseconds; a
+request that missed its deadline only wastes pool capacity).
+
+Everything is driven by an externally supplied clock value ``now`` — the
+queue itself never reads wall time, which keeps the runtime deterministic
+under the simulator's virtual clock and testable without sleeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+_REQUEST_IDS = itertools.count()
+
+# Request lifecycle states.
+PENDING = "pending"    # admitted, waiting in queue
+DONE = "done"          # served; ``output`` holds the generated tokens
+REJECTED = "rejected"  # backpressure: queue was full at arrival
+EXPIRED = "expired"    # deadline passed before service started
+
+
+@dataclasses.dataclass
+class Request:
+    """One routed generation request flowing through the runtime."""
+
+    text: str                          # prompt text (what the router scores)
+    prompt: np.ndarray                 # token ids for the chosen member
+    max_new: int = 8
+    arrival_s: float = 0.0             # trace arrival time (virtual clock)
+    deadline_s: Optional[float] = None # absolute; None = never expires
+    rid: int = dataclasses.field(default_factory=lambda: next(_REQUEST_IDS))
+
+    # Filled in by the runtime.
+    status: str = PENDING
+    member: int = -1                   # routed pool member index
+    admitted_s: float = float("nan")
+    service_start_s: float = float("nan")
+    finish_s: float = float("nan")
+    cost: float = 0.0
+    output: Optional[np.ndarray] = None
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.service_start_s - self.arrival_s
+
+    @property
+    def e2e_latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+class AdmissionQueue:
+    """Bounded FIFO with deadline expiry and admission counters."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._items: Deque[Request] = deque()
+        self.admitted = 0
+        self.rejected = 0
+        self.expired = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self._items)
+
+    def offer(self, req: Request, now: float) -> bool:
+        """Admit ``req`` if there is room; reject (backpressure) otherwise."""
+        if len(self._items) >= self.capacity:
+            req.status = REJECTED
+            self.rejected += 1
+            return False
+        req.admitted_s = now
+        self._items.append(req)
+        self.admitted += 1
+        return True
+
+    def expire(self, now: float) -> List[Request]:
+        """Drop queued requests whose deadline has passed."""
+        survivors: Deque[Request] = deque()
+        dropped: List[Request] = []
+        for req in self._items:
+            if req.deadline_s is not None and req.deadline_s < now:
+                req.status = EXPIRED
+                req.finish_s = now
+                dropped.append(req)
+            else:
+                survivors.append(req)
+        self._items = survivors
+        self.expired += len(dropped)
+        return dropped
+
+    def pop(self, n: int) -> List[Request]:
+        """Dequeue up to ``n`` requests in arrival order."""
+        out = []
+        while self._items and len(out) < n:
+            out.append(self._items.popleft())
+        return out
+
+    def oldest_wait(self, now: float) -> float:
+        """Seconds the head-of-line request has waited (0 when empty)."""
+        if not self._items:
+            return 0.0
+        return now - self._items[0].admitted_s
+
+    def peek_all(self) -> Sequence[Request]:
+        return tuple(self._items)

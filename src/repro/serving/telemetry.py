@@ -1,0 +1,167 @@
+"""Serving telemetry: counters, latency histograms, spend, queue depth.
+
+Everything the acceptance report needs — per-member routed counts and spend,
+p50/p99 routing + end-to-end latency, queue-depth snapshots — collected with
+plain counters and fixed log-spaced histogram buckets (no per-request lists,
+so memory stays O(buckets) at any traffic volume).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Deque, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class Histogram:
+    """Log-bucketed latency histogram with interpolated percentiles."""
+
+    def __init__(self, lo: float = 1e-6, hi: float = 1e3, n_buckets: int = 90):
+        self.edges = np.logspace(math.log10(lo), math.log10(hi), n_buckets + 1)
+        self.counts = np.zeros(n_buckets + 2, np.int64)  # +under/overflow
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def record(self, value: float) -> None:
+        self.counts[int(np.searchsorted(self.edges, value, side="right"))] += 1
+        self.count += 1
+        self.total += value
+        self.min = min(self.min, value)
+        self.max = max(self.max, value)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else float("nan")
+
+    def percentile(self, p: float) -> float:
+        """Approximate percentile (log-interpolated inside the bucket)."""
+        if self.count == 0:
+            return float("nan")
+        target = p / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if seen + c >= target and c > 0:
+                if i == 0:
+                    return self.min
+                if i >= len(self.edges):
+                    return self.max
+                lo, hi = self.edges[i - 1], self.edges[i]
+                frac = (target - seen) / c
+                est = lo * (hi / lo) ** frac
+                return min(max(est, self.min), self.max)
+            seen += c
+        return self.max
+
+
+class Telemetry:
+    """Aggregated serving-runtime metrics for one run."""
+
+    def __init__(self, member_names: Sequence[str]):
+        self.member_names = list(member_names)
+        k = len(self.member_names)
+        self.member_counts = np.zeros(k, np.int64)
+        self.member_spend = np.zeros(k, np.float64)
+        self.member_tokens = np.zeros(k, np.int64)
+        self.generate_calls = 0
+        self.score_batches = 0
+        self.scored_requests = 0
+        self.completed = 0
+        self.rejected = 0
+        self.expired = 0
+        self.routing_latency = Histogram()    # wall s per score batch
+        self.queue_wait = Histogram()         # virtual s, arrival -> service
+        self.e2e_latency = Histogram()        # virtual s, arrival -> finish
+        self.batch_size_sum = 0               # generate micro-batch sizes
+        self.max_queue_depth = 0
+        self.depth_samples = 0
+        # Effective-lambda trace, bounded: enough to inspect governor
+        # behaviour without growing with traffic volume.
+        self.lam_trace: Deque[Tuple[float, float]] = deque(maxlen=4096)
+
+    # -- recording ----------------------------------------------------------
+
+    def record_score_batch(self, n_requests: int, wall_s: float) -> None:
+        self.score_batches += 1
+        self.scored_requests += n_requests
+        self.routing_latency.record(wall_s)
+
+    def record_generate(self, member: int, n_requests: int, tokens: int,
+                        cost: float) -> None:
+        self.generate_calls += 1
+        self.batch_size_sum += n_requests
+        self.member_counts[member] += n_requests
+        self.member_tokens[member] += tokens
+        self.member_spend[member] += cost
+
+    def record_completion(self, queue_wait_s: float, e2e_s: float) -> None:
+        self.completed += 1
+        self.queue_wait.record(queue_wait_s)
+        self.e2e_latency.record(e2e_s)
+
+    def record_queue_depth(self, now: float, depth: int) -> None:
+        self.max_queue_depth = max(self.max_queue_depth, depth)
+        self.depth_samples += 1
+
+    def record_lambda(self, now: float, lam: float) -> None:
+        self.lam_trace.append((now, lam))
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def total_spend(self) -> float:
+        return float(self.member_spend.sum())
+
+    def summary(self, duration_s: Optional[float] = None) -> Dict:
+        out = {
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "expired": self.expired,
+            "per_member_counts": dict(
+                zip(self.member_names, self.member_counts.tolist())),
+            "per_member_spend": dict(
+                zip(self.member_names, self.member_spend.tolist())),
+            "total_spend": self.total_spend,
+            "generate_calls": self.generate_calls,
+            "score_batches": self.score_batches,
+            "mean_generate_batch": (self.batch_size_sum / self.generate_calls
+                                    if self.generate_calls else 0.0),
+            "routing_p50_ms": self.routing_latency.percentile(50) * 1e3,
+            "routing_p99_ms": self.routing_latency.percentile(99) * 1e3,
+            "queue_wait_p50_ms": self.queue_wait.percentile(50) * 1e3,
+            "queue_wait_p99_ms": self.queue_wait.percentile(99) * 1e3,
+            "e2e_p50_ms": self.e2e_latency.percentile(50) * 1e3,
+            "e2e_p99_ms": self.e2e_latency.percentile(99) * 1e3,
+            "max_queue_depth": self.max_queue_depth,
+        }
+        if duration_s:
+            out["duration_s"] = duration_s
+            out["requests_per_s"] = self.completed / duration_s
+        return out
+
+    def report(self, duration_s: Optional[float] = None) -> str:
+        s = self.summary(duration_s)
+        lines = [
+            f"completed {s['completed']}  rejected {s['rejected']}  "
+            f"expired {s['expired']}",
+            "per-member counts: " + "  ".join(
+                f"{n}={c}" for n, c in s["per_member_counts"].items()),
+            "per-member spend:  " + "  ".join(
+                f"{n}=${v:.6f}" for n, v in s["per_member_spend"].items()),
+            f"total spend ${s['total_spend']:.6f}   "
+            f"generate calls {s['generate_calls']} "
+            f"(mean batch {s['mean_generate_batch']:.1f})",
+            f"routing latency p50 {s['routing_p50_ms']:.2f}ms  "
+            f"p99 {s['routing_p99_ms']:.2f}ms  "
+            f"({s['score_batches']} score batches)",
+            f"queue wait p50 {s['queue_wait_p50_ms']:.1f}ms  "
+            f"p99 {s['queue_wait_p99_ms']:.1f}ms   "
+            f"e2e p50 {s['e2e_p50_ms']:.1f}ms  p99 {s['e2e_p99_ms']:.1f}ms",
+            f"max queue depth {s['max_queue_depth']}",
+        ]
+        if duration_s:
+            lines.append(f"duration {s['duration_s']:.2f}s  "
+                         f"throughput {s['requests_per_s']:.1f} req/s")
+        return "\n".join(lines)
