@@ -16,6 +16,7 @@ from benchmarks import (
     fig4_5_domains,
     fig6_distribution,
     kernel_bench,
+    online_bench,
     roofline,
     serving_bench,
     table1_rewards,
@@ -32,6 +33,7 @@ SUITES = {
     "kernels": kernel_bench.main,
     "roofline": roofline.main,
     "serving": serving_bench.main,
+    "online": online_bench.main,
 }
 
 

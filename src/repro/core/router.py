@@ -22,6 +22,62 @@ from repro.core.metrics import DEFAULT_LAMBDA_GRID, evaluate_router
 from repro.core.predictors import PREDICTORS
 
 
+def _expand_pool_axis(kind: str, params: Dict) -> Dict:
+    """Grow a non-pool-free predictor's output head by one member column.
+
+    The new column is cold-started at the mean of the existing columns, so
+    the added member initially predicts like "an average pool member" and
+    online outcome gradients (which for these heads flow only into the
+    routed member's column) specialize it from there.
+    """
+    if PREDICTORS[kind].pool_free:
+        return params
+    p = dict(params)
+    if kind == "attn":
+        w_key, b_key = "wo", "bo"
+    elif kind == "reg":
+        w_key, b_key = "w", "b"
+    elif kind in ("2fcn", "3fcn"):
+        last = f"layer{len(params) - 1}"
+        inner = dict(params[last])
+        inner["w"] = jnp.concatenate(
+            [inner["w"], inner["w"].mean(axis=1, keepdims=True)], axis=1)
+        inner["b"] = jnp.concatenate(
+            [inner["b"], inner["b"].mean(keepdims=True)])
+        p[last] = inner
+        return p
+    else:  # pragma: no cover - new predictor kinds must declare a policy
+        raise ValueError(f"no pool-expansion rule for predictor {kind!r}")
+    p[w_key] = jnp.concatenate(
+        [params[w_key], params[w_key].mean(axis=1, keepdims=True)], axis=1)
+    p[b_key] = jnp.concatenate(
+        [params[b_key], params[b_key].mean(keepdims=True)])
+    return p
+
+
+def _drop_pool_axis(kind: str, params: Dict, idx: int) -> Dict:
+    """Remove member ``idx``'s column from a non-pool-free output head."""
+    if PREDICTORS[kind].pool_free:
+        return params
+    p = dict(params)
+    if kind == "attn":
+        w_key, b_key = "wo", "bo"
+    elif kind == "reg":
+        w_key, b_key = "w", "b"
+    elif kind in ("2fcn", "3fcn"):
+        last = f"layer{len(params) - 1}"
+        inner = dict(params[last])
+        inner["w"] = jnp.delete(inner["w"], idx, axis=1)
+        inner["b"] = jnp.delete(inner["b"], idx, axis=0)
+        p[last] = inner
+        return p
+    else:  # pragma: no cover
+        raise ValueError(f"no pool-removal rule for predictor {kind!r}")
+    p[w_key] = jnp.delete(params[w_key], idx, axis=1)
+    p[b_key] = jnp.delete(params[b_key], idx, axis=0)
+    return p
+
+
 @dataclasses.dataclass
 class PredictiveRouter:
     quality_kind: str
@@ -31,6 +87,89 @@ class PredictiveRouter:
     model_emb: np.ndarray            # (K, C)
     reward: str = "R2"
     cost_scaler: Optional[Dict] = None   # {"mu","sd"} from the cost trainer
+    # Online-adaptation state: params are versioned so the serving engine
+    # can swap whole routers atomically and reject stale publishes, and the
+    # k-means centroids behind the model embeddings ride along so members
+    # added at runtime can be embedded per-cluster from live outcomes.
+    version: int = 0
+    centroids: Optional[np.ndarray] = None   # (C, d_query) from clustering
+
+    @property
+    def n_members(self) -> int:
+        return int(np.asarray(self.model_emb).shape[0])
+
+    def with_updates(
+        self,
+        quality_params: Optional[Dict] = None,
+        cost_params: Optional[Dict] = None,
+        model_emb: Optional[np.ndarray] = None,
+    ) -> "PredictiveRouter":
+        """Next router version with some state replaced (never mutated).
+
+        The returned object shares unreplaced leaves with ``self`` — safe
+        because routers are treated as immutable; publishing is a single
+        reference swap on the engine (see ``RoutedEngine.swap_router``).
+        """
+        return dataclasses.replace(
+            self,
+            quality_params=(self.quality_params if quality_params is None
+                            else quality_params),
+            cost_params=self.cost_params if cost_params is None else cost_params,
+            model_emb=self.model_emb if model_emb is None else model_emb,
+            version=self.version + 1,
+        )
+
+    def add_member(self, emb_row: Optional[np.ndarray] = None) -> "PredictiveRouter":
+        """Grow the pool by one member (hot membership).
+
+        ``emb_row`` (C,) is the new member's model embedding; defaults to
+        the mean of the existing rows (a maximally non-committal prior —
+        the online membership tracker replaces it with per-cluster observed
+        quality as outcomes arrive). Non-pool-free predictor heads grow a
+        cold-started output column.
+        """
+        memb = np.asarray(self.model_emb)
+        if emb_row is None:
+            emb_row = memb.mean(axis=0)
+        emb_row = np.asarray(emb_row, memb.dtype).reshape(1, -1)
+        scaler = self.cost_scaler
+        if scaler is not None and np.ndim(scaler["mu"]) == 1:
+            scaler = {
+                "mu": np.append(scaler["mu"], scaler["mu"].mean()),
+                "sd": np.append(scaler["sd"], scaler["sd"].mean()),
+            }
+        return dataclasses.replace(
+            self,
+            quality_params=_expand_pool_axis(self.quality_kind,
+                                             self.quality_params),
+            cost_params=_expand_pool_axis(self.cost_kind, self.cost_params),
+            model_emb=np.concatenate([memb, emb_row], axis=0),
+            cost_scaler=scaler,
+            version=self.version + 1,
+        )
+
+    def remove_member(self, idx: int) -> "PredictiveRouter":
+        """Shrink the pool: drop member ``idx`` (members above shift down)."""
+        memb = np.asarray(self.model_emb)
+        if not 0 <= idx < memb.shape[0]:
+            raise IndexError(f"member {idx} out of range 0..{memb.shape[0]-1}")
+        if memb.shape[0] <= 1:
+            raise ValueError("cannot remove the last pool member")
+        scaler = self.cost_scaler
+        if scaler is not None and np.ndim(scaler["mu"]) == 1:
+            scaler = {
+                "mu": np.delete(scaler["mu"], idx),
+                "sd": np.delete(scaler["sd"], idx),
+            }
+        return dataclasses.replace(
+            self,
+            quality_params=_drop_pool_axis(self.quality_kind,
+                                           self.quality_params, idx),
+            cost_params=_drop_pool_axis(self.cost_kind, self.cost_params, idx),
+            model_emb=np.delete(memb, idx, axis=0),
+            cost_scaler=scaler,
+            version=self.version + 1,
+        )
 
     def denormalize_cost(self, c_hat: np.ndarray) -> np.ndarray:
         """Undo the cost trainer's target normalization and clamp at zero.

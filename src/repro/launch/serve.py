@@ -58,18 +58,22 @@ def build_pool(names, seed: int = 0):
     return members
 
 
-def synthetic_pool_traffic(pool, n: int = 1200, seed: int = 0):
-    """Map synthetic RouterBench quality columns onto the pool members by
-    cost order (cheapest member <- cheapest API model, etc.)."""
-    data = generate(n, seed=seed)
+def pool_quality_columns(pool, data) -> list:
+    """RouterBench quality columns for the pool members, matched by cost
+    order (cheapest member <- cheapest API model, etc.)."""
     api_cost_order = np.argsort(data.cost.mean(0))          # cheap -> pricey
     member_rank = np.argsort(np.argsort([m.cost_rate for m in pool]))
     k_api, p = len(api_cost_order), len(pool)
-    cols = [
+    return [
         int(api_cost_order[int(round(member_rank[i] * (k_api - 1) / max(p - 1, 1)))])
         for i in range(p)
     ]
-    quality = data.quality[:, cols]                          # pool order
+
+
+def synthetic_pool_traffic(pool, n: int = 1200, seed: int = 0):
+    """Map synthetic RouterBench quality columns onto the pool members."""
+    data = generate(n, seed=seed)
+    quality = data.quality[:, pool_quality_columns(pool, data)]  # pool order
     cost = np.stack([np.full(n, m.cost_rate) for m in pool], axis=1)
     return data, quality, cost
 
@@ -81,14 +85,17 @@ def build_routed_engine(names, *, seed: int = 0, epochs: int = 120,
     pool = build_pool(names, seed=seed)
     data, quality, cost = synthetic_pool_traffic(pool, n=n_traffic, seed=seed)
     tr, va, te = data.split(seed=seed)
-    memb, _ = build_model_embeddings(data.emb[tr], quality[tr], seed=seed)
+    memb, centers = build_model_embeddings(data.emb[tr], quality[tr], seed=seed)
     qp, cp, scaler, _ = train_dual_predictors(
         "attn", "attn", data.emb[tr], quality[tr], cost[tr], memb,
         q_emb_val=data.emb[va], quality_val=quality[va], cost_val=cost[va],
         epochs=epochs, seed=seed,
     )
+    # Centroids ride on the router so online hot-added members can be
+    # embedded per-cluster from live outcomes (repro.online.membership).
     router = PredictiveRouter("attn", "attn", qp, cp, memb,
-                              reward="R2", cost_scaler=scaler)
+                              reward="R2", cost_scaler=scaler,
+                              centroids=centers)
     engine = RoutedEngine(router=router, pool=pool, lam=lam,
                           use_pallas=use_pallas)
     return engine, data, te
@@ -123,6 +130,14 @@ def main(argv=None):
     ap.add_argument("--wall-time", action="store_true",
                     help="advance the virtual clock by measured wall time "
                          "instead of the deterministic service model")
+    ap.add_argument("--online", action="store_true",
+                    help="online adaptation: replay-buffered outcome "
+                         "feedback, drift detection, exploration, and "
+                         "incremental router updates during serving")
+    ap.add_argument("--online-update-every", type=int, default=32,
+                    help="outcomes between scheduled incremental updates")
+    ap.add_argument("--epsilon", type=float, default=0.05,
+                    help="exploration rate at full budget headroom")
     args = ap.parse_args(argv)
 
     names = args.pool.split(",")
@@ -145,6 +160,35 @@ def main(argv=None):
     if args.budget > 0:
         governor = BudgetGovernor(args.budget, args.budget_window,
                                   lam0=args.lam)
+
+    adapter = None
+    if args.online:
+        from repro.online import (
+            DriftDetector, ExplorationConfig, OnlineAdapter,
+            OnlineUpdateConfig,
+        )
+
+        # Quality feedback: the synthetic RouterBench truth stands in for
+        # user ratings / auto-eval (the held-out split is what the trace
+        # samples its texts from).
+        quality = data.quality[:, pool_quality_columns(engine.pool, data)]
+        qual_of_text = {data.texts[i]: quality[i] for i in range(len(data.texts))}
+
+        def quality_feedback(req):
+            return float(qual_of_text[req.text][req.member])
+
+        tr, _, _ = data.split(seed=args.seed)
+        drift = DriftDetector(window=48).fit(
+            data.emb[tr], engine.router.centroids)
+        adapter = OnlineAdapter(
+            engine, quality_feedback, governor=governor,
+            config=OnlineUpdateConfig(
+                update_every=args.online_update_every),
+            exploration=ExplorationConfig(epsilon=args.epsilon,
+                                          seed=args.seed),
+            drift=drift, seed=args.seed,
+        )
+
     sched = MicroBatchScheduler(
         engine,
         SchedulerConfig(score_batch=args.score_batch,
@@ -153,11 +197,14 @@ def main(argv=None):
                         queue_capacity=args.queue_capacity),
         governor=governor,
         service_time=None if args.wall_time else default_service_model(),
+        adapter=adapter,
     )
     summary = sched.run_trace(trace)
 
     print(f"trace={args.trace} requests={args.requests} seed={args.seed}")
     print(sched.telemetry.report(summary.get("duration_s")))
+    if adapter is not None:
+        print(adapter.report())
     if governor is not None:
         g = governor.summary(sched.clock.now)
         print(f"budget ${g['budget_per_window']:.4f}/{args.budget_window}s "

@@ -143,6 +143,7 @@ def flash_attention(
     q_chunk: int = 1024,
     k_chunk: int = 1024,
     softcap: float = 0.0,
+    kv_valid: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Causal (optionally sliding-window) attention, O(band) compute.
 
@@ -193,6 +194,11 @@ def flash_attention(
             if window > 0:
                 msk &= kpos[None, :] > qpos[:, None] - window
             scores = jnp.where(msk[None, None, None], scores, NEG_INF)
+            if kv_valid is not None:
+                vc_valid = jax.lax.dynamic_slice_in_dim(
+                    kv_valid, start, k_chunk, axis=1)
+                scores = jnp.where(
+                    vc_valid[:, None, None, None, :], scores, NEG_INF)
             m_new = jnp.maximum(m_prev, scores.max(axis=-1))
             alpha = jnp.exp(m_prev - m_new)
             probs = jnp.exp(scores - m_new[..., None])
@@ -224,8 +230,16 @@ def self_attention_full_seq(
     p: Dict,
     x: jax.Array,
     positions: jax.Array,
+    kv_valid: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Causal self attention over a full sequence (train / prefill)."""
+    """Causal self attention over a full sequence (train / prefill).
+
+    ``kv_valid`` (B, S) bool marks real (non-pad) key positions for
+    left-padded prefill micro-batches; None means all keys are real. RoPE
+    logits depend only on position *differences*, so masking pad keys is
+    sufficient for a left-padded row to attend exactly as its unpadded
+    self (positions are uniformly shifted by the pad count).
+    """
     b, s, _ = x.shape
     q = _project_q(cfg, p, x)
     k, v = _project_kv(cfg, p, x)
@@ -236,10 +250,13 @@ def self_attention_full_seq(
     v = shard(v, "batch", "seq", "kv_heads", None)
     if s >= FLASH_MIN_SEQ:
         out = flash_attention(
-            q, k, v, window=spec.window, softcap=cfg.attn_logit_softcap
+            q, k, v, window=spec.window, softcap=cfg.attn_logit_softcap,
+            kv_valid=kv_valid,
         )
     else:
         mask = causal_mask(s, s, window=spec.window)
+        if kv_valid is not None:
+            mask = mask & kv_valid[:, None, :]
         out = dense_attention(q, k, v, mask, cfg.attn_logit_softcap)
     out = out.reshape(b, s, -1)
     return out @ p["wo"]
@@ -290,6 +307,10 @@ def init_kv_cache(
         "v": jnp.zeros((batch, length, hkv, hd), dtype),
         # Absolute position stored in each slot (-1 = empty).
         "slot_pos": jnp.full((length,), -1, jnp.int32),
+        # Per-row slot validity: False where a left-padded prefill wrote a
+        # pad token (rows in a micro-batch have different pad counts, so
+        # this cannot live in the shared slot_pos).
+        "pad_valid": jnp.ones((batch, length), jnp.bool_),
     }
 
 
@@ -302,7 +323,13 @@ def _write_slot(cache: Dict, k_new, v_new, pos: jax.Array, ring: bool) -> Dict:
     slot_pos = jax.lax.dynamic_update_slice_in_dim(
         cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0
     )
-    return {**cache, "k": k, "v": v, "slot_pos": slot_pos}
+    # Decode tokens are always real: the slot becomes valid for every row.
+    pad_valid = jax.lax.dynamic_update_slice_in_dim(
+        cache["pad_valid"],
+        jnp.ones((cache["pad_valid"].shape[0], 1), jnp.bool_), slot, axis=1,
+    )
+    return {**cache, "k": k, "v": v, "slot_pos": slot_pos,
+            "pad_valid": pad_valid}
 
 
 def self_attention_decode(
@@ -326,12 +353,13 @@ def self_attention_decode(
     k, v = cache["k"], cache["v"]
     k = shard(k, "batch", "cache_seq", "kv_heads", None)
     v = shard(v, "batch", "cache_seq", "kv_heads", None)
-    # Valid = slot holds a position in (pos - W, pos].
+    # Valid = slot holds a position in (pos - W, pos] AND is not a pad
+    # written by a left-padded prefill (per-row).
     sp = cache["slot_pos"]
     valid = (sp >= 0) & (sp <= pos)
     if spec.window > 0:
         valid &= sp > pos - spec.window
-    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, k.shape[1]))
+    mask = valid[None, None, :] & cache["pad_valid"][:, None, :]
     out = dense_attention(q, k, v, mask, cfg.attn_logit_softcap)
     out = out.reshape(b, 1, -1)
     return out @ p["wo"], cache
@@ -367,16 +395,21 @@ def prefill_self_cache(
     x: jax.Array,
     positions: jax.Array,
     cache: Dict,
+    kv_valid: Optional[jax.Array] = None,
 ) -> Dict:
     """Fill a decode cache from a full prefill sequence.
 
     Ring caches keep only the trailing ``window`` tokens (the only ones a
-    future decode step may attend to).
+    future decode step may attend to). ``kv_valid`` (B, S) bool marks real
+    tokens of a left-padded batch; pad slots are written but flagged
+    invalid per-row so decode never attends them.
     """
     s = x.shape[1]
     k, v = _project_kv(cfg, p, x)
     k = apply_rope(k, positions, cfg.rope_theta)
     length = cache["k"].shape[1]
+    valid = (jnp.ones(x.shape[:2], jnp.bool_) if kv_valid is None
+             else kv_valid.astype(jnp.bool_))
     if spec.window > 0 and s >= length:
         # Trailing `length` positions land at slots pos % length.
         tail_pos = positions[0, s - length:]
@@ -385,7 +418,8 @@ def prefill_self_cache(
         v_tail = v[:, s - length:][:, order]
         slot_pos = tail_pos[order].astype(jnp.int32)
         return {**cache, "k": k_tail.astype(cache["k"].dtype),
-                "v": v_tail.astype(cache["v"].dtype), "slot_pos": slot_pos}
+                "v": v_tail.astype(cache["v"].dtype), "slot_pos": slot_pos,
+                "pad_valid": valid[:, s - length:][:, order]}
     n = min(s, length)
     k_c = jax.lax.dynamic_update_slice_in_dim(
         cache["k"], k[:, :n].astype(cache["k"].dtype), 0, axis=1)
@@ -393,4 +427,7 @@ def prefill_self_cache(
         cache["v"], v[:, :n].astype(cache["v"].dtype), 0, axis=1)
     slot_pos = jax.lax.dynamic_update_slice_in_dim(
         cache["slot_pos"], positions[0, :n].astype(jnp.int32), 0, axis=0)
-    return {**cache, "k": k_c, "v": v_c, "slot_pos": slot_pos}
+    pad_valid = jax.lax.dynamic_update_slice_in_dim(
+        cache["pad_valid"], valid[:, :n], 0, axis=1)
+    return {**cache, "k": k_c, "v": v_c, "slot_pos": slot_pos,
+            "pad_valid": pad_valid}

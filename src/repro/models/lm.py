@@ -113,12 +113,21 @@ def init_block_cache(cfg, spec, batch: int, max_len: int, dtype=jnp.float32):
     raise ValueError(spec.mixer)  # pragma: no cover
 
 
-def apply_block_prefill(cfg, spec, p, x, positions, media, cache):
-    """Full-sequence pass that also fills this block's decode cache."""
+def apply_block_prefill(cfg, spec, p, x, positions, media, cache,
+                        attn_mask=None):
+    """Full-sequence pass that also fills this block's decode cache.
+
+    ``attn_mask`` (B, S) bool marks real tokens of a left-padded batch;
+    attention blocks mask pad keys (and record per-row validity in the
+    decode cache). SSM/xLSTM mixers currently ignore it — their scans
+    still carry pad state (masked scans are a ROADMAP follow-up).
+    """
     h = apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
     if spec.mixer == ATTN:
-        y = attn_mod.self_attention_full_seq(cfg, spec, p["mixer"], h, positions)
-        cache = attn_mod.prefill_self_cache(cfg, spec, p["mixer"], h, positions, cache)
+        y = attn_mod.self_attention_full_seq(cfg, spec, p["mixer"], h, positions,
+                                             kv_valid=attn_mask)
+        cache = attn_mod.prefill_self_cache(cfg, spec, p["mixer"], h, positions,
+                                            cache, kv_valid=attn_mask)
     elif spec.mixer == XATTN:
         y = attn_mod.cross_attention_full_seq(cfg, p["mixer"], h, media)
         cache = attn_mod.prefill_cross_cache(cfg, p["mixer"], media, cache)
@@ -314,8 +323,12 @@ def abstract_caches(cfg, batch, max_len, dtype=jnp.float32):
     )
 
 
-def apply_lm_prefill(cfg, params, tokens, caches, media=None):
-    """Prefill: full forward + cache build. Returns (last_logits, caches)."""
+def apply_lm_prefill(cfg, params, tokens, caches, media=None, attn_mask=None):
+    """Prefill: full forward + cache build. Returns (last_logits, caches).
+
+    ``attn_mask`` (B, S) bool marks real tokens of a left-padded batch
+    (None = all real); see :func:`apply_block_prefill`.
+    """
     x = embed_tokens(params["embedding"], tokens)
     x = shard(x, "batch", "seq", "embed")
     positions = _positions(tokens)
@@ -326,7 +339,8 @@ def apply_lm_prefill(cfg, params, tokens, caches, media=None):
             new = []
             for j, spec in enumerate(pat):
                 x, c = apply_block_prefill(
-                    cfg, spec, pslice[j], x, positions, media, cslice[j]
+                    cfg, spec, pslice[j], x, positions, media, cslice[j],
+                    attn_mask=attn_mask,
                 )
                 new.append(c)
             x = shard(x, "batch", "seq", "embed")
@@ -368,7 +382,7 @@ def apply_lm_prefill(cfg, params, tokens, caches, media=None):
         for i, spec in enumerate(cfg.remainder):
             x, c = apply_block_prefill(
                 cfg, spec, params["remainder"][i], x, positions, media,
-                caches["remainder"][i],
+                caches["remainder"][i], attn_mask=attn_mask,
             )
             new_rem.append(c)
         new_caches["remainder"] = tuple(new_rem)
@@ -437,11 +451,18 @@ def apply_lm_decode(cfg, params, token, caches, pos):
     return lm_logits(params["embedding"], x), new_caches
 
 
-def greedy_generate(cfg, params, prompt, max_new: int, media=None, dtype=jnp.float32):
-    """Simple greedy decoding loop for the examples (not perf-critical)."""
+def greedy_generate(cfg, params, prompt, max_new: int, media=None,
+                    dtype=jnp.float32, attn_mask=None):
+    """Simple greedy decoding loop for the examples (not perf-critical).
+
+    ``attn_mask`` (B, S) bool marks real prompt tokens of a left-padded
+    batch so attention members' outputs are invariant to micro-batch
+    composition (see serving engine ``pad_prompts``).
+    """
     b, s = prompt.shape
     caches = init_caches(cfg, b, s + max_new, dtype)
-    logits, caches = apply_lm_prefill(cfg, params, prompt, caches, media)
+    logits, caches = apply_lm_prefill(cfg, params, prompt, caches, media,
+                                      attn_mask=attn_mask)
     tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None]
     out = [tok]
     for i in range(max_new - 1):

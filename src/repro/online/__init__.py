@@ -1,0 +1,27 @@
+"""Online adaptation: the served router learns from the traffic it serves.
+
+The offline pipeline trains the cross-attention router once on a static
+RouterBench dump; this package closes the loop for the streaming runtime —
+replay-buffered outcome feedback, bounded incremental updates published by
+atomic versioned swap, drift detection over query-embedding statistics,
+budget-aware exploration, and hot pool membership.
+
+Layers: :mod:`replay` — reservoir + recency outcome buffer; :mod:`updater`
+— warm-started masked Adam steps and router publishing; :mod:`drift` —
+windowed mean-shift/dispersion alarms (Pallas pairwise-L2 distances);
+:mod:`exploration` — epsilon-greedy + optimistic bonus at the scoring
+step; :mod:`membership` — runtime add/remove with probation; :mod:`loop` —
+the :class:`OnlineAdapter` the scheduler drives.
+"""
+from repro.online.drift import DriftDetector
+from repro.online.exploration import ExplorationConfig, ExplorationPolicy
+from repro.online.loop import OnlineAdapter
+from repro.online.membership import MembershipTracker
+from repro.online.replay import ReplayBuffer
+from repro.online.updater import IncrementalUpdater, OnlineUpdateConfig
+
+__all__ = [
+    "DriftDetector", "ExplorationConfig", "ExplorationPolicy",
+    "IncrementalUpdater", "MembershipTracker", "OnlineAdapter",
+    "OnlineUpdateConfig", "ReplayBuffer",
+]

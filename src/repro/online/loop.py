@@ -1,0 +1,170 @@
+"""OnlineAdapter: the feedback loop closing serve -> observe -> learn.
+
+Sits between the micro-batching scheduler and the online machinery:
+
+  * at the **scoring step** it replaces the plain reward argmax with the
+    exploration policy (epsilon annealed by budget-governor headroom,
+    optimistic bonus, probation masking);
+  * on **served outcomes** it fills the replay buffer, advances hot-member
+    probation, feeds the drift detector, and schedules bounded incremental
+    updates — a drift alarm triggers a concentrated burst plus a detector
+    re-anchor (recovery), steady state updates every ``update_every``
+    outcomes;
+  * every update **publishes** a new router version through the engine's
+    atomic swap.
+
+The quality feedback signal is a caller-supplied
+``quality_feedback(request) -> float in [0, 1]`` — a user rating, an
+auto-eval, or (in the simulator) the synthetic RouterBench truth.
+
+Determinism: policy and replay own seeded generators and the scheduler
+drives everything from the virtual clock, so a fixed seed replays the
+whole adapt cycle identically (tested in tests/test_online.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.rewards import REWARDS
+from repro.online.drift import DriftDetector
+from repro.online.exploration import ExplorationConfig, ExplorationPolicy
+from repro.online.membership import MembershipTracker
+from repro.online.replay import ReplayBuffer
+from repro.online.updater import IncrementalUpdater, OnlineUpdateConfig
+
+
+class OnlineAdapter:
+    def __init__(self, engine, quality_feedback: Callable[[object], float],
+                 *, governor=None,
+                 config: Optional[OnlineUpdateConfig] = None,
+                 exploration: Optional[ExplorationConfig] = None,
+                 replay: Optional[ReplayBuffer] = None,
+                 drift: Optional[DriftDetector] = None,
+                 membership: Optional[MembershipTracker] = None,
+                 updater: Optional[IncrementalUpdater] = None,
+                 seed: int = 0):
+        self.engine = engine
+        self.quality_feedback = quality_feedback
+        self.governor = governor
+        self.config = config or OnlineUpdateConfig()
+        self.replay = replay or ReplayBuffer(seed=seed)
+        self.drift = drift   # None disables drift detection
+        self.membership = membership or MembershipTracker(engine)
+        self.policy = ExplorationPolicy(
+            len(engine.pool), exploration or ExplorationConfig(seed=seed))
+        self.updater = updater or IncrementalUpdater(engine.router,
+                                                     self.config)
+        self._since_update = 0
+        self.last_explored = np.zeros(0, bool)   # per-request, last batch
+        self.stats: Dict[str, float] = {
+            "outcomes": 0, "explored": 0, "updates": 0, "update_steps": 0,
+            "bursts": 0, "drift_alarms": 0, "router_swaps": 0,
+            "members_added": 0, "members_removed": 0,
+            "last_quality_loss": float("nan"),
+            "last_cost_loss": float("nan"),
+        }
+
+    # -- scoring-step hook ---------------------------------------------------
+
+    def headroom(self, now: float) -> float:
+        """Budget slack in [0, 1] annealing exploration (1 = no governor)."""
+        if self.governor is None:
+            return 1.0
+        return float(np.clip(1.0 - self.governor.utilization(now), 0.0, 1.0))
+
+    def choose(self, s_hat: np.ndarray, c_hat: np.ndarray, lam: float,
+               now: float = 0.0) -> np.ndarray:
+        """Exploration-aware routing for one score batch (scheduler hook)."""
+        rewards = np.asarray(
+            REWARDS[self.engine.router.reward](s_hat, c_hat, lam))
+        choices, explored = self.policy.choose(
+            rewards, self.membership.exploit_mask(), self.headroom(now))
+        self.last_explored = explored
+        self.stats["explored"] += int(explored.sum())
+        return choices
+
+    # -- outcome hook --------------------------------------------------------
+
+    def observe(self, served: List, now: float = 0.0) -> None:
+        """Fold one dispatch round's served requests into the loop."""
+        embs, members = [], []
+        for r in served:
+            if getattr(r, "q_emb", None) is None or r.member < 0:
+                continue
+            s_obs = float(self.quality_feedback(r))
+            self.replay.add(r.q_emb, r.member, s_obs, r.cost, now)
+            self.membership.record_outcome(r.member, r.q_emb, s_obs)
+            members.append(r.member)
+            embs.append(np.asarray(r.q_emb, np.float32))
+            self.stats["outcomes"] += 1
+            self._since_update += 1
+        if members:
+            self.policy.record(np.asarray(members))
+
+        if self.drift is not None and embs:
+            if self.drift.observe(np.stack(embs), now):
+                self.stats["drift_alarms"] += 1
+                self.stats["bursts"] += 1
+                self._update(self.config.burst_steps)
+                # Recovery: re-anchor the detector on the post-shift regime
+                # so it arms for the *next* excursion instead of alarming
+                # on every subsequent window.
+                self.drift.refit()
+        if self._since_update >= self.config.update_every:
+            self._update(self.config.steps_per_update)
+
+    # -- incremental updates -------------------------------------------------
+
+    def _update(self, n_steps: int) -> None:
+        self._since_update = 0
+        if len(self.replay) < self.config.min_buffer:
+            return
+        res = self.updater.run_steps(self.replay, self.membership.model_emb,
+                                     n_steps)
+        if res["steps"] == 0:
+            return
+        self.updater.publish(self.engine, self.membership.model_emb)
+        self.membership.emb_dirty = False
+        self.stats["updates"] += 1
+        self.stats["update_steps"] += res["steps"]
+        self.stats["router_swaps"] += 1
+        self.stats["last_quality_loss"] = res["quality_loss"]
+        self.stats["last_cost_loss"] = res["cost_loss"]
+
+    # -- hot pool membership -------------------------------------------------
+
+    def add_member(self, pool_member,
+                   emb_row: Optional[np.ndarray] = None) -> int:
+        """Hot-add a pool member (probationary until min outcome count)."""
+        idx = self.membership.add_member(pool_member, emb_row)
+        self.policy.add_member()
+        self.updater.warm_start(self.engine.router)
+        self.stats["members_added"] += 1
+        self.stats["router_swaps"] += 1
+        return idx
+
+    def remove_member(self, idx: int) -> None:
+        """Hot-remove a pool member; dependent state is remapped."""
+        self.membership.remove_member(idx, replay=self.replay,
+                                      policy=self.policy)
+        self.updater.warm_start(self.engine.router)
+        self.stats["members_removed"] += 1
+        self.stats["router_swaps"] += 1
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self) -> str:
+        s = self.stats
+        return (
+            f"online: outcomes {int(s['outcomes'])}  "
+            f"explored {int(s['explored'])}  "
+            f"updates {int(s['updates'])} ({int(s['update_steps'])} steps, "
+            f"{int(s['bursts'])} bursts)  "
+            f"drift alarms {int(s['drift_alarms'])}  "
+            f"router v{self.engine.router.version} "
+            f"({int(s['router_swaps'])} swaps)  "
+            f"pool {len(self.engine.pool)} members "
+            f"(+{int(s['members_added'])}/-{int(s['members_removed'])})"
+        )

@@ -13,6 +13,7 @@ from repro.serving.engine import (
     RoutedEngine,
     arch_cost_rate,
     pad_prompts,
+    prompt_pad_mask,
 )
 from repro.serving.queue import (
     DONE,
@@ -33,7 +34,8 @@ from repro.serving.traffic import TRACE_KINDS, TraceConfig, make_trace
 
 __all__ = [
     "DOLLARS_PER_TFLOP", "PoolMember", "RoutedEngine", "arch_cost_rate",
-    "pad_prompts", "AdmissionQueue", "Request", "PENDING", "DONE", "REJECTED",
+    "pad_prompts", "prompt_pad_mask",
+    "AdmissionQueue", "Request", "PENDING", "DONE", "REJECTED",
     "EXPIRED", "BudgetGovernor", "MicroBatchScheduler", "SchedulerConfig",
     "SimClock", "default_service_model", "Histogram", "Telemetry",
     "TRACE_KINDS", "TraceConfig", "make_trace",

@@ -54,21 +54,20 @@ class PoolMember:
     quality_profile: Callable[[np.ndarray], np.ndarray]  # emb -> quality sim
     cost_rate: float
 
-    def generate(self, prompts: jax.Array, max_new: int = 8):
-        return lm_mod.greedy_generate(self.cfg, self.params, prompts, max_new)
+    def generate(self, prompts: jax.Array, max_new: int = 8, attn_mask=None):
+        return lm_mod.greedy_generate(self.cfg, self.params, prompts, max_new,
+                                      attn_mask=attn_mask)
 
 
 def pad_prompts(prompts: Sequence[np.ndarray], pad_id: int = 0) -> jax.Array:
     """Left-pad variable-length token rows into one (B, S_max) int32 batch.
 
     Left padding keeps the *last* prompt position real, which is what the
-    greedy prefill conditions the first generated token on.
-
-    Known limitation: the pool's smoke LMs have no prefill attention mask,
-    so pad positions are attended and a request's generated tokens can
-    depend on its micro-batch neighbors' lengths. Runs are reproducible
-    (same seed -> same batching -> same outputs), but outputs are not
-    invariant to batch composition until masked prefill lands (ROADMAP).
+    greedy prefill conditions the first generated token on. Pass the
+    matching :func:`prompt_pad_mask` into generate so attention members
+    never attend pad positions (batch-composition invariance). SSM/xLSTM
+    members still carry pad state through their scans (masked scans are a
+    ROADMAP follow-up), as does MoE capacity dispatch.
     """
     s_max = max(int(len(p)) for p in prompts)
     out = np.full((len(prompts), s_max), pad_id, np.int32)
@@ -76,6 +75,15 @@ def pad_prompts(prompts: Sequence[np.ndarray], pad_id: int = 0) -> jax.Array:
         p = np.asarray(p, np.int32)
         out[i, s_max - len(p):] = p
     return jnp.asarray(out)
+
+
+def prompt_pad_mask(prompts: Sequence[np.ndarray]) -> jax.Array:
+    """(B, S_max) bool, True at real (right-aligned) token positions."""
+    s_max = max(int(len(p)) for p in prompts)
+    mask = np.zeros((len(prompts), s_max), bool)
+    for i, p in enumerate(prompts):
+        mask[i, s_max - len(p):] = True
+    return jnp.asarray(mask)
 
 
 @dataclasses.dataclass
@@ -129,9 +137,41 @@ class RoutedEngine:
             return s_hat, c_hat
         return self.router.predict(q_emb)
 
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        """Query embeddings (B, dq) — exposed so the online adapter can
+        reuse the scoring pass's embeddings for replay/drift without a
+        second featurizer pass."""
+        return embed_texts(texts)
+
+    def score_emb(self, q_emb: np.ndarray):
+        """(s_hat, c_hat), both (B, K), from precomputed embeddings."""
+        return self._scores(q_emb)
+
     def score_texts(self, texts: Sequence[str]):
         """(s_hat, c_hat), both (B, K) — one fused pass over the batch."""
         return self._scores(embed_texts(texts))
+
+    # -- online adaptation ---------------------------------------------------
+
+    def swap_router(self, new_router) -> None:
+        """Atomically publish a new router version.
+
+        The swap is a single reference assignment of a fully-built router
+        (the updater constructs the whole param tree before calling this),
+        so a concurrent scorer sees either the old or the new router —
+        never a partially-written tree. Stale publishes (version <= live
+        version with the same object identity contract) are rejected so a
+        slow updater can't roll back a newer router.
+        """
+        if new_router is self.router:
+            raise ValueError("swap_router needs a new router object "
+                             "(routers are immutable; use with_updates)")
+        if new_router.version <= self.router.version:
+            raise ValueError(
+                f"stale router publish: v{new_router.version} <= "
+                f"live v{self.router.version}")
+        self.router = new_router
+        self.refresh_pool()
 
     def choose(self, s_hat: np.ndarray, c_hat: np.ndarray,
                lam: Optional[float] = None) -> np.ndarray:
@@ -155,7 +195,8 @@ class RoutedEngine:
         one batch. Returns (per-request output tokens, $ cost of the call).
         """
         member = self.pool[member_idx]
-        toks = member.generate(pad_prompts(prompts), max_new=max_new)
+        toks = member.generate(pad_prompts(prompts), max_new=max_new,
+                               attn_mask=prompt_pad_mask(prompts))
         outs = [np.asarray(toks[i]) for i in range(len(prompts))]
         return outs, member.cost_rate * len(prompts)
 

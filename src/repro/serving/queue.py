@@ -48,6 +48,11 @@ class Request:
     finish_s: float = float("nan")
     cost: float = 0.0
     output: Optional[np.ndarray] = None
+    # Online-adaptation bookkeeping: the scoring-pass embedding (reused by
+    # the replay buffer / drift detector) and whether exploration overrode
+    # the reward argmax for this request.
+    q_emb: Optional[np.ndarray] = None
+    explored: bool = False
 
     @property
     def queue_wait_s(self) -> float:

@@ -87,7 +87,8 @@ class MicroBatchScheduler:
                  telemetry: Optional[Telemetry] = None,
                  clock: Optional[SimClock] = None,
                  service_time: Optional[Callable[[str, int, float], float]]
-                 = None):
+                 = None,
+                 adapter=None):
         self.engine = engine
         self.config = config or SchedulerConfig()
         self.queue = queue or AdmissionQueue(self.config.queue_capacity)
@@ -96,6 +97,10 @@ class MicroBatchScheduler:
         self.governor = governor
         self.clock = clock or SimClock()
         self.service_time = service_time
+        # Online adaptation (repro.online.OnlineAdapter): overrides the
+        # scoring-step argmax with the exploration policy and consumes
+        # served outcomes after every dispatch round.
+        self.adapter = adapter
 
     # -- one scheduling round -----------------------------------------------
 
@@ -117,6 +122,8 @@ class MicroBatchScheduler:
     def dispatch(self) -> List[Request]:
         """Expire, score once, coalesce, generate. Returns served requests."""
         self.queue.expire(self.clock.now)
+        # Hot pool membership can mutate the pool between rounds.
+        self.telemetry.sync_members([m.name for m in self.engine.pool])
         batch = self.queue.pop(self.config.score_batch)
         if not batch:
             return []
@@ -127,8 +134,18 @@ class MicroBatchScheduler:
         self.telemetry.record_lambda(self.clock.now, lam)
 
         t0 = time.perf_counter()
-        s_hat, c_hat = self.engine.score_texts([r.text for r in batch])
-        choices = self.engine.choose(s_hat, c_hat, lam)
+        if self.adapter is not None:
+            # One embedding pass shared between scoring and the outcome
+            # loop (replay / drift want the same q_emb the router saw).
+            q_emb = np.asarray(self.engine.embed([r.text for r in batch]))
+            s_hat, c_hat = self.engine.score_emb(q_emb)
+            choices = self.adapter.choose(s_hat, c_hat, lam, self.clock.now)
+            for r, e, ex in zip(batch, q_emb, self.adapter.last_explored):
+                r.q_emb = e
+                r.explored = bool(ex)
+        else:
+            s_hat, c_hat = self.engine.score_texts([r.text for r in batch])
+            choices = self.engine.choose(s_hat, c_hat, lam)
         score_wall = time.perf_counter() - t0
         self.telemetry.record_score_batch(len(batch), score_wall)
         self.clock.advance(self._virtual_dt("score", len(batch), score_wall))
@@ -162,6 +179,8 @@ class MicroBatchScheduler:
                     self.telemetry.record_completion(
                         r.queue_wait_s, r.e2e_latency_s)
                     served.append(r)
+        if self.adapter is not None and served:
+            self.adapter.observe(served, self.clock.now)
         return served
 
     # -- open-loop trace replay ---------------------------------------------

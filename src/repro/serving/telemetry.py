@@ -81,6 +81,37 @@ class Telemetry:
         # behaviour without growing with traffic volume.
         self.lam_trace: Deque[Tuple[float, float]] = deque(maxlen=4096)
 
+    def sync_members(self, names: Sequence[str]) -> None:
+        """Re-align per-member counters with the (hot-mutated) pool.
+
+        Columns follow member *names*: a hot-added member gets fresh
+        zeroed counters, a surviving member keeps its history, and a
+        removed member's history is dropped (its index would otherwise be
+        silently re-attributed to whichever member shifted into it).
+        """
+        names = list(names)
+        if names == self.member_names:
+            return
+        # Each old column is consumed at most once, so duplicate member
+        # names map first-come and extras start zeroed instead of cloning
+        # one member's history into every same-named column.
+        pools: Dict[str, list] = {}
+        for i, n in enumerate(self.member_names):
+            pools.setdefault(n, []).append(i)
+        src = [pools[n].pop(0) if pools.get(n) else None for n in names]
+
+        def realign(arr, dtype):
+            out = np.zeros(len(names), dtype)
+            for i, j in enumerate(src):
+                if j is not None:
+                    out[i] = arr[j]
+            return out
+
+        self.member_counts = realign(self.member_counts, np.int64)
+        self.member_spend = realign(self.member_spend, np.float64)
+        self.member_tokens = realign(self.member_tokens, np.int64)
+        self.member_names = names
+
     # -- recording ----------------------------------------------------------
 
     def record_score_batch(self, n_requests: int, wall_s: float) -> None:

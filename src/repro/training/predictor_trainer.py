@@ -5,10 +5,17 @@ quality predictor lr=1e-3 wd=1e-5; cost predictor lr=1e-4 wd=1e-7; batch
 1024; 1000 epochs; 75/5/20 split; model selection on validation loss.
 (Epochs are configurable — the synthetic benchmark converges much earlier,
 and tests use small counts.)
+
+The train step itself is exposed as a reusable, jit-compiled update fn
+(:func:`make_predictor_step` for dense (B, K) targets,
+:func:`make_masked_predictor_step` for online single-member outcomes) so
+the offline epoch loop and the online incremental updater share one
+compiled optimizer path.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -16,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.predictors import PREDICTORS
-from repro.training.optim import AdamConfig, adam_init, make_train_step
+from repro.training.optim import AdamConfig, adam_init, adam_update
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +41,52 @@ QUALITY_TRAIN = TrainConfig(lr=1e-3, weight_decay=1e-5)
 COST_TRAIN = TrainConfig(lr=1e-4, weight_decay=1e-7)
 
 
+@functools.lru_cache(maxsize=64)
+def make_predictor_step(kind: str, opt_cfg: AdamConfig):
+    """Reusable jit-compiled step for dense (B, K) targets.
+
+    ``step(params, state, q (B,dq), m (K,dm), targets (B,K)) ->
+    (loss, params, state)``. Model embeddings are a call argument — not
+    closed over — so one compiled step serves both the offline epoch loop
+    and any caller that swaps pools, retracing only on new shapes.
+    """
+    pred = PREDICTORS[kind]
+
+    def loss_fn(p, q, m, t):
+        return jnp.mean((pred.apply(p, q, m) - t) ** 2)
+
+    def step(params, state, q, m, t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, q, m, t)
+        params, state = adam_update(opt_cfg, grads, state, params)
+        return loss, params, state
+
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=64)
+def make_masked_predictor_step(kind: str, opt_cfg: AdamConfig):
+    """Step for online outcome tuples: one observed member per example.
+
+    ``step(params, state, q (B,dq), m (K,dm), member (B,) int32,
+    target (B,)) -> (loss, params, state)``. MSE is taken only on the
+    routed member's prediction — the counterfactual columns get no
+    gradient, which is exactly the partial feedback a served router sees.
+    """
+    pred = PREDICTORS[kind]
+
+    def loss_fn(p, q, m, member, t):
+        out = pred.apply(p, q, m)
+        chosen = jnp.take_along_axis(out, member[:, None], axis=1)[:, 0]
+        return jnp.mean((chosen - t) ** 2)
+
+    def step(params, state, q, m, member, t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, q, m, member, t)
+        params, state = adam_update(opt_cfg, grads, state, params)
+        return loss, params, state
+
+    return jax.jit(step)
+
+
 def train_predictor(
     kind: str,
     q_emb: np.ndarray,            # (N, dq)
@@ -49,17 +102,13 @@ def train_predictor(
     m = jnp.asarray(model_emb)
     params = pred.init(jax.random.key(cfg.seed), dq, k, model_emb.shape[1])
 
-    def loss_fn(p, qb, tb):
-        out = pred.apply(p, qb, m)
-        return jnp.mean((out - tb) ** 2)
-
     steps_per_epoch = max(1, n // cfg.batch_size)
     opt_cfg = AdamConfig(
         lr=cfg.lr, weight_decay=cfg.weight_decay,
         t_max=cfg.epochs * steps_per_epoch,
     )
     state = adam_init(opt_cfg, params)
-    step = jax.jit(make_train_step(opt_cfg, loss_fn))
+    step = make_predictor_step(kind, opt_cfg)
 
     @jax.jit
     def eval_loss(p, qv, tv):
@@ -76,7 +125,7 @@ def train_predictor(
             idx = perm[i * cfg.batch_size : (i + 1) * cfg.batch_size]
             if len(idx) == 0:
                 continue
-            loss, params, state = step(params, state, qj[idx], tj[idx])
+            loss, params, state = step(params, state, qj[idx], m, tj[idx])
             ep_loss += float(loss)
         history["train_loss"].append(ep_loss / steps_per_epoch)
         if val is not None and (epoch % cfg.eval_every == 0 or epoch == cfg.epochs - 1):

@@ -1,0 +1,76 @@
+"""``hypothesis`` shim: real library when installed, tiny fallback otherwise.
+
+``hypothesis`` is an optional dev dependency (see README "Development").
+Without it, property tests degrade to a bounded deterministic example grid —
+far weaker than real property testing, but the suite still collects and the
+invariants are exercised on representative values.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import itertools
+
+    _MAX_EXAMPLES = 64  # bound on the fallback grid per test
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(sorted({lo, (lo + hi) // 2, hi}))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(sorted({lo, lo + (hi - lo) * 0.37, hi}))
+
+        @staticmethod
+        def text(min_size=0, max_size=40):
+            pool = ["", "a", "hello world", "x" * max_size,
+                    "ünïcode ✓\t\n", " leading and trailing "]
+            return _Strategy([t for t in pool
+                              if min_size <= len(t) <= max_size])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(itertools.product(
+                *(s.examples for s in strats)))
+
+        @staticmethod
+        def lists(strat, min_size=0, max_size=10):
+            exs = strat.examples
+            sizes = sorted({min_size, min(max_size, min_size + 3), max_size})
+            return _Strategy(
+                [[exs[i % len(exs)] for i in range(n)] for n in sizes])
+
+    st = _Strategies()
+
+    def given(*strats, **kw_strats):
+        names = list(kw_strats)
+
+        def deco(fn):
+            # No functools.wraps: copying __wrapped__ would make pytest
+            # introspect the original signature and treat the example
+            # parameters as fixtures.
+            def run(self):
+                combos = itertools.product(
+                    *(s.examples for s in strats),
+                    *(kw_strats[n].examples for n in names))
+                for combo in itertools.islice(combos, _MAX_EXAMPLES):
+                    args = combo[: len(strats)]
+                    kwargs = dict(zip(names, combo[len(strats):]))
+                    fn(self, *args, **kwargs)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco
+
+    def settings(**_kw):
+        return lambda fn: fn

@@ -1,7 +1,7 @@
 """k-means, model embeddings, and the featurizer."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.clustering import assign_clusters, kmeans, pairwise_sq_dists
 from repro.core.model_repr import build_model_embeddings, embed_new_model

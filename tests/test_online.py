@@ -1,0 +1,400 @@
+"""Online adaptation subsystem: replay, drift, exploration, membership,
+updater swap atomicity, and deterministic end-to-end replay.
+
+Everything here runs on synthetic embeddings and stub pools — no LM
+generation, no featurizer — so the whole module is CPU-fast.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.predictors import PREDICTORS
+from repro.core.router import PredictiveRouter
+from repro.online import (
+    DriftDetector,
+    ExplorationConfig,
+    ExplorationPolicy,
+    MembershipTracker,
+    OnlineAdapter,
+    OnlineUpdateConfig,
+    ReplayBuffer,
+)
+from repro.serving import DONE, MicroBatchScheduler, Request, RoutedEngine, SchedulerConfig
+
+DQ, K, DM = 16, 2, 4
+COSTS = (0.2, 1.0)
+
+
+def _emb(rng, n, sign=1.0):
+    e = rng.normal(0, 0.4, size=(n, DQ)).astype(np.float32)
+    e[:, : DQ // 2] += 0.8 * sign
+    return e / np.linalg.norm(e, axis=1, keepdims=True)
+
+
+class StubMember:
+    def __init__(self, name, cost_rate):
+        self.name, self.cost_rate = name, cost_rate
+
+
+def make_engine(seed=0, centroids=True):
+    rng = np.random.default_rng(seed)
+    memb = rng.random((K, DM)).astype(np.float32)
+    qp = PREDICTORS["attn"].init(jax.random.key(seed), DQ, K, DM)
+    cp = {"w": np.zeros((DQ, K), np.float32),
+          "b": np.asarray(COSTS, np.float32)}
+    router = PredictiveRouter(
+        "attn", "reg", qp, cp, memb, reward="R2", cost_scaler=None,
+        centroids=_emb(rng, 4) if centroids else None)
+    pool = [StubMember(f"m{i}", c) for i, c in enumerate(COSTS)]
+    return RoutedEngine(router=router, pool=pool, lam=2.0)
+
+
+def serve_round(adapter, emb, quality, now=0.0):
+    """Score -> choose -> synthesize outcomes -> observe. Returns choices."""
+    s_hat, c_hat = adapter.engine.score_emb(emb)
+    choices = adapter.choose(s_hat, c_hat, adapter.engine.lam, now)
+    reqs = []
+    for e, m in zip(emb, choices):
+        r = Request(text="", prompt=np.zeros(1, np.int32))
+        r.q_emb, r.member, r.status = e, int(m), DONE
+        r.cost = float(COSTS[int(m)] if int(m) < len(COSTS) else 0.1)
+        reqs.append(r)
+    quality_of = {r.rid: quality for r in reqs}
+    adapter.quality_feedback = lambda req: float(
+        quality_of[req.rid][req.member])
+    adapter.observe(reqs, now)
+    return choices
+
+
+class TestReplayBuffer:
+    def test_deterministic_sampling(self):
+        rng = np.random.default_rng(0)
+        embs = rng.random((200, DQ)).astype(np.float32)
+
+        def build():
+            buf = ReplayBuffer(capacity=64, recent_frac=0.25, seed=7)
+            for i in range(200):
+                buf.add(embs[i], i % K, i / 200.0, 0.1, float(i))
+            return buf
+
+        b1, b2 = build(), build()
+        s1 = b1.sample(32)
+        s2 = b2.sample(32)
+        for key in ("q_emb", "member", "s", "c", "t"):
+            np.testing.assert_array_equal(s1[key], s2[key])
+
+    def test_capacity_and_recency(self):
+        buf = ReplayBuffer(capacity=40, recent_frac=0.25, seed=0)
+        for i in range(500):
+            buf.add(np.zeros(DQ), 0, 0.0, 0.0, float(i))
+        assert len(buf) <= 40
+        # The recency ring holds exactly the newest items.
+        recent_ts = [item[4] for item in buf._recent]
+        assert recent_ts == list(map(float, range(490, 500)))
+        # Reservoir holds a spread over the evicted past, not just the tail.
+        res_ts = [item[4] for item in buf._reservoir]
+        assert min(res_ts) < 250
+
+    def test_stratified_sample_mixes_recent_and_old(self):
+        buf = ReplayBuffer(capacity=100, recent_frac=0.2, seed=1)
+        for i in range(400):
+            buf.add(np.zeros(DQ), 0, 0.0, 0.0, float(i))
+        s = buf.sample(60, recent_frac=0.5)
+        n_recent = int((s["t"] >= 380).sum())
+        assert 20 <= n_recent <= 40          # ~half from the ring
+        assert (s["t"] < 380).any()
+
+    def test_drop_member_remaps(self):
+        buf = ReplayBuffer(capacity=32, seed=0)
+        for i in range(30):
+            buf.add(np.zeros(DQ), i % 3, 0.0, 0.0)
+        buf.drop_member(1)
+        counts = buf.member_counts(3)
+        assert counts[2] == 0                # old member 2 shifted down to 1
+        assert counts[0] == 10 and counts[1] == 10
+        assert len(buf) == 20
+
+    def test_sample_empty_returns_none(self):
+        assert ReplayBuffer(capacity=8).sample(4) is None
+
+
+class TestDriftDetector:
+    def test_no_alarm_in_distribution(self):
+        rng = np.random.default_rng(0)
+        det = DriftDetector(window=32, threshold=3.0, seed=0)
+        det.fit(_emb(rng, 300))
+        assert not det.observe(_emb(rng, 200))
+        assert det.alarms == 0
+
+    def test_alarm_and_recovery_deterministic(self):
+        def run():
+            rng = np.random.default_rng(1)
+            det = DriftDetector(window=32, threshold=3.0, patience=2, seed=0)
+            det.fit(_emb(rng, 300))
+            fired = []
+            for _ in range(4):
+                fired.append(det.observe(_emb(rng, 32)))        # in-dist
+            for _ in range(6):
+                fired.append(det.observe(_emb(rng, 32, -1.0)))  # shifted
+            det.refit()                                          # recover
+            for _ in range(4):
+                fired.append(det.observe(_emb(rng, 32, -1.0)))
+            return fired, det.alarms
+
+        f1, a1 = run()
+        f2, a2 = run()
+        assert f1 == f2 and a1 == a2
+        assert a1 >= 1
+        assert not any(f1[:4])        # no false alarm pre-shift
+        assert not any(f1[-4:])       # re-anchored: shifted regime is normal
+
+    def test_observe_before_fit_raises(self):
+        with pytest.raises(RuntimeError):
+            DriftDetector(window=4).observe(np.zeros((4, DQ)))
+
+
+class TestExplorationPolicy:
+    def test_pure_exploit_is_argmax_with_bonus(self):
+        pol = ExplorationPolicy(2, ExplorationConfig(epsilon=0.0, bonus=0.0))
+        rewards = np.array([[0.2, 0.8], [0.9, 0.1]])
+        choices, explored = pol.choose(rewards)
+        assert choices.tolist() == [1, 0]
+        assert not explored.any()
+
+    def test_optimistic_bonus_prefers_unobserved(self):
+        pol = ExplorationPolicy(2, ExplorationConfig(epsilon=0.0, bonus=0.5))
+        pol.record(np.zeros(1000, np.int64))       # member 0 heavily observed
+        rewards = np.tile([0.5, 0.2], (4, 1))      # raw argmax would say 0
+        choices, _ = pol.choose(rewards)
+        assert (choices == 1).all()                # bonus flips to unobserved
+
+    def test_probation_mask_blocks_exploit(self):
+        pol = ExplorationPolicy(2, ExplorationConfig(epsilon=0.0))
+        rewards = np.tile([0.1, 0.9], (8, 1))
+        choices, _ = pol.choose(rewards, exploit_mask=np.array([True, False]))
+        assert (choices == 0).all()
+
+    def test_zero_headroom_disables_exploration(self):
+        pol = ExplorationPolicy(2, ExplorationConfig(epsilon=1.0, seed=0))
+        rewards = np.tile([0.9, 0.1], (64, 1))
+        _, explored = pol.choose(rewards, headroom=0.0)
+        assert not explored.any()
+        _, explored = pol.choose(rewards, headroom=1.0)
+        assert explored.all()
+
+
+class TestSwapAtomicity:
+    def test_live_router_leaves_never_mutated(self):
+        """Regression: an online-updated engine must never serve a
+        partially-written param tree. Updates build fresh trees; the live
+        router's leaves stay bit-identical until the single-reference
+        swap, and the published router is a different object with every
+        output-head leaf replaced."""
+        eng = make_engine()
+        adapter = OnlineAdapter(
+            eng, lambda r: 0.5,
+            config=OnlineUpdateConfig(update_every=10 ** 9, min_buffer=1,
+                                      batch_size=8, steps_per_update=4),
+            seed=0)
+        rng = np.random.default_rng(0)
+        for i in range(32):
+            adapter.replay.add(_emb(rng, 1)[0], i % K, 0.5, 0.2)
+
+        live = eng.router
+        snapshot = jax.tree.map(lambda x: np.array(x, copy=True),
+                                live.quality_params)
+        adapter.updater.run_steps(adapter.replay, live.model_emb, 4)
+        # mid-update: live router untouched
+        assert eng.router is live
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), b), live.quality_params, snapshot)
+
+        published = adapter.updater.publish(eng)
+        assert eng.router is published and published is not live
+        assert published.version == live.version + 1
+        # old object still intact after the swap (readers holding it are safe)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), b), live.quality_params, snapshot)
+        # and the update actually changed the published params
+        diffs = jax.tree.map(
+            lambda a, b: float(np.abs(np.asarray(a) - b).max()),
+            published.quality_params, snapshot)
+        assert max(jax.tree.leaves(diffs)) > 0
+
+    def test_stale_or_same_version_publish_rejected(self):
+        eng = make_engine()
+        live = eng.router
+        with pytest.raises(ValueError):
+            eng.swap_router(live)                          # same object
+        newer = live.with_updates()
+        eng.swap_router(newer)
+        with pytest.raises(ValueError):                    # stale version
+            eng.swap_router(dataclasses.replace(live, version=live.version))
+        assert eng.router is newer
+
+    def test_swap_refreshes_pool_projections(self):
+        eng = make_engine()
+        eng._pool_proj = ("sentinel", "sentinel")
+        eng.swap_router(eng.router.with_updates())
+        assert eng._pool_proj is None
+
+    def test_published_model_emb_not_aliased_to_membership_staging(self):
+        """Regression: publish() must copy the membership tracker's staging
+        model_emb — otherwise a later record_outcome for a probationary
+        member mutates the LIVE router's embeddings in place (no version
+        bump, stale cached pool projections)."""
+        eng = make_engine()
+        adapter = OnlineAdapter(
+            eng, lambda r: 0.5,
+            config=OnlineUpdateConfig(update_every=10 ** 9, min_buffer=1,
+                                      batch_size=8, steps_per_update=2),
+            seed=0)
+        idx = adapter.add_member(StubMember("new", 0.05))
+        rng = np.random.default_rng(0)
+        for i in range(16):
+            adapter.replay.add(_emb(rng, 1)[0], i % K, 0.5, 0.2)
+        adapter._update(2)
+        live = eng.router
+        assert live.model_emb is not adapter.membership.model_emb
+        frozen_row = np.array(live.model_emb[idx], copy=True)
+        adapter.membership.record_outcome(idx, _emb(rng, 1)[0], 0.99)
+        np.testing.assert_array_equal(np.asarray(live.model_emb[idx]),
+                                      frozen_row)
+
+
+class TestMembership:
+    def test_add_member_probation_and_graduation(self):
+        eng = make_engine()
+        tracker = MembershipTracker(eng, min_outcomes=5)
+        idx = tracker.add_member(StubMember("new", 0.05))
+        assert idx == 2 and len(eng.pool) == 3
+        assert eng.router.n_members == 3
+        assert tracker.exploit_mask().tolist() == [True, True, False]
+
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            tracker.record_outcome(idx, _emb(rng, 1)[0], 0.9)
+        assert tracker.exploit_mask().all()
+        # the cold-start row moved toward observed quality in hit clusters
+        touched = tracker.model_emb[idx] != np.asarray(
+            eng.router.model_emb)[:2].mean(0)
+        assert touched.any()
+
+    def test_new_member_scores_and_routes(self):
+        eng = make_engine()
+        adapter = OnlineAdapter(eng, lambda r: 0.5, seed=0)
+        adapter.add_member(StubMember("new", 0.05))
+        rng = np.random.default_rng(1)
+        s_hat, c_hat = eng.score_emb(_emb(rng, 8))
+        assert s_hat.shape == (8, 3) and c_hat.shape == (8, 3)
+        # probation: exploitation never routes to the new member
+        pol_choices = adapter.choose(s_hat, c_hat, 2.0)
+        explored = adapter.last_explored
+        assert ((pol_choices[~explored]) != 2).all()
+
+    def test_remove_member_remaps_everything(self):
+        eng = make_engine()
+        adapter = OnlineAdapter(eng, lambda r: 0.5, seed=0)
+        rng = np.random.default_rng(2)
+        for i in range(12):
+            adapter.replay.add(_emb(rng, 1)[0], i % 2, 0.5, 0.1)
+        adapter.remove_member(0)
+        assert len(eng.pool) == 1 and eng.router.n_members == 1
+        assert adapter.policy.n_members == 1
+        assert adapter.replay.member_counts(1)[0] == 6   # old member-1 only
+        s_hat, _ = eng.score_emb(_emb(rng, 4))
+        assert s_hat.shape == (4, 1)
+
+
+class TestEndToEndDeterminism:
+    def _run(self):
+        eng = make_engine(seed=3)
+        adapter = OnlineAdapter(
+            eng, lambda r: 0.5,
+            config=OnlineUpdateConfig(update_every=16, steps_per_update=4,
+                                      batch_size=16, min_buffer=8,
+                                      burst_steps=8),
+            exploration=ExplorationConfig(epsilon=0.2, seed=0),
+            drift=DriftDetector(window=16, threshold=3.0, seed=0).fit(
+                _emb(np.random.default_rng(9), 200)),
+            seed=0)
+        rng = np.random.default_rng(11)
+        all_choices = []
+        for bi in range(12):
+            sign = 1.0 if bi < 6 else -1.0
+            quality = np.array([0.4, 0.8]) if bi < 6 else np.array([0.8, 0.3])
+            choices = serve_round(adapter, _emb(rng, 16, sign), quality,
+                                  now=bi * 0.1)
+            all_choices.append(choices.tolist())
+        return adapter, all_choices
+
+    def test_replay_drift_and_swaps_replay_identically(self):
+        a1, c1 = self._run()
+        a2, c2 = self._run()
+        assert c1 == c2
+        assert a1.stats == a2.stats
+        assert a1.engine.router.version == a2.engine.router.version
+        jax.tree.map(
+            lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                       np.asarray(y)),
+            a1.engine.router.quality_params,
+            a2.engine.router.quality_params)
+        assert a1.engine.router.version >= 2          # updates actually ran
+        assert a1.stats["outcomes"] == 12 * 16
+
+
+class TestSchedulerIntegration:
+    class FakeOnlineEngine:
+        """Minimal engine exposing the online scoring surface."""
+
+        def __init__(self):
+            self.pool = [StubMember("m0", 0.2), StubMember("m1", 1.0)]
+            self.lam = 2.0
+
+        class _Router:
+            reward = "R2"
+
+        router = _Router()
+
+        def embed(self, texts):
+            rng = np.random.default_rng(len(texts))
+            return rng.random((len(texts), DQ)).astype(np.float32)
+
+        def score_emb(self, q_emb):
+            b = len(q_emb)
+            return (np.tile([0.4, 0.9], (b, 1)),
+                    np.tile([0.2, 1.0], (b, 1)))
+
+        def generate_member(self, mi, prompts, max_new=8):
+            outs = [np.zeros(max_new, np.int32) for _ in prompts]
+            return outs, self.pool[mi].cost_rate * len(prompts)
+
+    def test_scheduler_threads_outcomes_through_adapter(self):
+        eng = self.FakeOnlineEngine()
+        observed = []
+
+        class SpyAdapter:
+            last_explored = np.zeros(0, bool)
+
+            def choose(self, s_hat, c_hat, lam, now):
+                self.last_explored = np.zeros(len(s_hat), bool)
+                return np.argmax(s_hat * np.exp(-c_hat / lam), axis=1)
+
+            def observe(self, served, now):
+                observed.extend(served)
+
+        sched = MicroBatchScheduler(
+            eng, SchedulerConfig(score_batch=8, max_batch=8),
+            service_time=lambda kind, n, wall: 1e-3,
+            adapter=SpyAdapter())
+        for i in range(6):
+            sched.queue.offer(
+                Request(text=str(i), prompt=np.zeros(4, np.int32),
+                        max_new=2), 0.0)
+        served = sched.dispatch()
+        assert len(served) == 6 and len(observed) == 6
+        assert all(r.q_emb is not None and r.q_emb.shape == (DQ,)
+                   for r in observed)
+        assert all(r.status == DONE for r in observed)

@@ -1,7 +1,7 @@
 """Unit + property tests for rewards (paper Eq. 3) and metrics (Eqs. 1-2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     DEFAULT_LAMBDA_GRID, aiq, lam_sensitivity, max_calls_fraction,
