@@ -238,7 +238,10 @@ def self_attention_full_seq(
     left-padded prefill micro-batches; None means all keys are real. RoPE
     logits depend only on position *differences*, so masking pad keys is
     sufficient for a left-padded row to attend exactly as its unpadded
-    self (positions are uniformly shifted by the pad count).
+    self (positions are uniformly shifted by the pad count). This is the
+    attention member of the cross-mixer masked-compute contract pinned by
+    tests/test_masked_prefill.py (SSM/xLSTM use identity pad updates, MoE
+    pad-excluded capacity).
     """
     b, s, _ = x.shape
     q = _project_q(cfg, p, x)

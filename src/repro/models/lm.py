@@ -64,13 +64,15 @@ def init_block(key, cfg: ArchConfig, spec: LayerSpec, dtype=jnp.float32) -> Dict
     return p
 
 
-def _apply_ffn_train(cfg, spec, p, x):
+def _apply_ffn_train(cfg, spec, p, x, mask=None):
+    """``mask`` (B, S) bool marks real tokens of a left-padded batch; MoE
+    excludes pads from capacity accounting and the aux loss."""
     if spec.ffn == NONE:
         return x, jnp.float32(0.0)
     h = apply_rmsnorm(p["norm2"], x, cfg.norm_eps)
     if spec.ffn == MLP:
         return x + apply_mlp(p["ffn"], h), jnp.float32(0.0)
-    y, aux = moe_mod.apply_moe_train(cfg, p["ffn"], h)
+    y, aux = moe_mod.apply_moe_train(cfg, p["ffn"], h, mask=mask)
     return x + y, aux
 
 
@@ -83,22 +85,26 @@ def _apply_ffn_decode(cfg, spec, p, x):
     return x + moe_mod.apply_moe_decode(cfg, p["ffn"], h)
 
 
-def apply_block_train(cfg, spec, p, x, positions, media):
+def apply_block_train(cfg, spec, p, x, positions, media, mask=None):
+    """``mask`` (B, S) bool marks real tokens of a left-padded batch; every
+    mixer family applies its masked-compute variant (pad keys masked /
+    identity recurrence updates / pad-excluded MoE capacity)."""
     h = apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
     if spec.mixer == ATTN:
-        y = attn_mod.self_attention_full_seq(cfg, spec, p["mixer"], h, positions)
+        y = attn_mod.self_attention_full_seq(cfg, spec, p["mixer"], h, positions,
+                                             kv_valid=mask)
     elif spec.mixer == XATTN:
         y = attn_mod.cross_attention_full_seq(cfg, p["mixer"], h, media)
     elif spec.mixer == MAMBA:
-        y = ssm_mod.apply_mamba_train(cfg, p["mixer"], h)
+        y = ssm_mod.apply_mamba_train(cfg, p["mixer"], h, mask=mask)
     elif spec.mixer == MLSTM:
-        y = xlstm_mod.apply_mlstm_train(cfg, p["mixer"], h)
+        y = xlstm_mod.apply_mlstm_train(cfg, p["mixer"], h, mask=mask)
     elif spec.mixer == SLSTM:
-        y = xlstm_mod.apply_slstm_train(cfg, p["mixer"], h)
+        y = xlstm_mod.apply_slstm_train(cfg, p["mixer"], h, mask=mask)
     else:  # pragma: no cover
         raise ValueError(spec.mixer)
     x = x + y
-    return _apply_ffn_train(cfg, spec, p, x)
+    return _apply_ffn_train(cfg, spec, p, x, mask=mask)
 
 
 def init_block_cache(cfg, spec, batch: int, max_len: int, dtype=jnp.float32):
@@ -117,10 +123,13 @@ def apply_block_prefill(cfg, spec, p, x, positions, media, cache,
                         attn_mask=None):
     """Full-sequence pass that also fills this block's decode cache.
 
-    ``attn_mask`` (B, S) bool marks real tokens of a left-padded batch;
-    attention blocks mask pad keys (and record per-row validity in the
-    decode cache). SSM/xLSTM mixers currently ignore it — their scans
-    still carry pad state (masked scans are a ROADMAP follow-up).
+    ``attn_mask`` (B, S) bool marks real tokens of a left-padded batch.
+    Every mixer family is batch-composition invariant under it: attention
+    masks pad keys (and records per-row validity in the decode cache);
+    SSM/xLSTM recurrences treat pad steps as identity updates so the
+    carried state — which *is* the decode cache — crosses pads unchanged;
+    MoE excludes pads from capacity accounting. Pinned by the cross-mixer
+    harness in tests/test_masked_prefill.py.
     """
     h = apply_rmsnorm(p["norm1"], x, cfg.norm_eps)
     if spec.mixer == ATTN:
@@ -132,22 +141,25 @@ def apply_block_prefill(cfg, spec, p, x, positions, media, cache,
         y = attn_mod.cross_attention_full_seq(cfg, p["mixer"], h, media)
         cache = attn_mod.prefill_cross_cache(cfg, p["mixer"], media, cache)
     elif spec.mixer == MAMBA:
-        y, state = ssm_mod.apply_mamba_train(cfg, p["mixer"], h, return_state=True)
+        y, state = ssm_mod.apply_mamba_train(cfg, p["mixer"], h,
+                                             return_state=True, mask=attn_mask)
         cache = {**cache, "h": state["h"],
                  "conv": state["conv"].astype(cache["conv"].dtype)}
     elif spec.mixer == MLSTM:
-        y, state = xlstm_mod.apply_mlstm_train(cfg, p["mixer"], h, return_state=True)
+        y, state = xlstm_mod.apply_mlstm_train(cfg, p["mixer"], h,
+                                               return_state=True, mask=attn_mask)
         cache = {**cache, "C": state["C"], "n": state["n"], "m": state["m"],
                  "conv": state["conv"].astype(cache["conv"].dtype)}
     elif spec.mixer == SLSTM:
-        y, state = xlstm_mod.apply_slstm_train(cfg, p["mixer"], h, return_state=True)
+        y, state = xlstm_mod.apply_slstm_train(cfg, p["mixer"], h,
+                                               return_state=True, mask=attn_mask)
         cache = {**cache, **state}
     else:  # pragma: no cover
         raise ValueError(spec.mixer)
     x = x + y
     # Prefill uses the train-path FFN: chunked capacity dispatch for MoE
     # (decode-path dispatch over B*S tokens at once would blow up memory).
-    x, _ = _apply_ffn_train(cfg, spec, p, x)
+    x, _ = _apply_ffn_train(cfg, spec, p, x, mask=attn_mask)
     return x, cache
 
 
@@ -228,7 +240,8 @@ def _outer_scan(body, x, xs, n: int):
     return x, ys
 
 
-def _backbone_train(cfg, params, x, positions, media, remat: bool = True):
+def _backbone_train(cfg, params, x, positions, media, remat: bool = True,
+                    mask=None):
     """Run the layer plan over (B,S,D) activations. Returns (x, moe aux)."""
     aux_total = jnp.float32(0.0)
     pat = tuple(cfg.pattern)
@@ -236,7 +249,8 @@ def _backbone_train(cfg, params, x, positions, media, remat: bool = True):
         def body(x, pslice):
             aux = jnp.float32(0.0)
             for i, spec in enumerate(pat):
-                x, a = apply_block_train(cfg, spec, pslice[i], x, positions, media)
+                x, a = apply_block_train(cfg, spec, pslice[i], x, positions,
+                                         media, mask=mask)
                 aux = aux + a
             x = shard(x, "batch", "seq", "embed")
             return x, aux
@@ -246,31 +260,44 @@ def _backbone_train(cfg, params, x, positions, media, remat: bool = True):
         x, auxes = _outer_scan(body, x, params["pattern"], cfg.n_repeats)
         aux_total = aux_total + auxes.sum()
     for i, spec in enumerate(cfg.remainder):
-        x, a = apply_block_train(cfg, spec, params["remainder"][i], x, positions, media)
+        x, a = apply_block_train(cfg, spec, params["remainder"][i], x, positions,
+                                 media, mask=mask)
         aux_total = aux_total + a
     return apply_rmsnorm(params["final_norm"], x, cfg.norm_eps), aux_total
 
 
-def apply_lm_train(cfg, params, tokens, media=None, remat=True):
-    """Full logits (small-vocab / test path). Returns (logits, aux)."""
+def apply_lm_train(cfg, params, tokens, media=None, remat=True, attn_mask=None):
+    """Full logits (small-vocab / test path). Returns (logits, aux).
+
+    ``attn_mask`` (B, S) bool marks real tokens of a left-padded batch
+    (None = all real); masked compute applies in every mixer family.
+    """
     x = embed_tokens(params["embedding"], tokens)
     x = shard(x, "batch", "seq", "embed")
-    x, aux = _backbone_train(cfg, params, x, _positions(tokens), media, remat)
+    x, aux = _backbone_train(cfg, params, x, _positions(tokens), media, remat,
+                             mask=attn_mask)
     return lm_logits(params["embedding"], x), aux
 
 
-def lm_loss(cfg, params, tokens, labels, media=None, remat=True):
+def lm_loss(cfg, params, tokens, labels, media=None, remat=True,
+            attn_mask=None):
     """Next-token CE + MoE aux, computed in sequence chunks so the
-    (B, S, padded_vocab) logits tensor never fully materializes."""
+    (B, S, padded_vocab) logits tensor never fully materializes.
+
+    ``attn_mask`` (B, S) bool marks real tokens of a left-padded batch:
+    pad positions are excluded from the CE (numerator *and* denominator)
+    and, through the backbone, from MoE capacity/aux accounting.
+    """
     x = embed_tokens(params["embedding"], tokens)
     x = shard(x, "batch", "seq", "embed")
-    x, aux = _backbone_train(cfg, params, x, _positions(tokens), media, remat)
+    x, aux = _backbone_train(cfg, params, x, _positions(tokens), media, remat,
+                             mask=attn_mask)
 
     b, s, d = x.shape
     head = params["embedding"]["head"]
 
     @jax.checkpoint
-    def chunk_loss(xc, lc):
+    def chunk_loss(xc, lc, mc=None):
         logits = (xc @ head).astype(jnp.float32)
         pad = logits.shape[-1] - cfg.vocab_size
         if pad > 0:
@@ -279,21 +306,27 @@ def lm_loss(cfg, params, tokens, labels, media=None, remat=True):
             )
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
-        return jnp.sum(lse - gold)
+        tok_loss = lse - gold
+        if mc is not None:
+            tok_loss = tok_loss * mc
+        return jnp.sum(tok_loss)
 
     chunk = min(LOSS_SEQ_CHUNK, s)
     if s % chunk == 0 and s > chunk:
         n = s // chunk
-        xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)
-        lc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+        args = (x.reshape(b, n, chunk, d).swapaxes(0, 1),
+                labels.reshape(b, n, chunk).swapaxes(0, 1))
+        if attn_mask is not None:
+            args += (attn_mask.reshape(b, n, chunk).swapaxes(0, 1),)
         if runtime_flags.UNROLL_INNER:
-            total = sum(chunk_loss(xc[i], lc[i]) for i in range(n))
+            total = sum(chunk_loss(*(a[i] for a in args)) for i in range(n))
         else:
-            totals = jax.lax.map(lambda args: chunk_loss(*args), (xc, lc))
+            totals = jax.lax.map(lambda aa: chunk_loss(*aa), args)
             total = totals.sum()
     else:
-        total = chunk_loss(x, labels)
-    loss = total / (b * s)
+        total = chunk_loss(x, labels, attn_mask)
+    denom = (b * s) if attn_mask is None else jnp.maximum(attn_mask.sum(), 1)
+    loss = total / denom
     return loss + cfg.router_aux_coef * aux
 
 
@@ -456,8 +489,9 @@ def greedy_generate(cfg, params, prompt, max_new: int, media=None,
     """Simple greedy decoding loop for the examples (not perf-critical).
 
     ``attn_mask`` (B, S) bool marks real prompt tokens of a left-padded
-    batch so attention members' outputs are invariant to micro-batch
-    composition (see serving engine ``pad_prompts``).
+    batch so every pool member's output — attention, SSM, xLSTM, and MoE
+    alike — is invariant to micro-batch composition (see serving engine
+    ``pad_prompts`` and tests/test_masked_prefill.py).
     """
     b, s = prompt.shape
     caches = init_caches(cfg, b, s + max_new, dtype)

@@ -60,11 +60,25 @@ def _router_probs(p: Dict, x: jax.Array) -> jax.Array:
     return jax.nn.softmax(logits, axis=-1)
 
 
-def aux_load_balance_loss(probs: jax.Array, expert_mask: jax.Array) -> jax.Array:
-    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+def aux_load_balance_loss(probs: jax.Array, expert_mask: jax.Array,
+                          valid: jax.Array = None) -> jax.Array:
+    """Switch-style load-balance loss: E * sum_e f_e * p_e.
+
+    ``valid`` (T,) bool excludes pad tokens of a left-padded batch from
+    both the routed-fraction and mean-probability statistics, so pads
+    don't bias the expert-balance gradient.
+    """
     e = probs.shape[-1]
-    f = expert_mask.reshape(-1, e).mean(axis=0)          # fraction routed
-    pbar = probs.reshape(-1, e).mean(axis=0)             # mean router prob
+    mask2 = expert_mask.reshape(-1, e)
+    probs2 = probs.reshape(-1, e)
+    if valid is None:
+        f = mask2.mean(axis=0)                           # fraction routed
+        pbar = probs2.mean(axis=0)                       # mean router prob
+    else:
+        v = valid.reshape(-1, 1).astype(jnp.float32)
+        n = jnp.maximum(v.sum(), 1.0)
+        f = (mask2 * v).sum(axis=0) / n
+        pbar = (probs2 * v).sum(axis=0) / n
     return e * jnp.sum(f * pbar)
 
 
@@ -75,9 +89,21 @@ def _capacity(n_tokens: int, cfg: ArchConfig, factor: float = 0.0) -> int:
 
 
 def _dispatch_combine(
-    cfg: ArchConfig, p: Dict, x2d: jax.Array, capacity_factor: float = 0.0
+    cfg: ArchConfig, p: Dict, x2d: jax.Array, capacity_factor: float = 0.0,
+    valid: jax.Array = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Capacity-based MoE over (T, D) tokens. Returns (out (T,D), aux loss)."""
+    """Capacity-based MoE over (T, D) tokens. Returns (out (T,D), aux loss).
+
+    ``valid`` (T,) bool marks real tokens of a left-padded batch. Pads are
+    excluded from *everything* that could perturb a real token: their
+    expert assignments are struck from the capacity position count (a real
+    token's buffer slot depends only on the real tokens before it), the
+    effective capacity shrinks to what the valid-token count alone would
+    earn (so a padded row can't keep tokens its unpadded self would drop),
+    their combine weights are zeroed, and they're excluded from the aux
+    loss statistics. The capacity *buffer* stays statically sized from T;
+    only the keep threshold is dynamic.
+    """
     t, d = x2d.shape
     e, k = cfg.n_experts, cfg.top_k
     cap = _capacity(t, cfg, capacity_factor)
@@ -88,10 +114,21 @@ def _dispatch_combine(
 
     # Position of each (token, slot) within its expert's capacity buffer.
     slot_onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)   # (T,k,E)
+    eff_cap = cap
+    if valid is not None:
+        slot_onehot = slot_onehot * valid.astype(jnp.float32)[:, None, None]
+        gate_vals = gate_vals * valid[:, None]
+        # Same formula as _capacity, evaluated at the dynamic valid count:
+        # max(top_k, min(ceil(f * n_valid * k / E), n_valid)), <= cap.
+        f = capacity_factor or cfg.capacity_factor
+        n_valid = valid.sum().astype(jnp.float32)
+        eff_cap = jnp.clip(
+            jnp.minimum(jnp.ceil(f * n_valid * k / e), n_valid), k, cap
+        ).astype(jnp.int32)
     flat = slot_onehot.reshape(t * k, e)
     pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, k, e)
     pos = jnp.einsum("tke,tke->tk", pos_in_expert, slot_onehot)    # (T,k)
-    keep = pos < cap
+    keep = pos < eff_cap
     gate_vals = gate_vals * keep
 
     # combine[t, e, c]: weight with which token t writes expert e's slot c.
@@ -106,12 +143,13 @@ def _dispatch_combine(
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])                # (E,C,D)
     out = jnp.einsum("tec,ecd->td", combine.astype(ye.dtype), ye)  # (T,D)
 
-    aux = aux_load_balance_loss(probs, slot_onehot.sum(axis=1))
+    aux = aux_load_balance_loss(probs, slot_onehot.sum(axis=1), valid)
     return out, aux
 
 
 def apply_moe_train(
-    cfg: ArchConfig, p: Dict, x: jax.Array, seq_chunk: int = 512
+    cfg: ArchConfig, p: Dict, x: jax.Array, seq_chunk: int = 512,
+    mask: jax.Array = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """MoE over (B, S, D), capacity-grouped per (batch row x seq chunk).
 
@@ -120,30 +158,60 @@ def apply_moe_train(
     einsums stay below the expert GEMMs for every assigned MoE config
     (granite-moe worst case: ratio ~0.4). Chunks run under ``lax.map`` to
     bound live memory; batch rows are vmapped inside each chunk.
+
+    ``mask`` (B, S) bool marks real tokens of a left-padded batch: pads
+    are excluded from capacity accounting, dispatch, and the aux loss (see
+    :func:`_dispatch_combine`). Caveat: capacity groups are *position*
+    chunks, so for sequences longer than ``seq_chunk`` a row's group
+    boundaries shift with its pad count — padded prefill batches are
+    invariant only up to ``seq_chunk`` tokens (serving micro-batches are
+    well under it; documented in the README support matrix).
     """
     b, s, d = x.shape
     # Remat per chunk: dispatch/combine one-hots are cheap to recompute and
     # expensive to keep (E*C per token).
-    per_row = jax.checkpoint(jax.vmap(lambda row: _dispatch_combine(cfg, p, row)))
+    if mask is None:
+        per_row = jax.checkpoint(
+            jax.vmap(lambda row: _dispatch_combine(cfg, p, row)))
+        args = (x,)
+    else:
+        per_row = jax.checkpoint(jax.vmap(
+            lambda row, vrow: _dispatch_combine(cfg, p, row, valid=vrow)))
+        args = (x, mask)
     if s > seq_chunk and s % seq_chunk == 0:
         n = s // seq_chunk
-        xc = x.reshape(b, n, seq_chunk, d).swapaxes(0, 1)          # (n,B,c,D)
+
+        def to_chunks(a):
+            return a.reshape(b, n, seq_chunk, *a.shape[2:]).swapaxes(0, 1)
+
+        chunked = tuple(map(to_chunks, args))              # each (n,B,c,...)
         if runtime_flags.UNROLL_INNER:
-            res = [per_row(xc[i]) for i in range(n)]
+            res = [per_row(*(a[i] for a in chunked)) for i in range(n)]
             outs = jnp.stack([r[0] for r in res], 0)
             auxes = jnp.stack([r[1] for r in res], 0)
         else:
-            outs, auxes = jax.lax.map(per_row, xc)
+            outs, auxes = jax.lax.map(lambda aa: per_row(*aa), chunked)
         out = outs.swapaxes(0, 1).reshape(b, s, d)
-        aux = auxes.mean()
+        aux = _aux_mean(auxes, None if mask is None else chunked[1])
     else:
-        out, aux = per_row(x)
-        aux = aux.mean()
+        out, aux = per_row(*args)
+        aux = _aux_mean(aux, mask)
     if cfg.n_shared_experts:
         sp = p["shared"]
         hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
         out = out + hs @ sp["w_down"]
     return out, aux
+
+
+def _aux_mean(auxes: jax.Array, masks: jax.Array = None) -> jax.Array:
+    """Mean of per-(row x chunk) aux losses; with a pad mask the mean is
+    weighted by each group's valid-token count — an all-pad group reports
+    aux = 0 and an unweighted mean would dilute the balance gradient in
+    proportion to the batch's pad fraction."""
+    if masks is None:
+        return auxes.mean()
+    w = masks.sum(axis=-1).astype(jnp.float32)
+    return (auxes * w).sum() / jnp.maximum(w.sum(), 1.0)
 
 
 DECODE_CAPACITY_FACTOR = 4.0

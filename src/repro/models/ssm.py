@@ -106,17 +106,31 @@ def _chunk_recurrence(dA_log, dBx, h0):
 
 
 def apply_mamba_train(
-    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False
+    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False,
+    mask=None,
 ):
     """Full-sequence selective scan, chunked along time.
 
     ``return_state=True`` additionally returns the decode cache captured at
     the end of the sequence (used by the prefill step).
+
+    ``mask`` (B, S) bool marks real tokens of a left-padded batch (None =
+    all real). Pad steps become *identity* recurrence updates: the conv
+    input is zeroed at pads (so the conv window over leading pads matches
+    the zero front-padding an unpadded run sees) and ``dt`` is zeroed at
+    pads, which drives ``dA_log -> 0`` (decay exp(0) = 1) and ``dBx -> 0``
+    — the hidden state crosses pad positions unchanged. A left-padded
+    row's real positions and final state therefore match its unpadded run,
+    making outputs invariant to micro-batch composition.
     """
     b, s, _ = x.shape
     xi, z, di, ds, _ = _ssm_inputs(cfg, p, x)
+    if mask is not None:
+        xi = jnp.where(mask[..., None], xi, 0)
     xc, _ = _causal_conv(p, xi)
     dt, b_mat, c_mat = _dt_b_c(cfg, p, xc)
+    if mask is not None:
+        dt = jnp.where(mask[..., None], dt, 0.0)
 
     neg_a = -jnp.exp(p["A_log"])                             # (di,ds)
     q = min(SSM_CHUNK, s)
@@ -147,7 +161,13 @@ def apply_mamba_train(
     y = shard(y, "batch", "seq", "ssm_inner")
     out = y @ p["out_proj"]
     if return_state:
-        conv_tail = xi[:, -(cfg.ssm_d_conv - 1):, :]
+        dc1 = cfg.ssm_d_conv - 1
+        # Short prompts: pad the window front with zeros — exactly what the
+        # causal conv's implicit front padding supplies. ``xi`` is already
+        # zeroed at pad positions, so a left-padded row's window matches
+        # its unpadded run.
+        conv_tail = (xi[:, -dc1:, :] if s >= dc1
+                     else jnp.pad(xi, ((0, 0), (dc1 - s, 0), (0, 0))))
         state = {"h": h_final, "conv": conv_tail}
         return out, state
     return out

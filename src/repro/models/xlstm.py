@@ -199,10 +199,18 @@ def mlstm_step(q, k, v, log_i, log_f, state):
     return h_t, {"C": c_t, "n": n_t, "m": m_t}
 
 
-def _mlstm_front(cfg, p, x, conv_state=None):
-    """Up-projection + causal conv; returns (xc, xv, z, new_conv_state)."""
+def _mlstm_front(cfg, p, x, conv_state=None, mask=None):
+    """Up-projection + causal conv; returns (xc, xv, z, new_conv_state).
+
+    ``mask`` (B, S) bool zeroes pad inputs of a left-padded batch before
+    the conv, so the window over leading pads matches the zero front
+    padding an unpadded run sees (and the value stream ``xv`` is exactly
+    zero at pads).
+    """
     xz = x @ p["up_proj"]
     xi, z = jnp.split(xz, 2, axis=-1)
+    if mask is not None:
+        xi = jnp.where(mask[..., None], xi, 0)
     if not get_rule("xlstm_gather_params"):
         xi = shard(xi, "batch", "seq", "ssm_inner")
     dc = p["conv_w"].shape[0]
@@ -220,14 +228,27 @@ def _mlstm_front(cfg, p, x, conv_state=None):
 
 
 def apply_mlstm_train(
-    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False
+    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False,
+    mask=None,
 ):
+    """``mask`` (B, S) bool marks real tokens of a left-padded batch.
+
+    Pad steps contribute nothing to the chunkwise recurrence: the masked
+    conv front makes the value stream exactly zero at pads, and the gates
+    are overridden to ``log_i -> -inf`` (pad sources get weight
+    exp(-inf) = 0) and ``log_f -> 0`` (identity decay — the carried state
+    crosses pads unchanged). Real positions and the final (C, n, m) state
+    then match the row's unpadded run.
+    """
     p = _maybe_gather(p)
     b, t, _ = x.shape
     di = cfg.xlstm_d_inner
-    xc, xv, z, _ = _mlstm_front(cfg, p, x)
+    xc, xv, z, _ = _mlstm_front(cfg, p, x, mask=mask)
     q, k, v = _mlstm_qkv(cfg, p, xc, xv)
     log_i, log_f = _mlstm_gates(p, xc)
+    if mask is not None:
+        log_i = jnp.where(mask[..., None], log_i, NEG_INF)
+        log_f = jnp.where(mask[..., None], log_f, 0.0)
     h, state = mlstm_chunkwise(q, k, v, log_i, log_f)
     h = h.reshape(b, t, di).astype(x.dtype) + p["skip"] * xc
     out = (h * jax.nn.silu(z)) @ p["down_proj"]
@@ -337,32 +358,59 @@ def _slstm_ffn(p: Dict, x: jax.Array) -> jax.Array:
 
 
 def apply_slstm_train(
-    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False
+    cfg: ArchConfig, p: Dict, x: jax.Array, return_state: bool = False,
+    mask=None,
 ):
+    """``mask`` (B, S) bool marks real tokens of a left-padded batch.
+
+    The sLSTM scan is strictly sequential, so masking is exact state
+    passthrough: at a pad step the cell state (c, n, m, h) is carried
+    through unchanged, and the real-token trajectory is bitwise the same
+    as the row's unpadded run.
+    """
     p = _maybe_gather(p)
     b, t, d = x.shape
     nh = cfg.xlstm_n_heads
     wx = x @ p["w"] + p["b"].astype(x.dtype)          # hoisted out of the scan
 
-    def step(state, wx_t):
-        new = _slstm_cell(p, wx_t, state, nh)
-        return new, new["h"]
+    if mask is None:
+        # Unmasked fast path: no per-step select over the cell state.
+        def step(state, wx_t):
+            new = _slstm_cell(p, wx_t, state, nh)
+            return new, new["h"]
+
+        xs = wx.swapaxes(0, 1)                        # (T,B,4d)
+
+        def reshape_seg(seg):
+            return xs.reshape(t // seg, seg, b, -1)
+    else:
+        def step(state, inputs):
+            wx_t, m_t = inputs
+            new = _slstm_cell(p, wx_t, state, nh)
+            new = jax.tree.map(
+                lambda a, prev: jnp.where(m_t[:, None], a, prev), new, state)
+            return new, new["h"]
+
+        xs = (wx.swapaxes(0, 1), mask.swapaxes(0, 1))  # (T,B,4d), (T,B)
+
+        def reshape_seg(seg):
+            return (xs[0].reshape(t // seg, seg, b, -1),
+                    xs[1].reshape(t // seg, seg, b))
 
     state0 = init_slstm_cache(cfg, b)
-    wxt = wx.swapaxes(0, 1)                           # (T,B,4d)
     seg = SLSTM_SEG
     if t % seg == 0 and t > seg:
         # Two-level scan: AD saves carries only at segment boundaries and
         # recomputes within a segment (T x per-step states would otherwise
         # dominate training memory at 4k seq).
         @jax.checkpoint
-        def seg_fn(state, wx_seg):
-            return jax.lax.scan(step, state, wx_seg)
+        def seg_fn(state, seg_inputs):
+            return jax.lax.scan(step, state, seg_inputs)
 
-        final, hs = jax.lax.scan(seg_fn, state0, wxt.reshape(t // seg, seg, b, -1))
+        final, hs = jax.lax.scan(seg_fn, state0, reshape_seg(seg))
         h = hs.reshape(t, b, -1).swapaxes(0, 1).astype(x.dtype)
     else:
-        final, hs = jax.lax.scan(step, state0, wxt)
+        final, hs = jax.lax.scan(step, state0, xs)
         h = hs.swapaxes(0, 1).astype(x.dtype)         # (B,T,d)
     out = _slstm_ffn(p, h)
     if return_state:

@@ -64,10 +64,11 @@ def pad_prompts(prompts: Sequence[np.ndarray], pad_id: int = 0) -> jax.Array:
 
     Left padding keeps the *last* prompt position real, which is what the
     greedy prefill conditions the first generated token on. Pass the
-    matching :func:`prompt_pad_mask` into generate so attention members
-    never attend pad positions (batch-composition invariance). SSM/xLSTM
-    members still carry pad state through their scans (masked scans are a
-    ROADMAP follow-up), as does MoE capacity dispatch.
+    matching :func:`prompt_pad_mask` into generate so every mixer family
+    ignores pad positions — attention masks pad keys, SSM/xLSTM scans
+    treat pads as identity updates, MoE excludes pads from capacity
+    accounting — making each request's output invariant to its micro-batch
+    neighbors (pinned by tests/test_masked_prefill.py).
     """
     s_max = max(int(len(p)) for p in prompts)
     out = np.full((len(prompts), s_max), pad_id, np.int32)

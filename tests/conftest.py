@@ -3,6 +3,27 @@
 import numpy as np
 import pytest
 
+# One smoke config per mixer family in the pool: dense attention, xLSTM
+# (sLSTM + mLSTM), MoE (attention + capacity dispatch), and the jamba-style
+# SSM hybrid (mamba + attention + MoE). The cross-mixer invariance harness
+# (tests/test_masked_prefill.py) parametrizes over all of them; the
+# non-attention members are marked ``slow`` (greedy generation on CPU) and
+# run in the scheduled full-suite CI lane, while the attention member pins
+# the property in the fast lane.
+MIXER_SMOKE_CONFIGS = (
+    "qwen3-0.6b",
+    pytest.param("xlstm-1.3b", marks=pytest.mark.slow),
+    pytest.param("granite-moe-1b-a400m", marks=pytest.mark.slow),
+    pytest.param("jamba-1.5-large-398b", marks=pytest.mark.slow),
+)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: expensive cross-mixer invariance runs; deselect with "
+        "-m 'not slow' (fast CI lane), full suite runs on a schedule")
+
 
 @pytest.fixture(scope="session")
 def small_routerbench():
@@ -14,3 +35,16 @@ def small_routerbench():
 @pytest.fixture(scope="session")
 def pool1(small_routerbench):
     return small_routerbench.pool("pool1")
+
+
+@pytest.fixture(scope="session", params=MIXER_SMOKE_CONFIGS)
+def mixer_member(request):
+    """(name, smoke config, params) for one pool-member mixer family."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import lm as lm_mod
+
+    cfg = get_smoke_config(request.param)
+    params = lm_mod.init_lm(jax.random.key(0), cfg)
+    return request.param, cfg, params

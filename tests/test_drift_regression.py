@@ -1,0 +1,87 @@
+"""Deterministic regression pins for drift-detector calibration.
+
+The bootstrap null is the detector's *threshold*: alarms compare window
+statistics to (mean, std) estimated by resampling the reference. These
+tests pin (a) that a fixed-seed ``fit`` reproduces the null bit-for-bit
+across runs, (b) the calibrated values themselves against hardcoded
+regression constants (any change to the bootstrap — rng flow, inflation
+factor, statistic definitions — shows up here first), and (c) that a
+known synthetic drift trace raises its first alarm at a pinned window
+index with a pinned total alarm count.
+"""
+import numpy as np
+import pytest
+
+from repro.online.drift import DriftDetector
+
+DQ = 16
+
+# Regression constants: computed once from the fixed seeds below. These are
+# environment-stable (float64 numpy ops under a seeded PCG64 generator);
+# loosened only by the assert tolerances.
+PINNED_NULL_SHIFT = (0.10667235674373693, 0.017437568260171257)
+PINNED_NULL_DISPERSION = (0.5645120898261666, 0.018845105992954077)
+PINNED_FIRST_ALARM_WINDOW = 7      # patience=2: windows 6,7 abnormal
+PINNED_TOTAL_ALARMS = 4            # re-arms every `patience` shifted windows
+
+
+def _emb(rng, n, sign=1.0):
+    e = rng.normal(0, 0.4, size=(n, DQ)).astype(np.float32)
+    e[:, : DQ // 2] += 0.8 * sign
+    return e / np.linalg.norm(e, axis=1, keepdims=True)
+
+
+def _fit_detector():
+    ref = _emb(np.random.default_rng(42), 300)
+    return DriftDetector(window=32, threshold=3.0, patience=2,
+                         n_bootstrap=64, seed=5).fit(ref)
+
+
+class TestBootstrapNullStability:
+    def test_fixed_seed_fit_is_bitwise_reproducible(self):
+        d1, d2 = _fit_detector(), _fit_detector()
+        assert d1.null_shift == d2.null_shift
+        assert d1.null_dispersion == d2.null_dispersion
+        np.testing.assert_array_equal(d1.ref_mean, d2.ref_mean)
+
+    def test_null_matches_pinned_regression_values(self):
+        det = _fit_detector()
+        np.testing.assert_allclose(det.null_shift, PINNED_NULL_SHIFT,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(det.null_dispersion,
+                                   PINNED_NULL_DISPERSION, rtol=1e-6)
+
+    def test_null_std_strictly_positive(self):
+        det = _fit_detector()
+        assert det.null_shift[1] > 0 and det.null_dispersion[1] > 0
+
+
+class TestKnownTraceAlarmsAtPinnedStep:
+    def _run_trace(self):
+        det = _fit_detector()
+        trace_rng = np.random.default_rng(7)
+        fired = []
+        for i in range(14):
+            sign = 1.0 if i < 6 else -1.0          # drift begins at window 6
+            fired.append(bool(det.observe(_emb(trace_rng, 32, sign),
+                                          now=float(i))))
+        return det, fired
+
+    def test_first_alarm_and_total_count_pinned(self):
+        det, fired = self._run_trace()
+        assert fired.index(True) == PINNED_FIRST_ALARM_WINDOW
+        assert det.alarms == PINNED_TOTAL_ALARMS
+        assert not any(fired[:6])                  # no pre-drift false alarm
+
+    def test_trace_replays_identically(self):
+        d1, f1 = self._run_trace()
+        d2, f2 = self._run_trace()
+        assert f1 == f2
+        assert d1.alarms == d2.alarms
+        assert d1.last_stats == d2.last_stats
+
+    def test_refit_recovers_from_pinned_trace(self):
+        det, _ = self._run_trace()
+        det.refit()                                # re-anchor to new regime
+        trace_rng = np.random.default_rng(13)
+        assert not det.observe(_emb(trace_rng, 128, -1.0))

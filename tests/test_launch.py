@@ -22,10 +22,18 @@ from repro.launch.sharding import (
 from repro.models import lm as lm_mod
 
 
+def _make_abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        # jax<=0.4.x: AbstractMesh(shape_tuple) of (name, size) pairs.
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def abstract_mesh(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return _make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return _make_abstract_mesh((16, 16), ("data", "model"))
 
 
 class TestParamSpecs:

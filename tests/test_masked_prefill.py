@@ -1,15 +1,30 @@
-"""Masked prefill: left-padded generate micro-batches must not attend pads.
+"""Cross-mixer batch-invariance harness: left-padded generate micro-batches
+must produce the same output a request would get served alone.
 
-RoPE attention logits depend only on position differences, so a left-padded
-row (positions uniformly shifted by its pad count) attends exactly as its
-unpadded self once pad keys are masked in prefill and pad cache slots are
-flagged invalid for decode. These tests pin the resulting property: a
-request's output is invariant to its micro-batch neighbors.
+The serving scheduler coalesces heterogeneous prompts into left-padded
+micro-batches, so every mixer family in the pool has to ignore pad
+positions:
 
-Scope: attention mixers only — SSM/xLSTM masked scans and MoE capacity
-dispatch under padding are ROADMAP follow-ups, so the tests use the dense
-attention member (qwen3-0.6b smoke config).
+  * attention — RoPE logits depend only on position differences, so masking
+    pad keys (prefill) and flagging pad cache slots invalid per-row (decode)
+    makes a left-padded row attend exactly as its unpadded self;
+  * SSM (mamba) — pad steps are identity recurrence updates (``dt -> 0``
+    drives ``dA_log -> 0``, ``dBx -> 0``) and the conv front is zeroed at
+    pads, so the carried state crosses pads unchanged;
+  * xLSTM — mLSTM pads get ``log_i -> -inf`` / ``log_f -> 0`` plus a masked
+    conv/value stream; the sLSTM scan passes state through pad steps
+    untouched;
+  * MoE — pads are excluded from capacity accounting, position assignment,
+    combine weights, and the aux load-balance loss, so a real token is
+    never dropped because pads consumed expert capacity.
+
+``mixer_member`` (conftest) parametrizes the suite over one smoke config
+per family: qwen3-0.6b (attention), xlstm-1.3b (sLSTM+mLSTM),
+granite-moe-1b-a400m (MoE), jamba-style SSM hybrid (mamba+attn+MoE). The
+non-attention members are marked ``slow``.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,23 +32,27 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import lm as lm_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
 from repro.serving.engine import pad_prompts, prompt_pad_mask
 
 VOCAB = 64
+MAX_NEW = 4          # 1 prefill token + 3 decode steps after prefill
 
 
-@pytest.fixture(scope="module")
-def member():
-    cfg = get_smoke_config("qwen3-0.6b")
-    params = lm_mod.init_lm(jax.random.key(0), cfg)
-    return cfg, params
-
-
-def _gen(cfg, params, prompts, max_new=3):
+def _gen(cfg, params, prompts, max_new=MAX_NEW):
     toks = pad_prompts(prompts)
     mask = prompt_pad_mask(prompts)
     return np.asarray(lm_mod.greedy_generate(
         cfg, params, toks, max_new=max_new, attn_mask=mask))
+
+
+def _prompts(seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, VOCAB, size=5).astype(np.int32),
+            rng.integers(0, VOCAB, size=17).astype(np.int32),
+            rng.integers(0, VOCAB, size=11).astype(np.int32))
 
 
 class TestPadMask:
@@ -44,14 +63,16 @@ class TestPadMask:
         assert mask[0].tolist() == [False, False, True, True, True]
         assert mask[1].all()
 
-    def test_batch_composition_invariance(self, member):
+
+class TestCrossMixerInvariance:
+    """The headline contract, per mixer family: greedy generation through
+    prefill *and* decode is invariant to micro-batch composition."""
+
+    def test_batch_composition_invariance(self, mixer_member):
         """The same request generates identical tokens regardless of which
         (and how long) neighbors share its micro-batch."""
-        cfg, params = member
-        rng = np.random.default_rng(0)
-        p_short = rng.integers(0, VOCAB, size=5).astype(np.int32)
-        p_long = rng.integers(0, VOCAB, size=17).astype(np.int32)
-        p_other = rng.integers(0, VOCAB, size=11).astype(np.int32)
+        _, cfg, params = mixer_member
+        p_short, p_long, p_other = _prompts(0)
 
         alone = _gen(cfg, params, [p_short])
         with_long = _gen(cfg, params, [p_short, p_long])
@@ -62,10 +83,23 @@ class TestPadMask:
         # and the long neighbor (zero padding) is stable too
         np.testing.assert_array_equal(with_long[1], with_two[2])
 
-    def test_masked_prefill_matches_unpadded_logits(self, member):
+    def test_pad_count_invariance(self, mixer_member):
+        """Same prompt, different pad amounts -> same generated tokens."""
+        _, cfg, params = mixer_member
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, VOCAB, size=7).astype(np.int32)
+        ref = _gen(cfg, params, [prompt])[0]
+        for pad in (4, 9):
+            toks = jnp.asarray(np.pad(prompt, (pad, 0))[None])
+            mask = jnp.asarray((np.arange(pad + len(prompt)) >= pad)[None])
+            out = np.asarray(lm_mod.greedy_generate(
+                cfg, params, toks, max_new=MAX_NEW, attn_mask=mask))
+            np.testing.assert_array_equal(out[0], ref)
+
+    def test_masked_prefill_matches_unpadded_logits(self, mixer_member):
         """Left-pad + mask reproduces the unpadded prefill's last-token
-        logits (up to fp tolerance from shifted RoPE phases)."""
-        cfg, params = member
+        logits (up to fp re-association from the shape change)."""
+        _, cfg, params = mixer_member
         rng = np.random.default_rng(1)
         prompt = rng.integers(0, VOCAB, size=7).astype(np.int32)
 
@@ -82,10 +116,11 @@ class TestPadMask:
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-4, atol=2e-5)
 
-    def test_unmasked_padded_batch_differs(self, member):
-        """Control: without the mask, pad attendance leaks neighbor-length
-        information into the logits (this is the bug being fixed)."""
-        cfg, params = member
+    def test_unmasked_padded_prefill_differs(self, mixer_member):
+        """Control: without the mask, pad state/attendance leaks
+        neighbor-length information into the logits (the bug being
+        pinned out)."""
+        _, cfg, params = mixer_member
         rng = np.random.default_rng(2)
         prompt = rng.integers(1, VOCAB, size=7).astype(np.int32)
         pad = 6
@@ -99,3 +134,164 @@ class TestPadMask:
         unmasked, _ = lm_mod.apply_lm_prefill(cfg, params, padded, caches_b)
         assert not np.allclose(np.asarray(masked), np.asarray(unmasked),
                                rtol=2e-4, atol=2e-5)
+
+
+class TestRecurrentHandoff:
+    """Prefill->decode handoff for recurrent caches: the state a masked
+    padded prefill hands to decode equals the unpadded run's state (the
+    recurrent analogue of the attention path's per-row ``pad_valid``)."""
+
+    B, REAL, PAD = 2, 7, 6
+
+    def _padded_pair(self, d_model, seed, scale=0.4):
+        ks = jax.random.split(jax.random.key(seed), 2)
+        x = jax.random.normal(ks[0], (self.B, self.REAL, d_model)) * scale
+        junk = jax.random.normal(ks[1], (self.B, self.PAD, d_model)) * scale
+        xp = jnp.concatenate([junk, x], axis=1)
+        mask = jnp.asarray(
+            (np.arange(self.PAD + self.REAL) >= self.PAD)[None]
+            .repeat(self.B, axis=0))
+        return x, xp, mask
+
+    def _assert_state_close(self, solo, padded):
+        jax.tree.map(
+            lambda a, b_: np.testing.assert_allclose(
+                np.asarray(b_), np.asarray(a), rtol=2e-4, atol=2e-5),
+            solo, padded)
+
+    def test_mamba_state(self):
+        cfg = get_smoke_config("jamba-1.5-large-398b")
+        p = ssm_mod.init_mamba(jax.random.key(0), cfg)
+        x, xp, mask = self._padded_pair(cfg.d_model, 1)
+        out, solo = ssm_mod.apply_mamba_train(cfg, p, x, return_state=True)
+        out_p, padded = ssm_mod.apply_mamba_train(cfg, p, xp,
+                                                  return_state=True, mask=mask)
+        self._assert_state_close(solo, padded)
+        np.testing.assert_allclose(np.asarray(out_p[:, self.PAD:]),
+                                   np.asarray(out), rtol=2e-4, atol=2e-5)
+        # handoff: one decode step from either state agrees
+        x1 = jax.random.normal(jax.random.key(9), (self.B, 1, cfg.d_model))
+        cache = {**ssm_mod.init_mamba_cache(cfg, self.B), **solo}
+        cache_p = {**ssm_mod.init_mamba_cache(cfg, self.B), **padded}
+        o1, _ = ssm_mod.apply_mamba_decode(cfg, p, x1, cache)
+        o2, _ = ssm_mod.apply_mamba_decode(cfg, p, x1, cache_p)
+        np.testing.assert_allclose(np.asarray(o2), np.asarray(o1),
+                                   rtol=2e-4, atol=2e-5)
+
+    def test_mlstm_state(self):
+        cfg = get_smoke_config("xlstm-1.3b")
+        p = xlstm_mod.init_mlstm(jax.random.key(2), cfg)
+        x, xp, mask = self._padded_pair(cfg.d_model, 3)
+        out, solo = xlstm_mod.apply_mlstm_train(cfg, p, x, return_state=True)
+        out_p, padded = xlstm_mod.apply_mlstm_train(cfg, p, xp,
+                                                    return_state=True,
+                                                    mask=mask)
+        self._assert_state_close(solo, padded)
+        np.testing.assert_allclose(np.asarray(out_p[:, self.PAD:]),
+                                   np.asarray(out), rtol=2e-4, atol=2e-5)
+
+    def test_slstm_state(self):
+        cfg = get_smoke_config("xlstm-1.3b")
+        p = xlstm_mod.init_slstm(jax.random.key(4), cfg)
+        x, xp, mask = self._padded_pair(cfg.d_model, 5)
+        out, solo = xlstm_mod.apply_slstm_train(cfg, p, x, return_state=True)
+        out_p, padded = xlstm_mod.apply_slstm_train(cfg, p, xp,
+                                                    return_state=True,
+                                                    mask=mask)
+        self._assert_state_close(solo, padded)
+        np.testing.assert_allclose(np.asarray(out_p[:, self.PAD:]),
+                                   np.asarray(out), rtol=2e-4, atol=2e-5)
+
+
+class TestMoEPadCapacity:
+    """Pad tokens must not consume expert capacity, shift real tokens'
+    buffer positions, or bias the aux load-balance statistics."""
+
+    T, REAL = 16, 4
+
+    def _setup(self, cf=1.0):
+        cfg = dataclasses.replace(
+            get_smoke_config("granite-moe-1b-a400m"), capacity_factor=cf)
+        p = moe_mod.init_moe(jax.random.key(7), cfg)
+        # Pads share one embedding (a constant pad-token row), so under the
+        # old accounting they pile onto the same top-k experts and exhaust
+        # their capacity before the real tokens are placed.
+        xr = jax.random.normal(jax.random.key(8), (self.REAL, cfg.d_model))
+        padvec = jnp.tile(
+            jax.random.normal(jax.random.key(9), (1, cfg.d_model)),
+            (self.T - self.REAL, 1))
+        x = jnp.concatenate([padvec, xr], axis=0)
+        valid = np.arange(self.T) >= self.T - self.REAL
+        return cfg, p, x, xr, jnp.asarray(valid)
+
+    @staticmethod
+    def _kept(gate_idx, n_experts, cap, counted):
+        """Replicate the dispatcher's flattened (token-major, slot-minor)
+        cumulative position accounting in plain numpy."""
+        counts = np.zeros(n_experts, np.int64)
+        kept = np.zeros(gate_idx.shape, bool)
+        for t in range(gate_idx.shape[0]):
+            for j, ex in enumerate(gate_idx[t]):
+                if not counted[t]:
+                    continue
+                kept[t, j] = counts[ex] < cap
+                counts[ex] += 1
+        return kept
+
+    def test_old_accounting_drops_real_token_new_does_not(self):
+        """The acceptance case: under the old (pad-counting) capacity
+        accounting a real token loses expert slots to pads; the
+        pad-excluded accounting restores exactly the solo run's placement."""
+        cfg, p, x, xr, valid = self._setup()
+        probs = np.asarray(moe_mod._router_probs(p, x))
+        gate_idx = np.asarray(jax.lax.top_k(jnp.asarray(probs), cfg.top_k)[1])
+        valid_np = np.asarray(valid)
+
+        cap_old = moe_mod._capacity(self.T, cfg)
+        cap_new = moe_mod._capacity(self.REAL, cfg)
+        kept_old = self._kept(gate_idx, cfg.n_experts, cap_old,
+                              np.ones(self.T, bool))
+        kept_new = self._kept(gate_idx, cfg.n_experts, cap_new, valid_np)
+
+        kept_solo = self._kept(gate_idx[self.T - self.REAL:], cfg.n_experts,
+                               cap_new, np.ones(self.REAL, bool))
+        real = slice(self.T - self.REAL, self.T)
+        # pads exhausted capacity a real token needed...
+        assert (~kept_old[real] & kept_new[real]).any()
+        # ...and the pad-excluded accounting matches the solo run slot-for-slot
+        np.testing.assert_array_equal(kept_new[real], kept_solo)
+
+    def test_pad_excluded_dispatch_matches_solo_run(self):
+        cfg, p, x, xr, valid = self._setup()
+        out_new, aux_new = moe_mod._dispatch_combine(cfg, p, x, valid=valid)
+        out_solo, aux_solo = moe_mod._dispatch_combine(cfg, p, xr)
+        out_old, aux_old = moe_mod._dispatch_combine(cfg, p, x)
+        real = slice(self.T - self.REAL, self.T)
+        np.testing.assert_allclose(np.asarray(out_new[real]),
+                                   np.asarray(out_solo), rtol=1e-6, atol=1e-6)
+        # old accounting visibly corrupts a real token's output
+        assert not np.allclose(np.asarray(out_old[real]),
+                               np.asarray(out_solo), rtol=1e-3, atol=1e-4)
+        # pads don't write anything under the mask
+        np.testing.assert_array_equal(
+            np.asarray(out_new[: self.T - self.REAL]), 0.0)
+
+    def test_aux_loss_excludes_pads(self):
+        cfg, p, x, xr, valid = self._setup()
+        _, aux_new = moe_mod._dispatch_combine(cfg, p, x, valid=valid)
+        _, aux_solo = moe_mod._dispatch_combine(cfg, p, xr)
+        _, aux_old = moe_mod._dispatch_combine(cfg, p, x)
+        assert np.isclose(float(aux_new), float(aux_solo), rtol=1e-6)
+        assert not np.isclose(float(aux_old), float(aux_solo), rtol=1e-3)
+
+    def test_moe_train_rows_masked_independently(self):
+        """apply_moe_train threads a per-row mask: a padded row's real
+        tokens match the same row served unpadded."""
+        cfg, p, x, xr, valid = self._setup()
+        xb = jnp.stack([x, x])                          # (2, T, D)
+        mask = jnp.stack([valid, jnp.ones_like(valid)])
+        out, _ = moe_mod.apply_moe_train(cfg, p, xb, mask=mask)
+        out_solo, _ = moe_mod.apply_moe_train(cfg, p, xr[None])
+        np.testing.assert_allclose(
+            np.asarray(out[0, self.T - self.REAL:]),
+            np.asarray(out_solo[0]), rtol=1e-6, atol=1e-6)
