@@ -1,0 +1,206 @@
+"""Multi-worker serving-plane benchmark (ours): N-worker reward parity
+with the single-worker online adapter under drift, plus the decode-path
+MoE no-drop audit.
+
+Same scenario as benchmarks/online_bench.py — the trace's content drifts
+across benchmark mixtures while the pool's relative strengths reverse on
+the drifted domain — but the adapted run is replayed twice:
+
+  * **solo**  — one scheduler + one OnlineAdapter (the PR-2 loop);
+  * **plane** — 4 workers with follower adapters, the coordinator running
+    the replay-merge -> leader-update -> broadcast cycle
+    (repro.distributed).
+
+Acceptance gates (ISSUE 4):
+  * plane back-half mean realized reward within 0.02 of solo;
+  * every worker converges to the same router version;
+  * zero decode-path MoE token drops across the whole run (the pool
+    includes the MoE member; ``moe.DECODE_DROP_LOG`` records per-call
+    dropped-token counts from inside the dispatch).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.rewards import reward_exponential
+from repro.distributed import (
+    Coordinator,
+    ServingPlane,
+    SyncConfig,
+    WorkerNode,
+)
+from repro.launch.serve import build_routed_engine, pool_quality_columns
+from repro.models import moe as moe_mod
+from repro.online import (
+    DriftDetector,
+    ExplorationConfig,
+    OnlineAdapter,
+    OnlineUpdateConfig,
+)
+from repro.serving import (
+    MicroBatchScheduler,
+    RoutedEngine,
+    SchedulerConfig,
+    TraceConfig,
+    default_service_model,
+    make_trace,
+)
+from repro.serving.scheduler import SimClock
+
+POOL = ["qwen3-0.6b", "granite-moe-1b-a400m", "granite-3-8b"]
+N_REQUESTS = 192
+N_WORKERS = 4
+LAM = 2e-3              # on the pool's $/request scale (see online_bench)
+SEED = 0
+PARITY = 0.02           # allowed back-half reward deficit vs. solo
+
+
+def _serving_truth(engine, data):
+    """Per-text realized quality under the POST-change regime (group-B
+    benchmarks get their pool quality columns reversed — the offline
+    snapshot's world no longer holds there)."""
+    quality = data.quality[:, pool_quality_columns(engine.pool, data)]
+    names = sorted(set(data.benchmark.tolist()))
+    group_b = np.isin(data.benchmark, names[len(names) // 2:])
+    truth = quality.copy()
+    truth[group_b] = truth[group_b][:, ::-1]
+    return {data.texts[i]: truth[i] for i in range(len(data.texts))}
+
+
+def _make_trace(engine, data, te):
+    return make_trace(
+        TraceConfig(kind="drift", n_requests=N_REQUESTS, rate=800.0,
+                    seed=SEED, max_new=2, prompt_len_max=24,
+                    vocab=min(m.cfg.vocab_size for m in engine.pool)),
+        texts=[data.texts[i] for i in te],
+        benchmarks=[data.benchmark[i] for i in te],
+    )
+
+
+def _score(trace, engine, truth):
+    order = sorted(trace, key=lambda r: r.arrival_s)
+    cost_rates = np.asarray([m.cost_rate for m in engine.pool])
+    rewards = []
+    for r in order:
+        per_member = np.asarray(reward_exponential(
+            np.asarray(truth[r.text]), cost_rates, LAM))
+        rewards.append(float(per_member[r.member]))
+    half = len(order) // 2
+    return {
+        "mean_reward_back": float(np.mean(rewards[half:])),
+        "mean_reward_full": float(np.mean(rewards)),
+    }
+
+
+def _run_solo(engine, data, te, truth):
+    tr, _, _ = data.split(seed=SEED)
+    adapter = OnlineAdapter(
+        engine,
+        lambda req: float(truth[req.text][req.member]),
+        config=OnlineUpdateConfig(update_every=16, steps_per_update=16,
+                                  burst_steps=48, batch_size=64),
+        exploration=ExplorationConfig(epsilon=0.1, seed=SEED),
+        drift=DriftDetector(window=48, threshold=3.0).fit(
+            data.emb[tr], engine.router.centroids),
+        seed=SEED,
+    )
+    sched = MicroBatchScheduler(
+        engine, SchedulerConfig(score_batch=32, max_batch=8),
+        service_time=default_service_model(), adapter=adapter)
+    trace = _make_trace(engine, data, te)
+    sched.run_trace(trace)
+    return {**_score(trace, engine, truth), "adapter": adapter}
+
+
+def _run_plane(base_engine, data, te, truth):
+    tr, _, _ = data.split(seed=SEED)
+    workers = []
+    for wid in range(N_WORKERS):
+        weng = RoutedEngine(router=base_engine.router, pool=base_engine.pool,
+                            lam=LAM)
+        wseed = SEED + 101 * wid + 1
+        adapter = OnlineAdapter(
+            weng,
+            lambda req: float(truth[req.text][req.member]),
+            config=OnlineUpdateConfig(batch_size=64),
+            exploration=ExplorationConfig(epsilon=0.1, seed=wseed),
+            drift=DriftDetector(window=16, threshold=3.0).fit(
+                data.emb[tr], base_engine.router.centroids),
+            defer_updates=True, seed=wseed,
+        )
+        sched = MicroBatchScheduler(
+            weng, SchedulerConfig(score_batch=32, max_batch=8),
+            clock=SimClock(), service_time=default_service_model(),
+            adapter=adapter)
+        workers.append(WorkerNode(wid, weng, sched, adapter))
+    # Budgeted so leader training work tracks the solo adapter's: solo runs
+    # ~12 updates x 16 steps over the trace; the plane reaches min_buffer a
+    # couple of sync boundaries later (distinct-outcome guard), so each of
+    # its ~9 rounds runs proportionally more steps on the merged buffer.
+    coord = Coordinator(workers, SyncConfig(
+        sync_every_s=0.02, merge_per_worker=48, steps_per_sync=32,
+        burst_steps=48, seed=SEED,
+        update=OnlineUpdateConfig(batch_size=64)))
+    plane = ServingPlane(workers, coord)
+    trace = _make_trace(base_engine, data, te)
+    plane.run_trace(trace)
+    versions = sorted({w.router_version for w in workers})
+    return {**_score(trace, base_engine, truth),
+            "versions": versions, "plane": plane, "coord": coord}
+
+
+def main() -> None:
+    # Count every decode-path MoE drop across BOTH runs — the no-drop
+    # guarantee must hold under real micro-batched serving traffic.
+    moe_mod.DECODE_DROP_LOG = []
+    try:
+        solo_eng, data, te = build_routed_engine(
+            POOL, seed=SEED, epochs=60, n_traffic=900, lam=LAM)
+        plane_eng = RoutedEngine(router=solo_eng.router, pool=solo_eng.pool,
+                                 lam=LAM)
+        truth = _serving_truth(solo_eng, data)
+
+        solo = _run_solo(solo_eng, data, te, truth)
+        plane = _run_plane(plane_eng, data, te, truth)
+        drops = int(sum(moe_mod.DECODE_DROP_LOG))
+        decode_calls = len(moe_mod.DECODE_DROP_LOG)
+    finally:
+        moe_mod.DECODE_DROP_LOG = None
+
+    emit("distributed/solo/back_half_reward", 0.0,
+         f"reward={solo['mean_reward_back']:.4f}")
+    emit("distributed/plane/back_half_reward", 0.0,
+         f"reward={plane['mean_reward_back']:.4f}")
+    delta = plane["mean_reward_back"] - solo["mean_reward_back"]
+    emit("distributed/parity/back_half_reward", 0.0, f"delta={delta:+.4f}")
+    emit("distributed/plane/router_versions", 0.0,
+         "versions=" + "|".join(str(v) for v in plane["versions"]))
+    c = plane["coord"].stats
+    emit("distributed/plane/sync", 0.0,
+         f"syncs={c['syncs']};merged={c['merged']};updates={c['updates']}"
+         f";bursts={c['bursts']};stale_rejected={c['stale_rejected']}")
+    emit("distributed/moe/decode_drops", 0.0,
+         f"drops={drops};decode_calls={decode_calls}")
+
+    if delta < -PARITY:
+        raise SystemExit(
+            f"multi-worker plane lost more than {PARITY} back-half reward "
+            f"vs the single-worker adapter (delta={delta:+.4f})")
+    if len(plane["versions"]) != 1:
+        raise SystemExit(
+            f"workers did not converge to one router version: "
+            f"{plane['versions']}")
+    if decode_calls == 0:
+        raise SystemExit(
+            "decode-drop audit recorded zero MoE decode calls — the "
+            "no-drop gate would be vacuous (DECODE_DROP_LOG must be set "
+            "before the decode path is first traced)")
+    if drops != 0:
+        raise SystemExit(
+            f"decode-path MoE dropped {drops} tokens "
+            f"(over {decode_calls} decode calls)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import sys
 import time
 
 from benchmarks import (
+    distributed_bench,
     fig4_5_domains,
     fig6_distribution,
     kernel_bench,
@@ -34,6 +35,7 @@ SUITES = {
     "roofline": roofline.main,
     "serving": serving_bench.main,
     "online": online_bench.main,
+    "distributed": distributed_bench.main,
 }
 
 

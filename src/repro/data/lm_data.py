@@ -49,3 +49,35 @@ class MarkovCorpus:
         while True:
             seqs = np.stack([self.sample(rng, seq_len + 1) for _ in range(batch)])
             yield seqs[:, :-1], seqs[:, 1:]
+
+    def padded_batches(
+        self, batch: int, seq_len: int, *, min_len: int = None,
+        seed: int = 0, pad_id: int = 0
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Variable-length batches, left-padded: (tokens, labels, mask).
+
+        Per-row lengths are uniform over [min_len, seq_len] (min_len
+        defaults to ``seq_len // 4``, floored at 2); rows are left-padded
+        to the fixed ``seq_len`` so jitted train steps see one static
+        shape — the same convention the serving engine's ``pad_prompts``
+        uses for generate micro-batches. ``mask`` (batch, seq_len) bool is
+        True at real positions; tokens/labels under pads are ``pad_id``
+        and MUST be excluded through ``lm_loss(attn_mask=mask)`` (which
+        also drives the MoE pad-aware capacity accounting). Streams
+        deterministically under a fixed seed.
+        """
+        min_len = max(2, seq_len // 4) if min_len is None else min_len
+        if not 1 <= min_len <= seq_len:
+            raise ValueError(f"min_len {min_len} not in [1, {seq_len}]")
+        rng = np.random.default_rng(seed)
+        while True:
+            toks = np.full((batch, seq_len), pad_id, np.int32)
+            labs = np.full((batch, seq_len), pad_id, np.int32)
+            mask = np.zeros((batch, seq_len), bool)
+            lens = rng.integers(min_len, seq_len + 1, size=batch)
+            for i, length in enumerate(lens):
+                seq = self.sample(rng, int(length) + 1)
+                toks[i, seq_len - length:] = seq[:-1]
+                labs[i, seq_len - length:] = seq[1:]
+                mask[i, seq_len - length:] = True
+            yield toks, labs, mask

@@ -1,0 +1,29 @@
+"""Multi-worker serving plane: the serve->learn loop across N workers.
+
+Converts every in-process singleton of the single-worker online loop into
+an explicitly synchronized, worker-replicated component:
+
+  * :mod:`worker` — :class:`WorkerNode`: engine replica + scheduler +
+    local replay, with crash/rejoin semantics;
+  * :mod:`coordinator` — :class:`Coordinator`: seeded deterministic replay
+    merge onto the leader, bounded leader updates, versioned router
+    broadcast with stale-publish rejection, lowest-id leader election;
+  * :mod:`ledger` — :class:`SharedBudgetLedger`: one global $/window
+    budget across all workers' governors;
+  * :mod:`plane` — :class:`ServingPlane`: the deterministic multi-clock
+    event loop, round-robin request assignment, scenario (crash/rejoin)
+    events, and per-worker telemetry rollup.
+
+Driver: ``python -m repro.launch.serve --workers N`` (see README
+"Multi-worker serving"); parity benchmark:
+``benchmarks/distributed_bench.py``.
+"""
+from repro.distributed.coordinator import Coordinator, SyncConfig
+from repro.distributed.ledger import SharedBudgetLedger
+from repro.distributed.plane import PlaneEvent, ServingPlane
+from repro.distributed.worker import WorkerNode
+
+__all__ = [
+    "Coordinator", "PlaneEvent", "ServingPlane", "SharedBudgetLedger",
+    "SyncConfig", "WorkerNode",
+]

@@ -1,0 +1,55 @@
+"""Shared budget ledger: one $/window budget across N scheduler workers.
+
+With per-worker :class:`~repro.serving.budget.BudgetGovernor` instances,
+"at most $B per window" silently becomes "$N*B per window" — each worker
+only sees its own spend. The ledger is a single governor every worker
+records into, so utilization and the effective lambda reflect the *global*
+spend.
+
+Two multi-worker wrinkles:
+
+  * **controller cadence** — each worker calls ``update()`` once per
+    dispatch round; N workers would apply N proportional controller steps
+    per window and oscillate. The ledger throttles the controller to at
+    most one step per ``update_min_interval_s`` of virtual time; throttled
+    calls return the current lambda unchanged (workers still *read* a
+    fresh effective lambda every round).
+  * **clock skew** — workers advance independent virtual clocks, so spend
+    events arrive slightly out of time order. The ledger clamps to a
+    monotone high-water time, keeping the rolling-window deque sorted;
+    the distortion is bounded by the worker skew, which the plane keeps
+    well under the window length.
+"""
+from __future__ import annotations
+
+from repro.serving.budget import BudgetGovernor
+
+
+class SharedBudgetLedger(BudgetGovernor):
+    def __init__(self, budget: float, window_s: float = 10.0, *,
+                 update_min_interval_s: float = None, **kwargs):
+        super().__init__(budget, window_s, **kwargs)
+        self.update_min_interval_s = (
+            window_s / 20.0 if update_min_interval_s is None
+            else update_min_interval_s)
+        self._now_hwm = 0.0
+        self._last_ctrl = float("-inf")
+        self.throttled = 0
+
+    def _monotone(self, now: float) -> float:
+        self._now_hwm = max(self._now_hwm, float(now))
+        return self._now_hwm
+
+    def record(self, cost: float, now: float) -> None:
+        super().record(cost, self._monotone(now))
+
+    def utilization(self, now: float) -> float:
+        return super().utilization(self._monotone(now))
+
+    def update(self, now: float) -> float:
+        t = self._monotone(now)
+        if t - self._last_ctrl < self.update_min_interval_s:
+            self.throttled += 1
+            return self.lam
+        self._last_ctrl = t
+        return super().update(t)

@@ -1,0 +1,172 @@
+"""Multi-worker serving plane: N micro-batching workers, one leader.
+
+Simulates a sharded deployment over local state: requests are assigned
+round-robin across workers (a front-door load balancer), every worker runs
+the continuous micro-batching loop from :mod:`repro.serving.scheduler`
+against the shared pool on its own virtual clock, and the
+:class:`~repro.distributed.coordinator.Coordinator` periodically runs the
+replay-merge -> leader-update -> broadcast cycle.
+
+The event loop is deterministic: it always advances the worker with the
+earliest next-action time (ties by worker id), fires sync rounds at fixed
+virtual-time boundaries, and applies crash/rejoin scenario events in
+timestamp order. A crashed worker's queued and future requests are
+reassigned to the survivors; a rejoining worker comes back with empty
+online state and catch-up swaps to the current router version.
+
+Wall-clock parallelism is simulated, not real: workers advance independent
+virtual clocks, which models N hosts serving concurrently while keeping
+the whole plane single-process, seeded, and bit-reproducible (the property
+every test and benchmark in this repo is built on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+from repro.serving.telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneEvent:
+    """A scenario event: ``kind`` is "crash" or "rejoin"."""
+    t: float
+    kind: str
+    wid: int
+
+
+class ServingPlane:
+    def __init__(self, workers: List, coordinator, *,
+                 sync_every_s: Optional[float] = None,
+                 events: Sequence[PlaneEvent] = ()):
+        self.workers = {w.wid: w for w in workers}
+        self.coordinator = coordinator
+        self.sync_every_s = (coordinator.config.sync_every_s
+                             if sync_every_s is None else sync_every_s)
+        self.events = sorted(
+            events, key=lambda e: (e.t, e.kind != "crash", e.wid))
+        self.reassigned = 0
+        self.ignored_events: List[PlaneEvent] = []
+        self._stash: List = []   # orphans while no worker is alive
+
+    # -- request assignment --------------------------------------------------
+
+    def _alive(self) -> List:
+        return [w for w in sorted(self.workers.values(), key=lambda w: w.wid)
+                if w.alive]
+
+    def _assign(self, reqs: Sequence) -> None:
+        """Round-robin a time-sorted request list over alive workers."""
+        alive = self._alive()
+        if not alive:
+            self._stash.extend(reqs)
+            return
+        buckets: Dict[int, List] = {w.wid: [] for w in alive}
+        for i, r in enumerate(sorted(reqs, key=lambda r: (r.arrival_s, r.rid))):
+            w = alive[i % len(alive)]
+            buckets[w.wid].append(r)
+        for w in alive:
+            if buckets[w.wid]:
+                merged = sorted(list(w.arrivals) + buckets[w.wid],
+                                key=lambda r: (r.arrival_s, r.rid))
+                w.arrivals = deque(merged)
+
+    # -- scenario events -----------------------------------------------------
+
+    def _apply_event(self, e: PlaneEvent) -> None:
+        w = self.workers[e.wid]
+        if e.kind == "crash" and w.alive:
+            orphans = w.crash(e.t)
+            self.reassigned += len(orphans)
+            self._assign(orphans)
+        elif e.kind == "rejoin" and not w.alive:
+            leader = self.coordinator.leader
+            router = leader.engine.router if leader is not None else None
+            w.rejoin(e.t, router)
+            if self._stash:
+                stash, self._stash = self._stash, []
+                self._assign(stash)
+        elif e.kind in ("crash", "rejoin"):
+            # Crash of a dead worker / rejoin of a live one: the protocol
+            # treats these as idempotent no-ops, but record them — a
+            # misordered scenario (rejoin scheduled before its crash)
+            # surfaces here instead of disappearing silently.
+            self.ignored_events.append(e)
+        else:
+            raise ValueError(f"unknown plane event kind {e.kind!r}")
+
+    # -- the deterministic event loop ----------------------------------------
+
+    def run_trace(self, trace: Sequence) -> Dict:
+        """Serve an open-loop trace across the worker fleet to completion."""
+        self._assign(list(trace))
+        ev = deque(self.events)
+        t_start = min((w.clock.now for w in self.workers.values()),
+                      default=0.0)
+        next_sync = t_start + self.sync_every_s
+        while True:
+            acts = [(w.next_action_s(), w.wid) for w in self._alive()]
+            acts = [a for a in acts if a[0] != float("inf")]
+            t_next, wid = min(acts) if acts else (float("inf"), -1)
+            t_ev = ev[0].t if ev else float("inf")
+            if t_next == float("inf"):
+                if ev:              # drain remaining scenario events
+                    self._apply_event(ev.popleft())
+                    continue
+                break
+            if t_ev <= t_next and t_ev <= next_sync:
+                self._apply_event(ev.popleft())
+                continue
+            if next_sync <= t_next:
+                self.coordinator.sync_round(next_sync)
+                next_sync += self.sync_every_s
+                continue
+            self.workers[wid].step(t_next)
+
+        t_end = max(w.clock.now for w in self.workers.values())
+        for w in self._alive():
+            if w.adapter is not None:
+                w.adapter.tick(t_end)     # final staged-feedback flush
+        self.coordinator.sync_round(t_end)
+        self.coordinator.converge()
+        for w in self.workers.values():
+            w.telemetry.rejected = w.queue.rejected
+            w.telemetry.expired = w.queue.expired
+        return self.summary(t_end - t_start)
+
+    # -- reporting -----------------------------------------------------------
+
+    def rollup(self) -> Telemetry:
+        return Telemetry.rollup(
+            [w.telemetry for w in sorted(self.workers.values(),
+                                         key=lambda w: w.wid)])
+
+    def summary(self, duration_s: Optional[float] = None) -> Dict:
+        merged = self.rollup()
+        out = merged.summary(duration_s)
+        out["n_workers"] = len(self.workers)
+        out["alive_workers"] = len(self._alive())
+        out["reassigned"] = self.reassigned
+        out["ignored_events"] = [dataclasses.asdict(e)
+                                 for e in self.ignored_events]
+        out["router_versions"] = {
+            w.wid: w.router_version for w in self.workers.values()}
+        out["per_worker_completed"] = {
+            w.wid: w.telemetry.completed for w in self.workers.values()}
+        out["coordinator"] = dict(self.coordinator.stats)
+        return out
+
+    def report(self, duration_s: Optional[float] = None) -> str:
+        merged = self.rollup()
+        lines = [merged.report(duration_s)]
+        versions = " ".join(
+            f"w{w.wid}:v{w.router_version}{'' if w.alive else '(down)'}"
+            for w in sorted(self.workers.values(), key=lambda w: w.wid))
+        ignored = (f"  ignored events {len(self.ignored_events)}"
+                   if self.ignored_events else "")
+        lines.append(
+            f"plane: {len(self._alive())}/{len(self.workers)} workers up  "
+            f"versions {versions}  reassigned {self.reassigned}{ignored}")
+        lines.append(self.coordinator.report())
+        return "\n".join(lines)

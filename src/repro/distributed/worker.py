@@ -1,0 +1,120 @@
+"""One serving-plane worker: engine replica + scheduler + local online state.
+
+A worker is the unit of replication in the multi-worker plane: it owns its
+own :class:`~repro.serving.engine.RoutedEngine` instance (so router swaps
+are per-worker and atomic), its own admission queue / micro-batching
+scheduler / virtual clock (workers run concurrently in real deployments —
+their virtual clocks advance independently), and — in online mode — a
+follower :class:`~repro.online.loop.OnlineAdapter` whose replay buffer is
+the worker's local outcome log. Pool member *parameters* are shared across
+workers (one copy of the weights per host in the simulated deployment).
+
+Crash/rejoin models a worker process dying: queued and future requests must
+be reassigned by the plane, and the in-memory online state (replay, staged
+feedback) does not survive — a rejoining worker comes back empty and
+catches up to the current router version from the leader.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from collections import deque
+
+
+class WorkerNode:
+    def __init__(self, wid: int, engine, scheduler, adapter=None):
+        self.wid = int(wid)
+        self.engine = engine
+        self.scheduler = scheduler
+        self.adapter = adapter
+        self.alive = True
+        self.arrivals = deque()      # assigned, not-yet-arrived requests
+        self.served: List = []       # completed requests, dispatch order
+        self.swaps_accepted = 0
+        self.swaps_rejected = 0
+        self.crashes = 0
+
+    # -- convenience ---------------------------------------------------------
+
+    @property
+    def clock(self):
+        return self.scheduler.clock
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    @property
+    def telemetry(self):
+        return self.scheduler.telemetry
+
+    @property
+    def router_version(self) -> int:
+        return self.engine.router.version
+
+    # -- router broadcast ----------------------------------------------------
+
+    def publish(self, router) -> bool:
+        """Atomically swap a broadcast router in; stale publishes rejected.
+
+        The engine's ``swap_router`` enforces the version ordering — a
+        worker that missed a broadcast can later accept a newer version,
+        but a delayed older broadcast can never roll this worker back.
+        """
+        try:
+            self.engine.swap_router(router)
+        except ValueError:
+            self.swaps_rejected += 1
+            return False
+        self.swaps_accepted += 1
+        return True
+
+    # -- plane event loop ----------------------------------------------------
+
+    def next_action_s(self) -> float:
+        """Earliest virtual time this worker can act (inf = nothing to do).
+
+        Delegates to the scheduler's ``next_dispatch_s`` so the dispatch
+        wake-time policy lives in one place for the solo and multi-worker
+        paths alike.
+        """
+        if not self.alive:
+            return float("inf")
+        return self.scheduler.next_dispatch_s(
+            self.arrivals[0].arrival_s if self.arrivals else None)
+
+    def step(self, t: float) -> List:
+        """Advance to ``t``, inject due arrivals, dispatch if ready."""
+        self.clock.advance_to(t)
+        while self.arrivals and self.arrivals[0].arrival_s <= self.clock.now:
+            self.queue.offer(self.arrivals.popleft(), self.clock.now)
+        self.telemetry.record_queue_depth(self.clock.now, self.queue.depth)
+        served = []
+        if self.scheduler.should_dispatch(flush=not self.arrivals):
+            served = self.scheduler.dispatch()
+            self.served.extend(served)
+        return served
+
+    # -- crash / rejoin ------------------------------------------------------
+
+    def crash(self, now: float) -> List:
+        """Kill the worker; returns orphaned (queued + future) requests
+        the plane must reassign. In-memory online state is lost."""
+        self.alive = False
+        self.crashes += 1
+        orphans = list(self.queue.pop(self.queue.depth)) + list(self.arrivals)
+        self.arrivals.clear()
+        return orphans
+
+    def rejoin(self, now: float, router=None,
+               replay_seed: Optional[int] = None) -> None:
+        """Restart after a crash: empty queue, fresh replay (nothing
+        survived the process), catch-up swap to the current router."""
+        self.alive = True
+        self.clock.advance_to(now)
+        if self.adapter is not None:
+            seed = (self.wid + 1) * 7919 + self.crashes if replay_seed is None \
+                else replay_seed
+            self.adapter.reset_outcome_state(seed)
+        if router is not None and router.version > self.engine.router.version:
+            self.publish(router)

@@ -3,12 +3,25 @@
     PYTHONPATH=src python -m repro.launch.serve --trace poisson --requests 200
     PYTHONPATH=src python -m repro.launch.serve --trace bursty --requests 200 \
         --budget 0.02 --budget-window 0.5 --lam 1.0
+    PYTHONPATH=src python -m repro.launch.serve --trace drift --requests 400 \
+        --workers 4 --online --crash-at 0.1 --rejoin-at 0.3
 
 Builds reduced pool members on CPU (full configs require the production
 mesh), trains the attention router on synthetic RouterBench traffic mapped
 onto the pool, then replays a simulated traffic scenario (poisson / bursty /
 drift) through the admission queue + continuous micro-batching scheduler,
 reporting per-member counts, spend vs. budget, and latency percentiles.
+
+``--workers N`` (N > 1) runs the multi-worker serving plane instead of the
+single scheduler: N workers (simulated multi-host over local state, each
+with its own engine replica, queue, and virtual clock) share the pool and —
+with ``--budget`` — one global SharedBudgetLedger; with ``--online`` the
+workers run follower adapters and the coordinator periodically merges their
+replay buffers onto the leader, runs the bounded update steps there, and
+broadcasts the versioned router to every worker. ``--crash-at``/
+``--rejoin-at`` inject a worker crash-and-rejoin scenario;
+``--feedback-delay`` routes quality feedback through the staged
+delayed-outcome path.
 
 Every random path — pool init, synthetic traffic, router training, the
 trace arrival/content sampling, and the prompt token RNG — derives from
@@ -138,7 +151,28 @@ def main(argv=None):
                     help="outcomes between scheduled incremental updates")
     ap.add_argument("--epsilon", type=float, default=0.05,
                     help="exploration rate at full budget headroom")
+    ap.add_argument("--feedback-delay", type=float, default=0.0,
+                    help="virtual seconds between completion and quality "
+                         "feedback (staged delayed-outcome path; 0 = "
+                         "feedback at completion time)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="N>1 runs the multi-worker serving plane "
+                         "(repro.distributed) with leader/follower sync")
+    ap.add_argument("--sync-every", type=float, default=0.05,
+                    help="virtual seconds between replay-merge/broadcast "
+                         "sync rounds (multi-worker only)")
+    ap.add_argument("--crash-at", type=float, default=None,
+                    help="crash --crash-worker at this virtual time "
+                         "(multi-worker only)")
+    ap.add_argument("--rejoin-at", type=float, default=None,
+                    help="rejoin the crashed worker at this virtual time")
+    ap.add_argument("--crash-worker", type=int, default=1,
+                    help="worker id for the crash/rejoin scenario")
     args = ap.parse_args(argv)
+    if (args.crash_at is not None and args.rejoin_at is not None
+            and args.rejoin_at <= args.crash_at):
+        ap.error(f"--rejoin-at ({args.rejoin_at}) must be after "
+                 f"--crash-at ({args.crash_at})")
 
     names = args.pool.split(",")
     engine, data, te = build_routed_engine(
@@ -156,6 +190,33 @@ def main(argv=None):
         benchmarks=[data.benchmark[i] for i in te],
     )
 
+    # Quality truth lookup (only the --online paths consume feedback),
+    # built once and shared by every adapter.
+    qual_of_text = None
+    if args.online:
+        quality = data.quality[:, pool_quality_columns(engine.pool, data)]
+        qual_of_text = {data.texts[i]: quality[i]
+                        for i in range(len(data.texts))}
+
+    def truth(req):
+        return float(qual_of_text[req.text][req.member])
+
+    def make_feedback(seed):
+        """(quality_feedback, feedback_source, stage) for one adapter."""
+        if args.feedback_delay > 0:
+            from repro.online import DelayedFeedback, OutcomeStage
+            fb = DelayedFeedback(truth, args.feedback_delay,
+                                 jitter_s=args.feedback_delay * 0.5,
+                                 seed=seed)
+            # Bound how long unresolved outcomes are held: well past the
+            # worst-case delivery delay, but never forever.
+            stage = OutcomeStage(timeout_s=20.0 * args.feedback_delay)
+            return fb, fb, stage
+        return truth, None, None
+
+    if args.workers > 1:
+        return _run_plane(args, engine, data, trace, make_feedback)
+
     governor = None
     if args.budget > 0:
         governor = BudgetGovernor(args.budget, args.budget_window,
@@ -171,12 +232,7 @@ def main(argv=None):
         # Quality feedback: the synthetic RouterBench truth stands in for
         # user ratings / auto-eval (the held-out split is what the trace
         # samples its texts from).
-        quality = data.quality[:, pool_quality_columns(engine.pool, data)]
-        qual_of_text = {data.texts[i]: quality[i] for i in range(len(data.texts))}
-
-        def quality_feedback(req):
-            return float(qual_of_text[req.text][req.member])
-
+        quality_feedback, feedback_source, stage = make_feedback(args.seed)
         tr, _, _ = data.split(seed=args.seed)
         drift = DriftDetector(window=48).fit(
             data.emb[tr], engine.router.centroids)
@@ -186,7 +242,8 @@ def main(argv=None):
                 update_every=args.online_update_every),
             exploration=ExplorationConfig(epsilon=args.epsilon,
                                           seed=args.seed),
-            drift=drift, seed=args.seed,
+            drift=drift, feedback_source=feedback_source, stage=stage,
+            seed=args.seed,
         )
 
     sched = MicroBatchScheduler(
@@ -211,6 +268,97 @@ def main(argv=None):
               f"window  spend ${g['total_spend']:.6f}  "
               f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
               f"tightened x{int(g['tightened'])} relaxed x{int(g['relaxed'])}")
+    return summary
+
+
+def _run_plane(args, engine, data, trace, make_feedback):
+    """Multi-worker path: build N workers + coordinator, run the plane."""
+    from repro.distributed import (
+        Coordinator, PlaneEvent, ServingPlane, SharedBudgetLedger,
+        SyncConfig, WorkerNode,
+    )
+    from repro.serving.scheduler import SimClock
+
+    governor = None
+    if args.budget > 0:
+        governor = SharedBudgetLedger(args.budget, args.budget_window,
+                                      lam0=args.lam)
+
+    drift_proto = None
+    if args.online:
+        from repro.online import DriftDetector
+
+        tr, _, _ = data.split(seed=args.seed)
+        # Per-worker detectors over each worker's 1/N traffic share:
+        # smaller windows, alarms escalate to a leader burst. The bootstrap
+        # calibration is identical for every worker, so fit ONCE and clone
+        # the fitted detector instead of paying N calibration passes.
+        drift_proto = DriftDetector(window=max(16, 48 // args.workers)).fit(
+            data.emb[tr], engine.router.centroids)
+
+    workers = []
+    for wid in range(args.workers):
+        weng = RoutedEngine(router=engine.router, pool=engine.pool,
+                            lam=args.lam, use_pallas=args.pallas)
+        adapter = None
+        if args.online:
+            import copy
+
+            from repro.online import (
+                ExplorationConfig, OnlineAdapter, OnlineUpdateConfig,
+            )
+
+            wseed = args.seed + 101 * wid + 1
+            quality_feedback, feedback_source, stage = make_feedback(wseed)
+            adapter = OnlineAdapter(
+                weng, quality_feedback, governor=governor,
+                config=OnlineUpdateConfig(
+                    update_every=args.online_update_every),
+                exploration=ExplorationConfig(epsilon=args.epsilon,
+                                              seed=wseed),
+                drift=copy.deepcopy(drift_proto),
+                feedback_source=feedback_source, stage=stage,
+                defer_updates=True, seed=wseed,
+            )
+        sched = MicroBatchScheduler(
+            weng,
+            SchedulerConfig(score_batch=args.score_batch,
+                            max_batch=args.max_batch,
+                            max_wait_s=args.max_wait,
+                            queue_capacity=args.queue_capacity),
+            governor=governor, clock=SimClock(),
+            service_time=None if args.wall_time else default_service_model(),
+            adapter=adapter,
+        )
+        workers.append(WorkerNode(wid, weng, sched, adapter))
+
+    from repro.online import OnlineUpdateConfig
+    coord = Coordinator(workers, SyncConfig(
+        sync_every_s=args.sync_every, seed=args.seed,
+        update=OnlineUpdateConfig(update_every=args.online_update_every)))
+    events = []
+    if args.crash_at is not None:
+        events.append(PlaneEvent(args.crash_at, "crash", args.crash_worker))
+        if args.rejoin_at is not None:
+            events.append(
+                PlaneEvent(args.rejoin_at, "rejoin", args.crash_worker))
+    plane = ServingPlane(workers, coord, events=events)
+    summary = plane.run_trace(trace)
+
+    print(f"trace={args.trace} requests={args.requests} seed={args.seed} "
+          f"workers={args.workers}")
+    print(plane.report(summary.get("duration_s")))
+    if args.online:
+        for w in sorted(workers, key=lambda w: w.wid):
+            print(f"w{w.wid} {w.adapter.report()}")
+    if governor is not None:
+        now = max(w.clock.now for w in workers)
+        g = governor.summary(now)
+        print(f"shared budget ${g['budget_per_window']:.4f}/"
+              f"{args.budget_window}s window  spend ${g['total_spend']:.6f}  "
+              f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
+              f"tightened x{int(g['tightened'])} relaxed x{int(g['relaxed'])} "
+              f"throttled x{governor.throttled}")
     return summary
 
 

@@ -41,7 +41,7 @@ def make_train_step(
     def loss_fn(params, batch):
         return lm_mod.lm_loss(
             cfg, params, batch["tokens"], batch["labels"],
-            media=batch.get("media"),
+            media=batch.get("media"), attn_mask=batch.get("attn_mask"),
         )
 
     def grad_fn(params, batch):

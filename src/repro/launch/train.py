@@ -37,20 +37,37 @@ def train_loop(
     log_every: int = 10,
     checkpoint_path: Optional[str] = None,
     media_fn=None,
+    var_len: bool = False,
 ):
-    """Returns (params, list of losses)."""
+    """Returns (params, list of losses).
+
+    ``var_len`` trains on variable-length left-padded batches (the
+    corpus's ``padded_batches``): the pad mask threads through
+    ``lm_loss(attn_mask=)`` so CE and MoE aux/capacity accounting see only
+    real tokens — the serving-side masked-compute guarantees, exercised at
+    training time.
+    """
     adam_cfg = AdamConfig(lr=lr, b1=0.9, b2=0.95, weight_decay=0.1, t_max=steps)
     params = lm_mod.init_lm(jax.random.key(seed), cfg)
     opt_state = adam_init(adam_cfg, params)
     step_fn = jax.jit(make_train_step(cfg, mesh, adam_cfg), donate_argnums=(0, 1))
 
     corpus = MarkovCorpus(cfg.vocab_size, seed=seed)
-    batches = corpus.batches(batch, seq, seed=seed + 1)
+    if var_len:
+        batches = corpus.padded_batches(batch, seq, seed=seed + 1)
+    else:
+        batches = corpus.batches(batch, seq, seed=seed + 1)
     losses = []
     t0 = time.time()
     for i in range(steps):
-        tokens, labels = next(batches)
+        if var_len:
+            tokens, labels, mask = next(batches)
+        else:
+            tokens, labels = next(batches)
+            mask = None
         b = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        if mask is not None:
+            b["attn_mask"] = jnp.asarray(mask)
         if media_fn is not None:
             b["media"] = media_fn(i)
         loss, params, opt_state = step_fn(params, opt_state, b)
@@ -73,6 +90,9 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--var-len", action="store_true",
+                    help="variable-length left-padded batches with pad "
+                         "masks (exercises masked CE + MoE accounting)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -86,6 +106,7 @@ def main():
     _, losses = train_loop(
         cfg, steps=args.steps, batch=args.batch, seq=args.seq,
         lr=args.lr, checkpoint_path=args.checkpoint, media_fn=media_fn,
+        var_len=args.var_len,
     )
     print(f"first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
 

@@ -14,8 +14,8 @@ Dispatch tensors are (tokens, E, C); the sequence is processed in chunks
 under ``lax.map`` to bound the live footprint (granite-moe's top-8 would
 otherwise materialize multi-GB one-hots at 4k seq).
 
-Decode (a handful of tokens) uses weight-gather instead: FLOPs = k·D·F per
-token with no capacity slack.
+Decode uses the same dispatch einsums with worst-case (no-drop) capacity in
+bounded chunks — see :func:`apply_moe_decode`.
 """
 from __future__ import annotations
 
@@ -90,8 +90,8 @@ def _capacity(n_tokens: int, cfg: ArchConfig, factor: float = 0.0) -> int:
 
 def _dispatch_combine(
     cfg: ArchConfig, p: Dict, x2d: jax.Array, capacity_factor: float = 0.0,
-    valid: jax.Array = None,
-) -> Tuple[jax.Array, jax.Array]:
+    valid: jax.Array = None, return_drops: bool = False,
+) -> Tuple[jax.Array, ...]:
     """Capacity-based MoE over (T, D) tokens. Returns (out (T,D), aux loss).
 
     ``valid`` (T,) bool marks real tokens of a left-padded batch. Pads are
@@ -103,6 +103,10 @@ def _dispatch_combine(
     their combine weights are zeroed, and they're excluded from the aux
     loss statistics. The capacity *buffer* stays statically sized from T;
     only the keep threshold is dynamic.
+
+    ``return_drops`` appends the number of *real-token* (token, slot)
+    assignments struck by the capacity threshold — the decode path logs it
+    to prove its no-drop guarantee at runtime.
     """
     t, d = x2d.shape
     e, k = cfg.n_experts, cfg.top_k
@@ -144,6 +148,10 @@ def _dispatch_combine(
     out = jnp.einsum("tec,ecd->td", combine.astype(ye.dtype), ye)  # (T,D)
 
     aux = aux_load_balance_loss(probs, slot_onehot.sum(axis=1), valid)
+    if return_drops:
+        slot_real = slot_onehot.sum(axis=-1) > 0          # (T,k); pads struck
+        dropped = jnp.sum(jnp.logical_and(~keep, slot_real))
+        return out, aux, dropped
     return out, aux
 
 
@@ -161,46 +169,90 @@ def apply_moe_train(
 
     ``mask`` (B, S) bool marks real tokens of a left-padded batch: pads
     are excluded from capacity accounting, dispatch, and the aux loss (see
-    :func:`_dispatch_combine`). Caveat: capacity groups are *position*
-    chunks, so for sequences longer than ``seq_chunk`` a row's group
-    boundaries shift with its pad count — padded prefill batches are
-    invariant only up to ``seq_chunk`` tokens (serving micro-batches are
-    well under it; documented in the README support matrix).
+    :func:`_dispatch_combine`), and capacity groups are chunks of
+    *valid-token rank* rather than absolute position (see
+    :func:`_moe_train_masked`), so a row's group boundaries do not shift
+    with its pad count — batch-composition invariance holds at any prompt
+    length, not just up to ``seq_chunk``.
     """
     b, s, d = x.shape
-    # Remat per chunk: dispatch/combine one-hots are cheap to recompute and
-    # expensive to keep (E*C per token).
-    if mask is None:
+    if mask is not None:
+        out, aux = _moe_train_masked(cfg, p, x, seq_chunk, mask)
+    else:
+        # Remat per chunk: dispatch/combine one-hots are cheap to recompute
+        # and expensive to keep (E*C per token).
         per_row = jax.checkpoint(
             jax.vmap(lambda row: _dispatch_combine(cfg, p, row)))
-        args = (x,)
-    else:
-        per_row = jax.checkpoint(jax.vmap(
-            lambda row, vrow: _dispatch_combine(cfg, p, row, valid=vrow)))
-        args = (x, mask)
-    if s > seq_chunk and s % seq_chunk == 0:
-        n = s // seq_chunk
-
-        def to_chunks(a):
-            return a.reshape(b, n, seq_chunk, *a.shape[2:]).swapaxes(0, 1)
-
-        chunked = tuple(map(to_chunks, args))              # each (n,B,c,...)
-        if runtime_flags.UNROLL_INNER:
-            res = [per_row(*(a[i] for a in chunked)) for i in range(n)]
-            outs = jnp.stack([r[0] for r in res], 0)
-            auxes = jnp.stack([r[1] for r in res], 0)
+        if s > seq_chunk and s % seq_chunk == 0:
+            n = s // seq_chunk
+            chunked = x.reshape(b, n, seq_chunk, d).swapaxes(0, 1)
+            if runtime_flags.UNROLL_INNER:
+                res = [per_row(chunked[i]) for i in range(n)]
+                outs = jnp.stack([r[0] for r in res], 0)
+                auxes = jnp.stack([r[1] for r in res], 0)
+            else:
+                outs, auxes = jax.lax.map(per_row, chunked)
+            out = outs.swapaxes(0, 1).reshape(b, s, d)
+            aux = _aux_mean(auxes)
         else:
-            outs, auxes = jax.lax.map(lambda aa: per_row(*aa), chunked)
-        out = outs.swapaxes(0, 1).reshape(b, s, d)
-        aux = _aux_mean(auxes, None if mask is None else chunked[1])
-    else:
-        out, aux = per_row(*args)
-        aux = _aux_mean(aux, mask)
+            out, aux = per_row(x)
+            aux = _aux_mean(aux)
     if cfg.n_shared_experts:
         sp = p["shared"]
         hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
         out = out + hs @ sp["w_down"]
     return out, aux
+
+
+def _moe_train_masked(
+    cfg: ArchConfig, p: Dict, x: jax.Array, seq_chunk: int, mask: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Masked MoE with *pad-aware* capacity grouping.
+
+    Position chunks break batch invariance past ``seq_chunk``: left padding
+    shifts where a real token's chunk boundary falls, so a padded row's
+    capacity groups differ from its unpadded self's. Instead each row's
+    tokens are regrouped by **valid-token rank** — a stable compaction
+    moves real tokens to the front in order (pads to the back), the
+    compacted sequence is padded up to a ``seq_chunk`` multiple and chunked
+    there, and outputs are scattered back afterwards. Chunk membership then
+    depends only on how many real tokens precede a token, which is exactly
+    the quantity padding preserves. Pads carry zero dispatch/combine weight
+    throughout, so the compaction changes no sums (adding zeros is exact in
+    fp) — only the grouping.
+    """
+    b, s, d = x.shape
+    per_row = jax.checkpoint(jax.vmap(
+        lambda row, vrow: _dispatch_combine(cfg, p, row, valid=vrow)))
+    if s <= seq_chunk:
+        # One capacity group: dispatch is permutation-invariant (pads carry
+        # zero slot/combine weight), so the compaction would change nothing
+        # — skip it on the serving hot path (micro-batch prompts land here).
+        out, aux = per_row(x, mask)
+        return out, _aux_mean(aux, mask)
+    # Unique integer sort keys (pad?, position): valid-first, order-stable
+    # without relying on the backend sort's stability.
+    pos = jnp.arange(s)[None, :]
+    order = jnp.argsort(jnp.where(mask, 0, 1) * s + pos, axis=1)   # (B, S)
+    inv = jnp.argsort(order, axis=1)
+    xs = jnp.take_along_axis(x, order[..., None], axis=1)
+    ms = jnp.take_along_axis(mask, order, axis=1)
+    s_pad = -(-s // seq_chunk) * seq_chunk
+    if s_pad != s:
+        xs = jnp.pad(xs, ((0, 0), (0, s_pad - s), (0, 0)))
+        ms = jnp.pad(ms, ((0, 0), (0, s_pad - s)))
+    n = s_pad // seq_chunk
+    xc = xs.reshape(b, n, seq_chunk, d).swapaxes(0, 1)
+    mc = ms.reshape(b, n, seq_chunk).swapaxes(0, 1)
+    if runtime_flags.UNROLL_INNER:
+        res = [per_row(xc[i], mc[i]) for i in range(n)]
+        outs = jnp.stack([r[0] for r in res], 0)
+        auxes = jnp.stack([r[1] for r in res], 0)
+    else:
+        outs, auxes = jax.lax.map(lambda aa: per_row(*aa), (xc, mc))
+    out_s = outs.swapaxes(0, 1).reshape(b, s_pad, d)[:, :s]
+    aux = _aux_mean(auxes, mc)
+    return jnp.take_along_axis(out_s, inv[..., None], axis=1), aux
 
 
 def _aux_mean(auxes: jax.Array, masks: jax.Array = None) -> jax.Array:
@@ -214,22 +266,60 @@ def _aux_mean(auxes: jax.Array, masks: jax.Array = None) -> jax.Array:
     return (auxes * w).sum() / jnp.maximum(w.sum(), 1.0)
 
 
-DECODE_CAPACITY_FACTOR = 4.0
+# Chunk size bounding the decode dispatch one-hot footprint (chunk^2 * E).
+DECODE_CHUNK = 128
+
+# Set to a list to record per-call dropped-real-token counts (host callback;
+# asserted all-zero by benchmarks/distributed_bench.py and the decode
+# regression in tests/test_masked_prefill.py). None = zero overhead.
+# NOTE: the gate is evaluated at TRACE time — set the list before the decode
+# path is first traced/jitted in the process, or cached compilations will
+# log nothing (auditors should assert the call count is nonzero too).
+DECODE_DROP_LOG = None
 
 
-def apply_moe_decode(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
-    """Decode-path MoE for (B, 1, D).
+def _log_decode_drops(n) -> None:
+    if DECODE_DROP_LOG is not None:
+        DECODE_DROP_LOG.append(int(n))
+
+
+def apply_moe_decode(cfg: ArchConfig, p: Dict, x: jax.Array,
+                     chunk: int = DECODE_CHUNK) -> jax.Array:
+    """Decode-path MoE for (B, 1, D) with a per-step **no-drop guarantee**.
 
     Uses the same capacity-dispatch einsums as training (SPMD-friendly under
     expert parallelism — per-token weight *gathers* would force cross-device
-    expert-weight collectives) but with a generous capacity factor: at decode
-    T = B tokens, so the dispatch tensors are tiny and drops would directly
-    hurt served quality.
+    expert-weight collectives), but the capacity buffer is sized to the
+    worst case: tokens are processed in chunks of ``chunk`` and each chunk's
+    capacity equals its token count, so even if every token in the chunk
+    routes to the same expert, nothing is dropped. The old fixed
+    ``DECODE_CAPACITY_FACTOR = 4`` silently dropped real tokens for
+    top-k << E pools (llama4-maverick 128e top-1) once a decode batch put
+    more than ``ceil(4*B*k/E)`` tokens on one expert — a served-quality
+    cliff, not graceful degradation.
+
+    Cost: dispatch-einsum FLOPs scale with E*C per chunk instead of
+    ``cf*B*k``, but at decode the expert GEMMs are *weight-bandwidth* bound
+    (all E expert matrices are read regardless of C), so wall time is
+    insensitive to C at these sizes; chunking bounds the (T, E, C) one-hot
+    footprint to ``chunk^2 * E``. Chunk boundaries cannot change results —
+    capacity never binds, so every token's output is its exact gate-weighted
+    expert mixture regardless of neighbors.
     """
     b, s, d = x.shape
-    cf = max(DECODE_CAPACITY_FACTOR, cfg.capacity_factor)
-    out, _ = _dispatch_combine(cfg, p, x.reshape(-1, d), capacity_factor=cf)
-    out = out.reshape(b, s, d)
+    x2d = x.reshape(-1, d)
+    # capacity_factor = E/k makes _capacity() return exactly n_tokens.
+    cf_full = cfg.n_experts / cfg.top_k
+    outs, drops = [], []
+    for lo in range(0, x2d.shape[0], chunk):
+        o, _, dr = _dispatch_combine(cfg, p, x2d[lo:lo + chunk],
+                                     capacity_factor=cf_full,
+                                     return_drops=True)
+        outs.append(o)
+        drops.append(dr)
+    out = jnp.concatenate(outs, axis=0).reshape(b, s, d)
+    if DECODE_DROP_LOG is not None:
+        jax.debug.callback(_log_decode_drops, sum(drops))
     if cfg.n_shared_experts:
         sp = p["shared"]
         hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])

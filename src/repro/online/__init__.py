@@ -10,18 +10,20 @@ Layers: :mod:`replay` — reservoir + recency outcome buffer; :mod:`updater`
 — warm-started masked Adam steps and router publishing; :mod:`drift` —
 windowed mean-shift/dispersion alarms (Pallas pairwise-L2 distances);
 :mod:`exploration` — epsilon-greedy + optimistic bonus at the scoring
-step; :mod:`membership` — runtime add/remove with probation; :mod:`loop` —
-the :class:`OnlineAdapter` the scheduler drives.
+step; :mod:`membership` — runtime add/remove with probation; :mod:`staging`
+— delayed/out-of-order quality feedback staged until the real score lands;
+:mod:`loop` — the :class:`OnlineAdapter` the scheduler drives.
 """
 from repro.online.drift import DriftDetector
 from repro.online.exploration import ExplorationConfig, ExplorationPolicy
 from repro.online.loop import OnlineAdapter
 from repro.online.membership import MembershipTracker
 from repro.online.replay import ReplayBuffer
+from repro.online.staging import DelayedFeedback, OutcomeStage
 from repro.online.updater import IncrementalUpdater, OnlineUpdateConfig
 
 __all__ = [
-    "DriftDetector", "ExplorationConfig", "ExplorationPolicy",
-    "IncrementalUpdater", "MembershipTracker", "OnlineAdapter",
-    "OnlineUpdateConfig", "ReplayBuffer",
+    "DelayedFeedback", "DriftDetector", "ExplorationConfig",
+    "ExplorationPolicy", "IncrementalUpdater", "MembershipTracker",
+    "OnlineAdapter", "OnlineUpdateConfig", "OutcomeStage", "ReplayBuffer",
 ]

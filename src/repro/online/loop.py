@@ -15,15 +15,27 @@ Sits between the micro-batching scheduler and the online machinery:
 
 The quality feedback signal is a caller-supplied
 ``quality_feedback(request) -> float in [0, 1]`` — a user rating, an
-auto-eval, or (in the simulator) the synthetic RouterBench truth.
+auto-eval, or (in the simulator) the synthetic RouterBench truth. It may
+return **None** for feedback that has not arrived yet: the outcome is then
+*staged* (``repro.online.staging``) instead of trained on a placeholder,
+and committed when the real score lands via :meth:`deliver_feedback` and
+the next :meth:`tick` — out-of-order tolerant, timeout-dropped.
 
-Determinism: policy and replay own seeded generators and the scheduler
-drives everything from the virtual clock, so a fixed seed replays the
-whole adapt cycle identically (tested in tests/test_online.py).
+Two roles: a **solo** adapter runs its own ``IncrementalUpdater`` (the
+default); a **follower** (``defer_updates=True``, used by the multi-worker
+plane in ``repro.distributed``) only collects outcomes into its local
+replay — the leader's coordinator merges replays, runs the bounded update
+steps, and broadcasts versioned routers back. A follower's drift alarm
+raises ``pending_burst`` for the coordinator instead of bursting locally.
+
+Determinism: policy and replay own seeded generators, staged outcomes flush
+in staged order, and the scheduler drives everything from the virtual
+clock, so a fixed seed replays the whole adapt cycle identically (tested in
+tests/test_online.py).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,11 +44,12 @@ from repro.online.drift import DriftDetector
 from repro.online.exploration import ExplorationConfig, ExplorationPolicy
 from repro.online.membership import MembershipTracker
 from repro.online.replay import ReplayBuffer
+from repro.online.staging import OutcomeStage
 from repro.online.updater import IncrementalUpdater, OnlineUpdateConfig
 
 
 class OnlineAdapter:
-    def __init__(self, engine, quality_feedback: Callable[[object], float],
+    def __init__(self, engine, quality_feedback: Callable[[object], object],
                  *, governor=None,
                  config: Optional[OnlineUpdateConfig] = None,
                  exploration: Optional[ExplorationConfig] = None,
@@ -44,24 +57,38 @@ class OnlineAdapter:
                  drift: Optional[DriftDetector] = None,
                  membership: Optional[MembershipTracker] = None,
                  updater: Optional[IncrementalUpdater] = None,
+                 stage: Optional[OutcomeStage] = None,
+                 feedback_source=None,
+                 defer_updates: bool = False,
                  seed: int = 0):
         self.engine = engine
         self.quality_feedback = quality_feedback
         self.governor = governor
         self.config = config or OnlineUpdateConfig()
-        self.replay = replay or ReplayBuffer(seed=seed)
+        # `is None` checks: ReplayBuffer/OutcomeStage define __len__, so a
+        # freshly-constructed (empty) instance is falsy under `or`.
+        self.replay = ReplayBuffer(seed=seed) if replay is None else replay
         self.drift = drift   # None disables drift detection
         self.membership = membership or MembershipTracker(engine)
         self.policy = ExplorationPolicy(
             len(engine.pool), exploration or ExplorationConfig(seed=seed))
         self.updater = updater or IncrementalUpdater(engine.router,
                                                      self.config)
+        self.stage = OutcomeStage() if stage is None else stage
+        # Optional pull-based feedback channel: ``due(now) -> [(rid, s)]``
+        # drained on every tick (see repro.online.staging.DelayedFeedback).
+        self.feedback_source = feedback_source
+        # Follower mode (multi-worker plane): never run local update steps;
+        # drift alarms raise ``pending_burst`` for the coordinator instead.
+        self.defer_updates = defer_updates
+        self.pending_burst = False
         self._since_update = 0
         self.last_explored = np.zeros(0, bool)   # per-request, last batch
         self.stats: Dict[str, float] = {
             "outcomes": 0, "explored": 0, "updates": 0, "update_steps": 0,
             "bursts": 0, "drift_alarms": 0, "router_swaps": 0,
             "members_added": 0, "members_removed": 0,
+            "staged": 0, "delayed_resolved": 0, "feedback_expired": 0,
             "last_quality_loss": float("nan"),
             "last_cost_loss": float("nan"),
         }
@@ -85,15 +112,48 @@ class OnlineAdapter:
         self.stats["explored"] += int(explored.sum())
         return choices
 
-    # -- outcome hook --------------------------------------------------------
+    # -- outcome hooks -------------------------------------------------------
 
     def observe(self, served: List, now: float = 0.0) -> None:
-        """Fold one dispatch round's served requests into the loop."""
-        embs, members = [], []
+        """Fold one dispatch round's served requests into the loop.
+
+        Requests whose feedback is immediate commit right away; the rest
+        are staged until :meth:`deliver_feedback` resolves them.
+        """
+        ready: List[Tuple[object, float]] = []
         for r in served:
             if getattr(r, "q_emb", None) is None or r.member < 0:
                 continue
-            s_obs = float(self.quality_feedback(r))
+            s_obs = self.quality_feedback(r)
+            if s_obs is None:
+                self.stage.stage(r, now)
+                self.stats["staged"] += 1
+            else:
+                ready.append((r, float(s_obs)))
+        self._commit(ready, now)
+        self.tick(now)
+
+    def deliver_feedback(self, rid: int, s_obs: float,
+                         now: float = 0.0) -> None:
+        """Late quality feedback for a served request (any order)."""
+        self.stage.deliver(rid, s_obs, now)
+
+    def tick(self, now: float = 0.0) -> None:
+        """Flush resolved staged outcomes (called every dispatch round)."""
+        if self.feedback_source is not None:
+            for rid, s in self.feedback_source.due(now):
+                self.stage.deliver(rid, s, now)
+        ready = self.stage.flush(now)
+        if ready:
+            self.stats["delayed_resolved"] += len(ready)
+            self._commit(ready, now)
+        self.stats["feedback_expired"] = self.stage.expired
+
+    def _commit(self, outcomes: List[Tuple[object, float]],
+                now: float) -> None:
+        """Train-ready outcomes -> replay / membership / drift / updates."""
+        embs, members = [], []
+        for r, s_obs in outcomes:
             self.replay.add(r.q_emb, r.member, s_obs, r.cost, now)
             self.membership.record_outcome(r.member, r.q_emb, s_obs)
             members.append(r.member)
@@ -106,13 +166,17 @@ class OnlineAdapter:
         if self.drift is not None and embs:
             if self.drift.observe(np.stack(embs), now):
                 self.stats["drift_alarms"] += 1
-                self.stats["bursts"] += 1
-                self._update(self.config.burst_steps)
+                if self.defer_updates:
+                    self.pending_burst = True
+                else:
+                    self.stats["bursts"] += 1
+                    self._update(self.config.burst_steps)
                 # Recovery: re-anchor the detector on the post-shift regime
                 # so it arms for the *next* excursion instead of alarming
                 # on every subsequent window.
                 self.drift.refit()
-        if self._since_update >= self.config.update_every:
+        if (self._since_update >= self.config.update_every
+                and not self.defer_updates):
             self._update(self.config.steps_per_update)
 
     # -- incremental updates -------------------------------------------------
@@ -132,6 +196,18 @@ class OnlineAdapter:
         self.stats["router_swaps"] += 1
         self.stats["last_quality_loss"] = res["quality_loss"]
         self.stats["last_cost_loss"] = res["cost_loss"]
+
+    # -- crash recovery (multi-worker plane) ---------------------------------
+
+    def reset_outcome_state(self, seed: int) -> None:
+        """Rejoin-after-crash support: in-memory outcome state (replay,
+        staged feedback) did not survive the process; rebuild it empty."""
+        frac = self.replay.cap_recent / self.replay.capacity
+        self.replay = ReplayBuffer(self.replay.capacity,
+                                   recent_frac=frac, seed=seed)
+        self.stage = OutcomeStage(timeout_s=self.stage.timeout_s)
+        self.pending_burst = False
+        self._since_update = 0
 
     # -- hot pool membership -------------------------------------------------
 
@@ -157,6 +233,11 @@ class OnlineAdapter:
 
     def report(self) -> str:
         s = self.stats
+        staged = ""
+        if s["staged"]:
+            staged = (f"  staged {int(s['staged'])} "
+                      f"(resolved {int(s['delayed_resolved'])}, "
+                      f"expired {int(s['feedback_expired'])})")
         return (
             f"online: outcomes {int(s['outcomes'])}  "
             f"explored {int(s['explored'])}  "
@@ -167,4 +248,5 @@ class OnlineAdapter:
             f"({int(s['router_swaps'])} swaps)  "
             f"pool {len(self.engine.pool)} members "
             f"(+{int(s['members_added'])}/-{int(s['members_removed'])})"
+            f"{staged}"
         )

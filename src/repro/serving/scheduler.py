@@ -114,6 +114,32 @@ class MicroBatchScheduler:
         return (self.queue.oldest_wait(self.clock.now)
                 >= self.config.max_wait_s - 1e-9)
 
+    def next_dispatch_s(self, next_arrival_s: Optional[float] = None) -> float:
+        """Earliest virtual time a dispatch could be warranted.
+
+        The wake-time counterpart of :meth:`should_dispatch` (same policy
+        as :meth:`run_trace`'s inline wait computation — keep the three in
+        step): dispatch immediately when a full score batch is queued or
+        there is nothing left to wait for (flush); otherwise wake at the
+        head-of-line wait bound or the next known arrival, whichever comes
+        first. Returns inf when the queue is empty and no arrival is
+        scheduled. Used by the multi-worker plane's event loop
+        (``repro.distributed.worker``).
+        """
+        if self.queue.depth and (
+                next_arrival_s is None
+                or self.queue.depth >= self.config.score_batch):
+            return self.clock.now
+        cands = []
+        if self.queue.depth:
+            head = self.queue.peek_all()[0]
+            cands.append(head.admitted_s + self.config.max_wait_s)
+        if next_arrival_s is not None:
+            cands.append(next_arrival_s)
+        if not cands:
+            return float("inf")
+        return max(self.clock.now, min(cands))
+
     def _virtual_dt(self, kind: str, n: int, wall_s: float) -> float:
         if self.service_time is None:
             return wall_s
@@ -179,8 +205,13 @@ class MicroBatchScheduler:
                     self.telemetry.record_completion(
                         r.queue_wait_s, r.e2e_latency_s)
                     served.append(r)
-        if self.adapter is not None and served:
-            self.adapter.observe(served, self.clock.now)
+        if self.adapter is not None:
+            if served:
+                # observe() also ticks: staged (delayed-feedback) outcomes
+                # whose scores have landed flush on the same round.
+                self.adapter.observe(served, self.clock.now)
+            else:
+                self.adapter.tick(self.clock.now)
         return served
 
     # -- open-loop trace replay ---------------------------------------------
@@ -214,6 +245,11 @@ class MicroBatchScheduler:
                 self.dispatch()
                 continue
             self.clock.advance_to(nxt_t)
+        if self.adapter is not None:
+            # Final flush: staged outcomes whose feedback landed by the end
+            # of the trace still commit (later ones expire when the stage
+            # has a timeout configured, else stay pending).
+            self.adapter.tick(self.clock.now)
         self.telemetry.rejected = self.queue.rejected
         self.telemetry.expired = self.queue.expired
         return self.telemetry.summary(self.clock.now - t_start)

@@ -36,6 +36,16 @@ class Histogram:
     def mean(self) -> float:
         return self.total / self.count if self.count else float("nan")
 
+    def merge(self, other: "Histogram") -> None:
+        """Fold another histogram in (identical bucket edges required)."""
+        if not np.array_equal(self.edges, other.edges):
+            raise ValueError("cannot merge histograms with different edges")
+        self.counts += other.counts
+        self.count += other.count
+        self.total += other.total
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+
     def percentile(self, p: float) -> float:
         """Approximate percentile (log-interpolated inside the bucket)."""
         if self.count == 0:
@@ -111,6 +121,48 @@ class Telemetry:
         self.member_spend = realign(self.member_spend, np.float64)
         self.member_tokens = realign(self.member_tokens, np.int64)
         self.member_names = names
+
+    def merge(self, other: "Telemetry") -> None:
+        """Fold another run's telemetry in (multi-worker rollup).
+
+        Member columns are matched by *name*; the other run's members must
+        be a subset-compatible view of the same pool (workers of one
+        serving plane share the pool, so this is the common case).
+        """
+        if other.member_names != self.member_names:
+            self.sync_members(list(dict.fromkeys(
+                self.member_names + other.member_names)))
+        col = {n: i for i, n in enumerate(self.member_names)}
+        for j, name in enumerate(other.member_names):
+            i = col[name]
+            self.member_counts[i] += other.member_counts[j]
+            self.member_spend[i] += other.member_spend[j]
+            self.member_tokens[i] += other.member_tokens[j]
+        self.generate_calls += other.generate_calls
+        self.score_batches += other.score_batches
+        self.scored_requests += other.scored_requests
+        self.completed += other.completed
+        self.rejected += other.rejected
+        self.expired += other.expired
+        self.batch_size_sum += other.batch_size_sum
+        self.max_queue_depth = max(self.max_queue_depth,
+                                   other.max_queue_depth)
+        self.depth_samples += other.depth_samples
+        self.routing_latency.merge(other.routing_latency)
+        self.queue_wait.merge(other.queue_wait)
+        self.e2e_latency.merge(other.e2e_latency)
+        merged = sorted(list(self.lam_trace) + list(other.lam_trace))
+        self.lam_trace = deque(merged, maxlen=self.lam_trace.maxlen)
+
+    @classmethod
+    def rollup(cls, parts: Sequence["Telemetry"]) -> "Telemetry":
+        """Aggregate per-worker telemetry into one plane-level view."""
+        if not parts:
+            return cls([])
+        out = cls(parts[0].member_names)
+        for t in parts:
+            out.merge(t)
+        return out
 
     # -- recording ----------------------------------------------------------
 

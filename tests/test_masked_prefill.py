@@ -295,3 +295,151 @@ class TestMoEPadCapacity:
         np.testing.assert_allclose(
             np.asarray(out[0, self.T - self.REAL:]),
             np.asarray(out_solo[0]), rtol=1e-6, atol=1e-6)
+
+
+class TestMoERankChunking:
+    """Capacity groups past ``seq_chunk`` are chunks of *valid-token rank*,
+    not absolute position: left padding can no longer shift a real token's
+    group boundary, so batch invariance extends beyond ``seq_chunk``."""
+
+    def _setup(self, cf=1.0):
+        cfg = dataclasses.replace(
+            get_smoke_config("granite-moe-1b-a400m"), capacity_factor=cf)
+        p = moe_mod.init_moe(jax.random.key(11), cfg)
+        return cfg, p
+
+    def _padded_pair(self, cfg, real, pad, seed=0):
+        xr = jax.random.normal(jax.random.key(seed), (1, real, cfg.d_model))
+        junk = jax.random.normal(jax.random.key(seed + 1),
+                                 (1, pad, cfg.d_model))
+        xp = jnp.concatenate([junk, xr], axis=1)
+        m_solo = jnp.ones((1, real), bool)
+        m_pad = jnp.asarray((np.arange(pad + real) >= pad)[None])
+        return xr, m_solo, xp, m_pad
+
+    def test_invariance_beyond_seq_chunk(self):
+        """REAL > seq_chunk: the padded row's real-token outputs and aux
+        loss equal the solo run's — the old absolute-position grouping
+        split them at different boundaries (the gap being closed)."""
+        cfg, p = self._setup()
+        chunk = 8
+        xr, m_solo, xp, m_pad = self._padded_pair(cfg, real=20, pad=6)
+        out_solo, aux_solo = moe_mod.apply_moe_train(
+            cfg, p, xr, seq_chunk=chunk, mask=m_solo)
+        out_pad, aux_pad = moe_mod.apply_moe_train(
+            cfg, p, xp, seq_chunk=chunk, mask=m_pad)
+        np.testing.assert_allclose(np.asarray(out_pad[:, 6:]),
+                                   np.asarray(out_solo),
+                                   rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(float(aux_pad), float(aux_solo),
+                                   rtol=1e-5)
+        # pads emit exactly nothing
+        np.testing.assert_array_equal(np.asarray(out_pad[:, :6]), 0.0)
+
+    def test_pad_crossing_chunk_boundary(self):
+        """The regression shape: pads push a real token across what used
+        to be its position-chunk boundary; rank grouping keeps it in the
+        same capacity group as its unpadded self."""
+        cfg, p = self._setup()
+        chunk = 8
+        # real=10 (solo groups: ranks 0-7, 8-9); pad=7 shifts positions by 7
+        xr, m_solo, xp, m_pad = self._padded_pair(cfg, real=10, pad=7,
+                                                  seed=4)
+        out_solo, _ = moe_mod.apply_moe_train(
+            cfg, p, xr, seq_chunk=chunk, mask=m_solo)
+        out_pad, _ = moe_mod.apply_moe_train(
+            cfg, p, xp, seq_chunk=chunk, mask=m_pad)
+        np.testing.assert_allclose(np.asarray(out_pad[:, 7:]),
+                                   np.asarray(out_solo),
+                                   rtol=2e-5, atol=1e-6)
+
+    @pytest.mark.slow
+    def test_invariance_at_default_seq_chunk(self):
+        """Same property at the production seq_chunk=512 boundary."""
+        cfg, p = self._setup()
+        xr, m_solo, xp, m_pad = self._padded_pair(cfg, real=530, pad=30,
+                                                  seed=6)
+        out_solo, aux_solo = moe_mod.apply_moe_train(cfg, p, xr, mask=m_solo)
+        out_pad, aux_pad = moe_mod.apply_moe_train(cfg, p, xp, mask=m_pad)
+        np.testing.assert_allclose(np.asarray(out_pad[:, 30:]),
+                                   np.asarray(out_solo),
+                                   rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(float(aux_pad), float(aux_solo),
+                                   rtol=1e-5)
+
+
+class TestMoEDecodeNoDrop:
+    """Decode-path capacity can no longer drop real tokens: capacity per
+    chunk equals the chunk's token count, so even a batch that routes every
+    token to one expert (top-k << E worst case) keeps them all."""
+
+    def _setup(self):
+        # top-1 with E=8: the llama4-maverick (128e top-1) shape, reduced.
+        cfg = dataclasses.replace(
+            get_smoke_config("granite-moe-1b-a400m"),
+            n_experts=8, top_k=1, capacity_factor=1.0, n_shared_experts=0)
+        p = moe_mod.init_moe(jax.random.key(21), cfg)
+        # Identical rows: all B tokens route to the same expert.
+        row = jax.random.normal(jax.random.key(22), (1, cfg.d_model))
+        x = jnp.tile(row, (16, 1))[:, None, :]          # (B=16, 1, D)
+        return cfg, p, x
+
+    def test_old_accounting_drops_new_does_not(self):
+        """Under the old DECODE_CAPACITY_FACTOR=4 accounting this batch
+        loses real tokens (cap = ceil(4*16*1/8) = 8 < 16 same-expert
+        tokens); the no-drop decode path matches the solo run for every
+        token, including the ones the old policy dropped."""
+        cfg, p, x = self._setup()
+        probs = np.asarray(moe_mod._router_probs(p, x.reshape(-1,
+                                                              cfg.d_model)))
+        gate_idx = np.asarray(jax.lax.top_k(jnp.asarray(probs),
+                                            cfg.top_k)[1])
+        assert len(set(gate_idx[:, 0].tolist())) == 1   # one hot expert
+        b = x.shape[0]
+        cap_old = moe_mod._capacity(b, cfg, 4.0)        # the removed cliff
+        # Old accounting: positions beyond cap_old were dropped.
+        dropped_old = max(0, b - cap_old)
+        assert dropped_old > 0
+
+        moe_mod.DECODE_DROP_LOG = []
+        try:
+            out = moe_mod.apply_moe_decode(cfg, p, x)
+            solo = moe_mod.apply_moe_decode(cfg, p, x[:1])
+        finally:
+            drops = sum(moe_mod.DECODE_DROP_LOG)
+            moe_mod.DECODE_DROP_LOG = None
+        assert drops == 0
+        # every token (identical input) gets the solo run's exact output —
+        # under the old policy tokens past cap_old got zero expert output
+        for i in (0, cap_old, b - 1):
+            np.testing.assert_allclose(np.asarray(out[i]),
+                                       np.asarray(solo[0]),
+                                       rtol=1e-6, atol=1e-6)
+        assert float(jnp.abs(out).sum()) > 0.0
+
+    def test_chunk_boundaries_do_not_change_results(self):
+        """Chunked full-capacity dispatch is exact: capacity never binds,
+        so a token's output is independent of its chunk neighbors."""
+        cfg, p, _ = self._setup()
+        x = jax.random.normal(jax.random.key(23), (7, 1, cfg.d_model))
+        out_small = moe_mod.apply_moe_decode(cfg, p, x, chunk=2)
+        out_big = moe_mod.apply_moe_decode(cfg, p, x, chunk=64)
+        np.testing.assert_allclose(np.asarray(out_small),
+                                   np.asarray(out_big),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_large_decode_batch_no_drops_logged(self):
+        """Across a batch larger than DECODE_CHUNK, the in-dispatch drop
+        counter stays zero (the runtime proof of the guarantee)."""
+        cfg, p, _ = self._setup()
+        x = jax.random.normal(jax.random.key(24),
+                              (moe_mod.DECODE_CHUNK + 40, 1, cfg.d_model))
+        moe_mod.DECODE_DROP_LOG = []
+        try:
+            moe_mod.apply_moe_decode(cfg, p, x)
+        finally:
+            drops = sum(moe_mod.DECODE_DROP_LOG)
+            n_calls = len(moe_mod.DECODE_DROP_LOG)
+            moe_mod.DECODE_DROP_LOG = None
+        assert n_calls >= 1
+        assert drops == 0

@@ -398,3 +398,123 @@ class TestSchedulerIntegration:
         assert all(r.q_emb is not None and r.q_emb.shape == (DQ,)
                    for r in observed)
         assert all(r.status == DONE for r in observed)
+
+
+class TestStagedOutcomes:
+    """Delayed quality feedback: staged outcomes, out-of-order delivery,
+    tick-based flush, timeout drop — no training on placeholder scores."""
+
+    def _adapter(self, timeout_s=None, **kw):
+        from repro.online import OutcomeStage
+
+        eng = make_engine(seed=5)
+        pending = {}
+
+        def feedback(req):
+            return pending.get(req.rid)   # None until delivered
+
+        adapter = OnlineAdapter(
+            eng, feedback,
+            config=OnlineUpdateConfig(update_every=10**9, min_buffer=4,
+                                      batch_size=8),
+            stage=OutcomeStage(timeout_s=timeout_s), seed=5, **kw)
+        return adapter
+
+    def _reqs(self, n, seed=0, member=0):
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for _ in range(n):
+            r = Request(text="t", prompt=np.zeros(1, np.int32))
+            r.q_emb = rng.normal(0, 1, DQ).astype(np.float32)
+            r.member, r.cost, r.status = member, COSTS[member], DONE
+            reqs.append(r)
+        return reqs
+
+    def test_no_placeholder_training_and_flush_in_staged_order(self):
+        adapter = self._adapter()
+        reqs = self._reqs(3, seed=1)
+        adapter.observe(reqs, now=0.0)
+        assert len(adapter.replay) == 0           # nothing committed yet
+        assert adapter.stats["staged"] == 3
+        # deliver OUT OF ORDER: r2, r0, r1
+        adapter.deliver_feedback(reqs[2].rid, 0.9, now=0.1)
+        adapter.deliver_feedback(reqs[0].rid, 0.1, now=0.2)
+        adapter.deliver_feedback(reqs[1].rid, 0.5, now=0.3)
+        adapter.tick(now=0.4)
+        assert adapter.stats["outcomes"] == 3
+        assert adapter.stats["delayed_resolved"] == 3
+        # committed in STAGED order (r0, r1, r2), not delivery order
+        scores = [s for (_, _, s, _, _) in adapter.replay._recent]
+        assert scores == [0.1, 0.5, 0.9]
+
+    def test_partial_delivery_flushes_only_resolved(self):
+        adapter = self._adapter()
+        reqs = self._reqs(3, seed=2)
+        adapter.observe(reqs, now=0.0)
+        adapter.deliver_feedback(reqs[1].rid, 0.7, now=0.1)
+        adapter.tick(now=0.2)
+        assert adapter.stats["outcomes"] == 1
+        assert len(adapter.stage) == 2            # two still pending
+
+    def test_feedback_before_staging_is_held(self):
+        """The feedback channel can race completion: an early delivery
+        resolves the outcome the moment it is staged."""
+        adapter = self._adapter()
+        reqs = self._reqs(1, seed=3)
+        adapter.deliver_feedback(reqs[0].rid, 0.8, now=0.0)   # early
+        assert adapter.stage.early_deliveries == 1
+        adapter.observe(reqs, now=0.1)
+        # observe() ticks: the already-resolved outcome commits immediately
+        assert adapter.stats["outcomes"] == 1
+        assert [s for (_, _, s, _, _) in adapter.replay._recent] == [0.8]
+
+    def test_timeout_drops_never_trains_on_guess(self):
+        adapter = self._adapter(timeout_s=1.0)
+        reqs = self._reqs(2, seed=4)
+        adapter.observe(reqs, now=0.0)
+        adapter.deliver_feedback(reqs[0].rid, 0.6, now=0.5)
+        adapter.tick(now=0.5)
+        adapter.tick(now=5.0)                     # r1's feedback never came
+        assert adapter.stats["outcomes"] == 1
+        assert adapter.stats["feedback_expired"] == 1
+        assert len(adapter.stage) == 0
+        # late delivery for the expired outcome is held, never committed
+        adapter.deliver_feedback(reqs[1].rid, 0.2, now=6.0)
+        adapter.tick(now=6.0)
+        assert adapter.stats["outcomes"] == 1
+
+    def test_delayed_feedback_simulator_end_to_end(self):
+        from repro.online import DelayedFeedback
+
+        eng = make_engine(seed=6)
+        fb = DelayedFeedback(lambda req: 0.25 + 0.5 * req.member,
+                             delay_s=0.1, jitter_s=0.05, seed=6)
+        adapter = OnlineAdapter(
+            eng, fb, feedback_source=fb,
+            config=OnlineUpdateConfig(update_every=10**9, min_buffer=4),
+            seed=6)
+        reqs = self._reqs(4, seed=6)
+        for i, r in enumerate(reqs):
+            r.finish_s = 0.01 * i
+        adapter.observe(reqs, now=0.05)
+        assert adapter.stats["staged"] == 4 and len(adapter.replay) == 0
+        adapter.tick(now=0.08)                    # before any delay elapsed
+        assert adapter.stats["outcomes"] == 0
+        adapter.tick(now=1.0)                     # all feedback due
+        assert adapter.stats["outcomes"] == 4
+        assert fb.in_flight == 0
+
+    def test_mixed_immediate_and_staged(self):
+        """quality_feedback may resolve some requests immediately and
+        stage the rest; both streams commit exactly once."""
+        adapter = self._adapter()
+        reqs = self._reqs(4, seed=7)
+        immediate = {reqs[0].rid: 0.3, reqs[2].rid: 0.9}
+        adapter.quality_feedback = lambda r: immediate.get(r.rid)
+        adapter.observe(reqs, now=0.0)
+        assert adapter.stats["outcomes"] == 2
+        assert adapter.stats["staged"] == 2
+        adapter.deliver_feedback(reqs[1].rid, 0.5, now=0.1)
+        adapter.deliver_feedback(reqs[3].rid, 0.6, now=0.1)
+        adapter.tick(now=0.2)
+        assert adapter.stats["outcomes"] == 4
