@@ -1,0 +1,164 @@
+"""Cascade routing benchmark (ours): multi-leg escalation vs. single-shot.
+
+RouterBench's central observation is that *cascading* — run a cheap model,
+escalate only when the response looks inadequate — reaches parts of the
+cost-quality plane no single irrevocable choice can. This benchmark pits
+the `repro.cascade` policy against the paper's single-shot router on the
+seeded synthetic RouterBench pool, with **cumulative (all-leg) cost
+accounting**: every leg a cascade runs is charged, exactly as the serving
+plane's budget ledger charges it.
+
+Setup: pool1 (5 API models, mistral-7b -> gpt-4), the deep-ensemble
+cross-attention quality head (``attn-ens``: shared trunk, 4 bootstrap
+heads) + the standard attention cost head. The cascade seeds leg 1 at the
+*cheapest* ladder rung (the canonical cascade shape) and then asks
+:class:`~repro.cascade.CascadePolicy` after every leg whether the expected
+marginal reward of the next rung justifies another call, using observed
+leg quality (RouterBench logs responses, so post-hoc quality is available)
+plus the ensemble's predictive mean/std for untried rungs.
+
+Acceptance gates (the PR's bar):
+  * the cascade's nondecreasing-quality frontier weakly dominates the
+    single-shot router's realized operating points at >= 3 of the 5
+    lambda points;
+  * the escalation rate is nonzero overall and monotone nondecreasing in
+    lambda (more willingness-to-pay -> more escalation, never less).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, load_data, pool_splits, trained_router
+from repro.cascade import CascadeConfig, CascadePolicy, cost_ladder
+from repro.core.metrics import frontier_dominance, pareto_frontier
+from repro.core.rewards import REWARDS, cascade_outcome
+
+POOL = "pool1"
+REWARD = "R2"
+# Willingness-to-pay points spanning cheap-only -> quality-dominated for
+# pool1's $/query scale (mistral ~2e-4, gpt-4 ~4e-2).
+LAM_POINTS = np.logspace(-2.5, 0.0, 5)
+# Extra sweep lambdas anchoring the cascade frontier's cheap end (the
+# never-escalate regime is part of the cascade policy family — lam -> 0
+# degenerates to "cheapest rung only"). The dominance gate is still scored
+# at the 5 LAM_POINTS; these only shape the hull.
+ANCHOR_LAMS = (1e-4, 10.0)
+MIN_DOMINATED = 3
+
+
+def single_shot_points(router, pool, te):
+    """Realized (mean cost, mean quality) of the one-shot router per lam."""
+    choices = router.sweep(pool.emb[te], LAM_POINTS)
+    b = np.arange(len(te))
+    costs = [float(pool.cost[te][b, ch].mean()) for ch in choices]
+    perfs = [float(pool.quality[te][b, ch].mean()) for ch in choices]
+    return np.asarray(costs), np.asarray(perfs)
+
+
+def run_cascade(router, pool, te, lam, config: CascadeConfig):
+    """Simulate the cascade over the held-out queries at one lambda.
+
+    Leg quality is *observed* (truth table lookup — the RouterBench
+    setting); rung predictions come from the ensemble router. Returns
+    (mean cum cost, mean final quality, escalation rate, mean legs).
+    """
+    ladder = cost_ladder(router)
+    policy = CascadePolicy(ladder, config, reward=REWARD)
+    s_hat, s_std, c_hat = router.predict_with_uncertainty(pool.emb[te])
+    quality = pool.quality[te]
+    cost = pool.cost[te]
+    cum_costs, finals, n_legs = [], [], []
+    for i in range(len(te)):
+        member = int(ladder[0])                  # canonical cascade: cheap first
+        leg_q, leg_c, tried = [], [], []
+        best_q = -np.inf
+        while True:
+            leg_q.append(float(quality[i, member]))
+            leg_c.append(float(cost[i, member]))
+            tried.append(member)
+            best_q = max(best_q, leg_q[-1])
+            decision = policy.decide(
+                s_cur=best_q, s_std_cur=0.0,
+                s_hat=s_hat[i], s_std=s_std[i], c_hat=c_hat[i],
+                cum_cost=float(np.sum(leg_c)), tried=tried, lam=lam,
+                observed=True,
+            )
+            if not decision.escalate:
+                break
+            member = decision.next_member
+        q, c = cascade_outcome(leg_q, leg_c, keep_best=True)
+        finals.append(q)
+        cum_costs.append(c)
+        n_legs.append(len(tried))
+    n_legs = np.asarray(n_legs)
+    return (float(np.mean(cum_costs)), float(np.mean(finals)),
+            float(np.mean(n_legs > 1)), float(n_legs.mean()))
+
+
+def main() -> None:
+    data = load_data()
+    pool, tr, va, te = pool_splits(data, POOL)
+    router = trained_router(pool, tr, va, POOL, "attn-ens", "attn",
+                            reward=REWARD)
+
+    ss_costs, ss_perfs = single_shot_points(router, pool, te)
+    config = CascadeConfig(max_legs=3, beta=1.0, margin=0.0)
+    casc_costs, casc_perfs, esc_rates, legs = [], [], [], []
+    for lam in LAM_POINTS:
+        c, q, esc, mean_legs = run_cascade(router, pool, te, float(lam),
+                                           config)
+        casc_costs.append(c)
+        casc_perfs.append(q)
+        esc_rates.append(esc)
+        legs.append(mean_legs)
+        emit(f"cascade/lam_{lam:.4g}", 0.0,
+             f"cost=${c:.6f};quality={q:.4f};esc_rate={esc:.3f}"
+             f";mean_legs={mean_legs:.2f}")
+    for lam, c, q in zip(LAM_POINTS, ss_costs, ss_perfs):
+        emit(f"single_shot/lam_{lam:.4g}", 0.0,
+             f"cost=${c:.6f};quality={q:.4f}")
+
+    front_costs, front_perfs = list(casc_costs), list(casc_perfs)
+    for lam in ANCHOR_LAMS:
+        c, q, _, _ = run_cascade(router, pool, te, float(lam), config)
+        front_costs.append(c)
+        front_perfs.append(q)
+    casc_costs = np.asarray(casc_costs)
+    casc_perfs = np.asarray(casc_perfs)
+    dominated = frontier_dominance(np.asarray(front_costs),
+                                   np.asarray(front_perfs),
+                                   ss_costs, ss_perfs, tol=1e-6)
+    hx, hy = pareto_frontier(np.asarray(front_costs),
+                             np.asarray(front_perfs))
+    emit("cascade/frontier", 0.0,
+         "points=" + "|".join(f"({x:.6f},{y:.4f})" for x, y in zip(hx, hy)))
+    emit("cascade/dominated_points", 0.0,
+         f"{int(dominated.sum())}/{len(dominated)}")
+
+    # Realized mean cascade reward with cumulative-cost accounting, for
+    # the record (the gate is on the frontier, not on raw reward).
+    for lam, c, q in zip(LAM_POINTS, casc_costs, casc_perfs):
+        r = float(REWARDS[REWARD](q, c, float(lam)))
+        emit(f"cascade/reward_lam_{lam:.4g}", 0.0, f"reward={r:.4f}")
+
+    rates = np.asarray(esc_rates)
+    monotone = bool(np.all(np.diff(rates) >= -1e-9))
+    emit("cascade/escalation_rates", 0.0,
+         "|".join(f"{r:.3f}" for r in rates)
+         + f";monotone={monotone};nonzero={bool(rates.max() > 0)}")
+
+    if int(dominated.sum()) < MIN_DOMINATED:
+        raise SystemExit(
+            f"cascade frontier dominates only {int(dominated.sum())}/"
+            f"{len(dominated)} single-shot lambda points "
+            f"(need >= {MIN_DOMINATED})")
+    if rates.max() <= 0:
+        raise SystemExit("cascade never escalated at any lambda point")
+    if not monotone:
+        raise SystemExit(
+            "escalation rate is not monotone in lambda: "
+            + "|".join(f"{r:.3f}" for r in rates))
+
+
+if __name__ == "__main__":
+    main()

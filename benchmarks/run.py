@@ -13,6 +13,7 @@ import sys
 import time
 
 from benchmarks import (
+    cascade_bench,
     distributed_bench,
     fig4_5_domains,
     fig6_distribution,
@@ -36,6 +37,7 @@ SUITES = {
     "serving": serving_bench.main,
     "online": online_bench.main,
     "distributed": distributed_bench.main,
+    "cascade": cascade_bench.main,
 }
 
 

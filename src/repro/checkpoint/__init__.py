@@ -48,3 +48,109 @@ def load_checkpoint(path: str, template: Any):
         lambda t, x: x.astype(t.dtype) if hasattr(t, "dtype") else x, template, tree
     )
     return tree, meta
+
+
+# ---------------------------------------------------------------------------
+# Router checkpoints (launch/serve.py --save-router / --restore-router)
+# ---------------------------------------------------------------------------
+
+ROUTER_CKPT_KIND = "predictive_router_v1"
+
+
+def _nest_flat(flat: Dict[str, np.ndarray]) -> Dict:
+    """Rebuild nested dicts from ``a/b/c`` leaf paths (template-free).
+
+    Router parameter trees are pure nested dicts of arrays, so the flat
+    path encoding is unambiguous — no structure template needed to
+    restore one, which is what lets ``--restore-router`` skip offline
+    training entirely. Leaves stay numpy: converting here would force
+    everything through jax's default dtype policy, silently downcasting
+    the float64 cost scaler (and breaking bitwise-identical restores).
+    """
+    root: Dict = {}
+    for key, leaf in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = leaf
+    return root
+
+
+def save_router(path: str, router, pool_names=None) -> None:
+    """Persist a trained PredictiveRouter: params + version + scaler meta.
+
+    The cost scaler rides in the array tree (NOT the JSON meta) so its
+    dtype survives byte-exactly — ``denormalize_cost`` must reproduce the
+    original float32 arithmetic for restored scores to be bitwise equal.
+    ``pool_names`` (optional) records which pool members the router's
+    member axis refers to, so a restore against a different pool of the
+    same size fails loudly instead of silently misrouting.
+    """
+    tree = {
+        "quality": router.quality_params,
+        "cost": router.cost_params,
+        "model_emb": np.asarray(router.model_emb),
+    }
+    if router.centroids is not None:
+        tree["centroids"] = np.asarray(router.centroids)
+    if router.cost_scaler is not None:
+        tree["cost_scaler"] = {
+            "mu": np.asarray(router.cost_scaler["mu"]),
+            "sd": np.asarray(router.cost_scaler["sd"]),
+        }
+    meta = {
+        "kind": ROUTER_CKPT_KIND,
+        "quality_kind": router.quality_kind,
+        "cost_kind": router.cost_kind,
+        "reward": router.reward,
+        "version": int(router.version),
+    }
+    if pool_names is not None:
+        meta["pool_names"] = list(pool_names)
+    save_checkpoint(path, tree, meta)
+
+
+def load_router(path: str, expect_pool_names=None):
+    """Restore a PredictiveRouter saved by :func:`save_router`.
+
+    ``expect_pool_names``: when given and the checkpoint recorded its pool
+    names, the two must match exactly (order included) — the router's
+    member axis, cost scaler, and cost ladder are positional, so a
+    same-size pool swap would otherwise score every request against the
+    wrong models without any error.
+    """
+    from repro.core.router import PredictiveRouter
+
+    with np.load(path) as data:
+        meta = json.loads(bytes(data[_META_KEY]).decode("utf-8"))
+        flat = {k: data[k] for k in data.files if k != _META_KEY}
+    if meta.get("kind") != ROUTER_CKPT_KIND:
+        raise ValueError(
+            f"{path!r} is not a router checkpoint "
+            f"(kind={meta.get('kind')!r}, want {ROUTER_CKPT_KIND!r})")
+    saved_names = meta.get("pool_names")
+    if (expect_pool_names is not None and saved_names is not None
+            and list(expect_pool_names) != list(saved_names)):
+        raise ValueError(
+            f"router checkpoint was trained for pool {saved_names}, "
+            f"not {list(expect_pool_names)} — member columns are "
+            "positional and would misroute silently")
+    tree = _nest_flat(flat)
+    scaler = tree.get("cost_scaler")
+    if scaler is not None:
+        scaler = {"mu": np.asarray(scaler["mu"]),
+                  "sd": np.asarray(scaler["sd"])}
+    as_jnp = lambda t: jax.tree.map(jax.numpy.asarray, t)  # noqa: E731
+    return PredictiveRouter(
+        quality_kind=meta["quality_kind"],
+        cost_kind=meta["cost_kind"],
+        quality_params=as_jnp(tree["quality"]),
+        cost_params=as_jnp(tree["cost"]),
+        model_emb=np.asarray(tree["model_emb"]),
+        reward=meta["reward"],
+        cost_scaler=scaler,
+        version=int(meta["version"]),
+        centroids=(np.asarray(tree["centroids"])
+                   if "centroids" in tree else None),
+    )

@@ -1,10 +1,19 @@
 """The paper's contribution: cost-aware cross-attention LLM routing."""
-from repro.core.predictors import PREDICTORS, attention_scores
-from repro.core.rewards import REWARDS, reward_exponential, reward_linear, route
+from repro.core.predictors import ENSEMBLE_KINDS, PREDICTORS, attention_scores
+from repro.core.rewards import (
+    REWARDS,
+    cascade_outcome,
+    cascade_reward,
+    reward_exponential,
+    reward_linear,
+    route,
+)
 from repro.core.metrics import (
     DEFAULT_LAMBDA_GRID,
     aiq,
     evaluate_router,
+    frontier_dominance,
+    frontier_value_at,
     lam_sensitivity,
     max_calls_fraction,
     pareto_frontier,
@@ -19,8 +28,10 @@ from repro.core.router import (
 from repro.core.clustering import kmeans, pairwise_sq_dists
 
 __all__ = [
-    "PREDICTORS", "REWARDS", "attention_scores", "reward_exponential",
+    "ENSEMBLE_KINDS", "PREDICTORS", "REWARDS", "attention_scores",
+    "cascade_outcome", "cascade_reward", "reward_exponential",
     "reward_linear", "route", "DEFAULT_LAMBDA_GRID", "aiq", "evaluate_router",
+    "frontier_dominance", "frontier_value_at",
     "lam_sensitivity", "max_calls_fraction", "pareto_frontier",
     "routed_points", "build_model_embeddings", "embed_new_model",
     "PredictiveRouter", "evaluate_sweep", "oracle_sweep", "kmeans",

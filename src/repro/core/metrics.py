@@ -79,6 +79,44 @@ def aiq(costs: np.ndarray, perfs: np.ndarray) -> float:
     return area / float(hx[-1] - hx[0])
 
 
+def frontier_value_at(costs: np.ndarray, perfs: np.ndarray,
+                      at_cost: float) -> float:
+    """Quality the frontier of (costs, perfs) delivers at budget ``at_cost``.
+
+    Linear interpolation on the non-decreasing convex hull. Below the
+    hull's cheapest point the frontier delivers nothing comparable
+    (-inf — the policy cannot spend that little); above its priciest
+    point the hull is flat (spending more cannot *lose* quality).
+    """
+    hx, hy = pareto_frontier(np.asarray(costs, np.float64),
+                             np.asarray(perfs, np.float64))
+    if at_cost < hx[0] and not np.isclose(at_cost, hx[0]):
+        return float("-inf")
+    return float(np.interp(at_cost, hx, hy))
+
+
+def frontier_dominance(
+    costs_a: np.ndarray, perfs_a: np.ndarray,
+    costs_b: np.ndarray, perfs_b: np.ndarray,
+    tol: float = 1e-9,
+) -> np.ndarray:
+    """Pointwise weak dominance of frontier A over B's operating points.
+
+    For each point (c_i, p_i) traced by policy B, True when policy A's
+    frontier delivers at least p_i quality at budget c_i (within ``tol``).
+    The cascade acceptance gate counts these: a cascade dominates the
+    single-shot router at a lambda point when, for the single-shot
+    policy's realized spend there, the cascade frontier matches or beats
+    its realized quality.
+    """
+    costs_b = np.asarray(costs_b, np.float64)
+    perfs_b = np.asarray(perfs_b, np.float64)
+    return np.asarray([
+        frontier_value_at(costs_a, perfs_a, c) >= p - tol
+        for c, p in zip(costs_b, perfs_b)
+    ])
+
+
 def lam_sensitivity(lams: Sequence[float], values: Sequence[float]) -> float:
     """Paper Eq. 2: sum_i log(l_{i+1}/l_i)*(v_{i+1}-v_i) / log(l_n/l_1)."""
     lams = np.asarray(lams, dtype=np.float64)

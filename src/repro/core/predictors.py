@@ -12,6 +12,12 @@ Appendix C):
              as keys/values (THE paper contribution)
   attn-dot   same attention core with a pool-size-free scoring head
              (preserves dynamic add/remove of models; see DESIGN.md §1)
+  attn-ens   the attention core with a small deep ensemble of output heads
+             (shared trunk, H cheap (latent -> K) heads). ``apply`` returns
+             the ensemble mean, so it drops into every existing scoring
+             path; :data:`ENSEMBLE_KINDS` maps the kind to a heads-apply
+             returning the per-head (H, B, K) scores whose spread is the
+             epistemic uncertainty the cascade escalation policy consumes.
 
 All are functional: ``init(key, dims) -> params``, ``apply(params, q, m) ->
 (B, K)``. Model embeddings ``m`` are (K, C) built by
@@ -169,6 +175,47 @@ def _apply_attn_dot(p, q, m):
     return p["scale"] * ((ctx + qp) @ vp.T) + p["bias"]
 
 
+# ---------------------------------------------------------------------------
+# Deep-ensemble cross-attention (shared trunk, H cheap output heads)
+# ---------------------------------------------------------------------------
+
+ENSEMBLE_HEADS = 4  # H: output heads sharing one cross-attention trunk
+
+
+def _init_attn_ens(key, dq, k, dm, latent=ATTN_LATENT, n_heads=ENSEMBLE_HEADS):
+    ks = jax.random.split(key, 3 + n_heads)
+    return {
+        "wq": dense_init(ks[0], dq, latent),
+        "wk": dense_init(ks[1], dm, latent),
+        "wv": dense_init(ks[2], dm, latent),
+        # Per-head output maps, stacked on a leading head axis. Heads differ
+        # through init + bootstrap-resampled training data (predictor_trainer
+        # make_ensemble_predictor_step); the trunk is shared, so an extra
+        # head costs one (latent, K) matmul — negligible next to the trunk.
+        "wo": jnp.stack([dense_init(ks[3 + h], latent, k)
+                         for h in range(n_heads)]),
+        "bo": jnp.zeros((n_heads, k)),
+    }
+
+
+def _apply_attn_ens_heads(p, q, m):
+    """Per-head scores (H, B, K) — the ensemble's full predictive spread."""
+    ctx, _ = attention_scores(p, q, m)
+    return jnp.einsum("bd,hdk->hbk", ctx, p["wo"]) + p["bo"][:, None, :]
+
+
+def _apply_attn_ens(p, q, m):
+    return _apply_attn_ens_heads(p, q, m).mean(axis=0)
+
+
+# kind -> heads-apply ``(params, q, m) -> (H, B, K)``. Scoring paths that
+# need epistemic uncertainty (PredictiveRouter.predict_with_uncertainty)
+# look the kind up here; everything else uses the mean via PREDICTORS.
+ENSEMBLE_KINDS: Dict[str, Callable] = {
+    "attn-ens": _apply_attn_ens_heads,
+}
+
+
 _fcn2_init, _fcn2_apply = _make_fcn(1)
 _fcn3_init, _fcn3_apply = _make_fcn(2)
 _fcn2e_init, _fcn2e_apply = _make_fcn_emb(1)
@@ -183,4 +230,5 @@ PREDICTORS: Dict[str, PredictorDef] = {
     "3fcn-emb": PredictorDef(_fcn3e_init, _fcn3e_apply, pool_free=True),
     "attn": PredictorDef(_init_attn, _apply_attn, pool_free=False),
     "attn-dot": PredictorDef(_init_attn_dot, _apply_attn_dot, pool_free=True),
+    "attn-ens": PredictorDef(_init_attn_ens, _apply_attn_ens, pool_free=False),
 }

@@ -34,3 +34,31 @@ def route(reward_name: str, s_hat, c_hat, lam):
     """argmax_m Reward(s_hat[:, m], c_hat[:, m]; lam) -> (B,) model indices."""
     r = REWARDS[reward_name](jnp.asarray(s_hat), jnp.asarray(c_hat), lam)
     return jnp.argmax(r, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Cascade (multi-leg) reward accounting
+# ---------------------------------------------------------------------------
+
+def cascade_outcome(leg_quality, leg_cost, keep_best: bool = True):
+    """(final_quality, cumulative_cost) of one escalation sequence.
+
+    The cost of a cascade is the SUM of every leg it ran — charging only
+    the final leg would let escalation look free and silently blow any
+    $/window ledger. Quality is the best answer in hand under keep-best
+    semantics (the serving plane never discards a served response), or the
+    last leg's answer when ``keep_best=False`` (strict replace-on-escalate,
+    the RouteLLM framing).
+    """
+    if len(leg_quality) == 0 or len(leg_quality) != len(leg_cost):
+        raise ValueError("leg_quality and leg_cost must be equal, nonzero "
+                         f"length (got {len(leg_quality)}/{len(leg_cost)})")
+    q = max(leg_quality) if keep_best else leg_quality[-1]
+    return float(q), float(sum(leg_cost))
+
+
+def cascade_reward(reward_name: str, leg_quality, leg_cost, lam,
+                   keep_best: bool = True):
+    """Realized reward of a full cascade: R(final quality, SUM leg costs)."""
+    q, c = cascade_outcome(leg_quality, leg_cost, keep_best=keep_best)
+    return float(REWARDS[reward_name](q, c, lam))

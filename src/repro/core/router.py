@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core import rewards as rewards_mod
 from repro.core.metrics import DEFAULT_LAMBDA_GRID, evaluate_router
-from repro.core.predictors import PREDICTORS
+from repro.core.predictors import ENSEMBLE_KINDS, PREDICTORS
 
 
 def _expand_pool_axis(kind: str, params: Dict) -> Dict:
@@ -37,6 +37,16 @@ def _expand_pool_axis(kind: str, params: Dict) -> Dict:
         w_key, b_key = "wo", "bo"
     elif kind == "reg":
         w_key, b_key = "w", "b"
+    elif kind == "attn-ens":
+        # Per-head output maps carry a leading head axis: grow every head's
+        # member column at its own mean, so head disagreement on the new
+        # member starts at the heads' existing spread (nonzero epistemic
+        # std — the cascade policy treats the newcomer as uncertain).
+        p["wo"] = jnp.concatenate(
+            [params["wo"], params["wo"].mean(axis=2, keepdims=True)], axis=2)
+        p["bo"] = jnp.concatenate(
+            [params["bo"], params["bo"].mean(axis=1, keepdims=True)], axis=1)
+        return p
     elif kind in ("2fcn", "3fcn"):
         last = f"layer{len(params) - 1}"
         inner = dict(params[last])
@@ -64,6 +74,10 @@ def _drop_pool_axis(kind: str, params: Dict, idx: int) -> Dict:
         w_key, b_key = "wo", "bo"
     elif kind == "reg":
         w_key, b_key = "w", "b"
+    elif kind == "attn-ens":
+        p["wo"] = jnp.delete(params["wo"], idx, axis=2)
+        p["bo"] = jnp.delete(params["bo"], idx, axis=1)
+        return p
     elif kind in ("2fcn", "3fcn"):
         last = f"layer{len(params) - 1}"
         inner = dict(params[last])
@@ -189,6 +203,25 @@ class PredictiveRouter:
         s_hat = PREDICTORS[self.quality_kind].apply(self.quality_params, q, m)
         c_hat = PREDICTORS[self.cost_kind].apply(self.cost_params, q, m)
         return np.asarray(s_hat), self.denormalize_cost(c_hat)
+
+    def predict_with_uncertainty(self, q_emb: np.ndarray):
+        """(s_mean, s_std, c_hat), each (B, K).
+
+        For ensemble quality kinds ``s_std`` is the per-head disagreement
+        (epistemic uncertainty of the quality estimate — the signal the
+        cascade escalation policy consumes); non-ensemble kinds report
+        zero std, so callers degrade gracefully to mean-only decisions.
+        """
+        heads_apply = ENSEMBLE_KINDS.get(self.quality_kind)
+        if heads_apply is None:
+            s_hat, c_hat = self.predict(q_emb)
+            return s_hat, np.zeros_like(s_hat), c_hat
+        m = jnp.asarray(self.model_emb)
+        q = jnp.asarray(q_emb)
+        per_head = np.asarray(heads_apply(self.quality_params, q, m))
+        c_hat = PREDICTORS[self.cost_kind].apply(self.cost_params, q, m)
+        return (per_head.mean(axis=0), per_head.std(axis=0),
+                self.denormalize_cost(c_hat))
 
     def route(self, q_emb: np.ndarray, lam: float) -> np.ndarray:
         s_hat, c_hat = self.predict(q_emb)

@@ -5,6 +5,16 @@
         --budget 0.02 --budget-window 0.5 --lam 1.0
     PYTHONPATH=src python -m repro.launch.serve --trace drift --requests 400 \
         --workers 4 --online --crash-at 0.1 --rejoin-at 0.3
+    PYTHONPATH=src python -m repro.launch.serve --trace poisson --requests 200 \
+        --cascade --max-legs 3 --budget 0.02
+
+``--cascade`` trains the deep-ensemble quality head and runs multi-leg
+escalation (repro.cascade): answers that look inadequate against the next
+cost-ladder rung's expected marginal reward are re-admitted at elevated
+priority, every leg is charged to the budget ledger, and telemetry splits
+quality/cost/latency by leg. ``--save-router`` / ``--restore-router``
+persist the trained router (params + version + cost-scaler meta); restored
+routers score bitwise-identically.
 
 Builds reduced pool members on CPU (full configs require the production
 mesh), trains the attention router on synthetic RouterBench traffic mapped
@@ -93,22 +103,40 @@ def synthetic_pool_traffic(pool, n: int = 1200, seed: int = 0):
 
 def build_routed_engine(names, *, seed: int = 0, epochs: int = 120,
                         lam: float = 1.0, n_traffic: int = 1200,
-                        use_pallas: bool = False):
-    """Pool + trained router + engine, all seeded. Returns (engine, data, te)."""
+                        use_pallas: bool = False, quality_kind: str = "attn",
+                        restore_router: str = None):
+    """Pool + trained router + engine, all seeded. Returns (engine, data, te).
+
+    ``quality_kind="attn-ens"`` trains the deep-ensemble quality head (the
+    cascade path's uncertainty source). ``restore_router`` skips offline
+    predictor training entirely and loads a checkpoint saved by
+    ``--save-router`` instead (the pool and traffic corpus are still built
+    — they are the serving substrate, not router state).
+    """
     pool = build_pool(names, seed=seed)
     data, quality, cost = synthetic_pool_traffic(pool, n=n_traffic, seed=seed)
     tr, va, te = data.split(seed=seed)
-    memb, centers = build_model_embeddings(data.emb[tr], quality[tr], seed=seed)
-    qp, cp, scaler, _ = train_dual_predictors(
-        "attn", "attn", data.emb[tr], quality[tr], cost[tr], memb,
-        q_emb_val=data.emb[va], quality_val=quality[va], cost_val=cost[va],
-        epochs=epochs, seed=seed,
-    )
-    # Centroids ride on the router so online hot-added members can be
-    # embedded per-cluster from live outcomes (repro.online.membership).
-    router = PredictiveRouter("attn", "attn", qp, cp, memb,
-                              reward="R2", cost_scaler=scaler,
-                              centroids=centers)
+    if restore_router is not None:
+        from repro.checkpoint import load_router
+
+        router = load_router(restore_router, expect_pool_names=names)
+        if router.n_members != len(pool):
+            raise ValueError(
+                f"checkpoint pool size {router.n_members} != "
+                f"serving pool size {len(pool)}")
+    else:
+        memb, centers = build_model_embeddings(data.emb[tr], quality[tr],
+                                               seed=seed)
+        qp, cp, scaler, _ = train_dual_predictors(
+            quality_kind, "attn", data.emb[tr], quality[tr], cost[tr], memb,
+            q_emb_val=data.emb[va], quality_val=quality[va],
+            cost_val=cost[va], epochs=epochs, seed=seed,
+        )
+        # Centroids ride on the router so online hot-added members can be
+        # embedded per-cluster from live outcomes (repro.online.membership).
+        router = PredictiveRouter(quality_kind, "attn", qp, cp, memb,
+                                  reward="R2", cost_scaler=scaler,
+                                  centroids=centers)
     engine = RoutedEngine(router=router, pool=pool, lam=lam,
                           use_pallas=use_pallas)
     return engine, data, te
@@ -147,6 +175,32 @@ def main(argv=None):
                     help="online adaptation: replay-buffered outcome "
                          "feedback, drift detection, exploration, and "
                          "incremental router updates during serving")
+    ap.add_argument("--cascade", action="store_true",
+                    help="cascade routing: train the deep-ensemble quality "
+                         "head and escalate inadequate answers up the cost "
+                         "ladder (multi-leg requests, cumulative-cost "
+                         "budget accounting)")
+    ap.add_argument("--max-legs", type=int, default=3,
+                    help="cascade: max legs per request")
+    ap.add_argument("--cascade-beta", type=float, default=1.0,
+                    help="cascade: optimism width on untried rungs "
+                         "(x ensemble std)")
+    ap.add_argument("--cascade-margin", type=float, default=0.0,
+                    help="cascade: required expected marginal reward to "
+                         "escalate")
+    ap.add_argument("--cascade-min-headroom", type=float, default=0.0,
+                    help="cascade: budget headroom in [0,1] below which "
+                         "escalation is blocked (0 disables the gate; "
+                         "needs --budget to have any effect)")
+    ap.add_argument("--save-router", default=None, metavar="PATH",
+                    help="persist the trained router (params + version + "
+                         "cost-scaler meta) after offline training")
+    ap.add_argument("--restore-router", default=None, metavar="PATH",
+                    help="load a --save-router checkpoint instead of "
+                         "training (restored scores are bitwise-identical)")
+    ap.add_argument("--refresh-established", action="store_true",
+                    help="online: EMA outcome-driven embedding refresh for "
+                         "graduated (established) pool members under drift")
     ap.add_argument("--online-update-every", type=int, default=32,
                     help="outcomes between scheduled incremental updates")
     ap.add_argument("--epsilon", type=float, default=0.05,
@@ -177,7 +231,16 @@ def main(argv=None):
     names = args.pool.split(",")
     engine, data, te = build_routed_engine(
         names, seed=args.seed, epochs=args.epochs, lam=args.lam,
-        use_pallas=args.pallas)
+        use_pallas=args.pallas,
+        quality_kind="attn-ens" if args.cascade else "attn",
+        restore_router=args.restore_router)
+    if args.save_router:
+        from repro.checkpoint import save_router
+
+        save_router(args.save_router, engine.router, pool_names=names)
+        print(f"router checkpoint saved to {args.save_router} "
+              f"(v{engine.router.version}, "
+              f"{engine.router.quality_kind}/{engine.router.cost_kind})")
 
     trace = make_trace(
         TraceConfig(
@@ -190,16 +253,35 @@ def main(argv=None):
         benchmarks=[data.benchmark[i] for i in te],
     )
 
-    # Quality truth lookup (only the --online paths consume feedback),
-    # built once and shared by every adapter.
+    # Quality truth lookup (--online feedback and --cascade per-leg
+    # observed quality), built once and shared by every consumer.
     qual_of_text = None
-    if args.online:
+    if args.online or args.cascade:
         quality = data.quality[:, pool_quality_columns(engine.pool, data)]
         qual_of_text = {data.texts[i]: quality[i]
                         for i in range(len(data.texts))}
 
     def truth(req):
         return float(qual_of_text[req.text][req.member])
+
+    def make_cascade(governor):
+        """Fresh cascade coordinator bound to one scheduler's governor."""
+        if not args.cascade:
+            return None
+        from repro.cascade import (
+            CascadeConfig, CascadeCoordinator, CascadePolicy, cost_ladder,
+        )
+
+        policy = CascadePolicy(
+            cost_ladder(engine.router),
+            CascadeConfig(max_legs=args.max_legs, beta=args.cascade_beta,
+                          margin=args.cascade_margin,
+                          min_headroom=args.cascade_min_headroom),
+            reward=engine.router.reward)
+        # Observed leg quality: the synthetic RouterBench truth stands in
+        # for the deployment's response evaluator.
+        return CascadeCoordinator(policy, observed_quality=truth,
+                                  governor=governor)
 
     def make_feedback(seed):
         """(quality_feedback, feedback_source, stage) for one adapter."""
@@ -215,7 +297,8 @@ def main(argv=None):
         return truth, None, None
 
     if args.workers > 1:
-        return _run_plane(args, engine, data, trace, make_feedback)
+        return _run_plane(args, engine, data, trace, make_feedback,
+                          make_cascade)
 
     governor = None
     if args.budget > 0:
@@ -236,6 +319,12 @@ def main(argv=None):
         tr, _, _ = data.split(seed=args.seed)
         drift = DriftDetector(window=48).fit(
             data.emb[tr], engine.router.centroids)
+        membership = None
+        if args.refresh_established:
+            from repro.online import MembershipTracker
+
+            membership = MembershipTracker(
+                engine, refresh_established=True)
         adapter = OnlineAdapter(
             engine, quality_feedback, governor=governor,
             config=OnlineUpdateConfig(
@@ -243,9 +332,11 @@ def main(argv=None):
             exploration=ExplorationConfig(epsilon=args.epsilon,
                                           seed=args.seed),
             drift=drift, feedback_source=feedback_source, stage=stage,
+            membership=membership,
             seed=args.seed,
         )
 
+    cascade = make_cascade(governor)
     sched = MicroBatchScheduler(
         engine,
         SchedulerConfig(score_batch=args.score_batch,
@@ -254,12 +345,14 @@ def main(argv=None):
                         queue_capacity=args.queue_capacity),
         governor=governor,
         service_time=None if args.wall_time else default_service_model(),
-        adapter=adapter,
+        adapter=adapter, cascade=cascade,
     )
     summary = sched.run_trace(trace)
 
     print(f"trace={args.trace} requests={args.requests} seed={args.seed}")
     print(sched.telemetry.report(summary.get("duration_s")))
+    if cascade is not None:
+        print(cascade.report())
     if adapter is not None:
         print(adapter.report())
     if governor is not None:
@@ -271,7 +364,7 @@ def main(argv=None):
     return summary
 
 
-def _run_plane(args, engine, data, trace, make_feedback):
+def _run_plane(args, engine, data, trace, make_feedback, make_cascade):
     """Multi-worker path: build N workers + coordinator, run the plane."""
     from repro.distributed import (
         Coordinator, PlaneEvent, ServingPlane, SharedBudgetLedger,
@@ -310,6 +403,12 @@ def _run_plane(args, engine, data, trace, make_feedback):
 
             wseed = args.seed + 101 * wid + 1
             quality_feedback, feedback_source, stage = make_feedback(wseed)
+            membership = None
+            if args.refresh_established:
+                from repro.online import MembershipTracker
+
+                membership = MembershipTracker(
+                    weng, refresh_established=True)
             adapter = OnlineAdapter(
                 weng, quality_feedback, governor=governor,
                 config=OnlineUpdateConfig(
@@ -318,6 +417,7 @@ def _run_plane(args, engine, data, trace, make_feedback):
                                               seed=wseed),
                 drift=copy.deepcopy(drift_proto),
                 feedback_source=feedback_source, stage=stage,
+                membership=membership,
                 defer_updates=True, seed=wseed,
             )
         sched = MicroBatchScheduler(
@@ -328,7 +428,7 @@ def _run_plane(args, engine, data, trace, make_feedback):
                             queue_capacity=args.queue_capacity),
             governor=governor, clock=SimClock(),
             service_time=None if args.wall_time else default_service_model(),
-            adapter=adapter,
+            adapter=adapter, cascade=make_cascade(governor),
         )
         workers.append(WorkerNode(wid, weng, sched, adapter))
 
@@ -348,6 +448,9 @@ def _run_plane(args, engine, data, trace, make_feedback):
     print(f"trace={args.trace} requests={args.requests} seed={args.seed} "
           f"workers={args.workers}")
     print(plane.report(summary.get("duration_s")))
+    if args.cascade:
+        for w in sorted(workers, key=lambda w: w.wid):
+            print(f"w{w.wid} {w.scheduler.cascade.report()}")
     if args.online:
         for w in sorted(workers, key=lambda w: w.wid):
             print(f"w{w.wid} {w.adapter.report()}")

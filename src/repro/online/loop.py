@@ -99,7 +99,7 @@ class OnlineAdapter:
         """Budget slack in [0, 1] annealing exploration (1 = no governor)."""
         if self.governor is None:
             return 1.0
-        return float(np.clip(1.0 - self.governor.utilization(now), 0.0, 1.0))
+        return self.governor.headroom(now)
 
     def choose(self, s_hat: np.ndarray, c_hat: np.ndarray, lam: float,
                now: float = 0.0) -> np.ndarray:

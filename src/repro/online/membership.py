@@ -17,6 +17,15 @@ untrained. The tracker solves both:
 
 Removal shifts member indices down; the tracker propagates the remap to
 the replay buffer and exploration counts so stale indices can't dangle.
+
+**Established-member refresh** (``refresh_established=True``): graduated
+members' embedding rows normally adapt only through predictor gradients —
+under drift the *embedding* itself (per-cluster observed mean quality,
+paper §5) goes stale even while the predictor compensates. The flagged
+path applies an EMA of observed outcomes to the graduated member's row in
+the outcome's cluster, so the row tracks the member's live per-cluster
+quality. Off by default: it changes long-standing rows, so the operator
+opts in (``serve.py --refresh-established``).
 """
 from __future__ import annotations
 
@@ -27,10 +36,14 @@ import numpy as np
 
 class MembershipTracker:
     def __init__(self, engine, *, min_outcomes: int = 25,
-                 prior_weight: float = 1.0):
+                 prior_weight: float = 1.0,
+                 refresh_established: bool = False,
+                 refresh_rate: float = 0.05):
         self.engine = engine
         self.min_outcomes = min_outcomes
         self.prior_weight = prior_weight
+        self.refresh_established = refresh_established
+        self.refresh_rate = refresh_rate
         k = len(engine.pool)
         # Offline-trained members are born graduated.
         self.counts = np.full(k, min_outcomes, np.int64)
@@ -106,7 +119,7 @@ class MembershipTracker:
         member = int(member)
         self.counts[member] += 1
         stats = self._cluster_stats.get(member)
-        if stats is None:
+        if stats is None and not self.refresh_established:
             return
         centroids = self.engine.router.centroids
         if centroids is None:
@@ -117,6 +130,16 @@ class MembershipTracker:
         d2 = np.sum((np.asarray(centroids, np.float32)
                      - np.asarray(q_emb, np.float32)[None, :]) ** 2, axis=1)
         ci = int(np.argmin(d2))
+        if stats is None:
+            # Established member under the flagged refresh: EMA the row's
+            # cluster entry toward the observed outcome, so drift in the
+            # member's real per-cluster quality reaches the embedding
+            # without waiting for predictor gradients to route around it.
+            rho = self.refresh_rate
+            self.model_emb[member, ci] = (
+                (1.0 - rho) * self.model_emb[member, ci] + rho * float(s_obs))
+            self.emb_dirty = True
+            return
         stats["sum"][ci] += float(s_obs)
         stats["n"][ci] += 1
         prior = self._prior_rows[member][ci]

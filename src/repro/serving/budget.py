@@ -87,6 +87,16 @@ class BudgetGovernor:
     def utilization(self, now: float) -> float:
         return self.window_spend(now) / self.budget
 
+    def headroom(self, now: float) -> float:
+        """Budget slack in [0, 1]: 1 = window untouched, 0 = at/over cap.
+
+        The one definition every consumer shares — exploration annealing
+        (`OnlineAdapter`) and cascade escalation gating
+        (`CascadeCoordinator`) must read the same slack or their
+        spend-shedding behaviours drift apart.
+        """
+        return float(min(max(1.0 - self.utilization(now), 0.0), 1.0))
+
     # -- control ------------------------------------------------------------
 
     @property

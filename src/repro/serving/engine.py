@@ -148,6 +148,17 @@ class RoutedEngine:
         """(s_hat, c_hat), both (B, K), from precomputed embeddings."""
         return self._scores(q_emb)
 
+    def score_emb_uncertainty(self, q_emb: np.ndarray):
+        """(s_mean, s_std, c_hat), each (B, K) — the cascade scoring path.
+
+        Ensemble quality kinds report per-head disagreement as epistemic
+        std; everything else degrades to zero std (the cascade policy then
+        runs on means alone). This path stays on the jnp reference scorer:
+        the fused Pallas kernel computes a single output head, and the
+        per-head spread is exactly what it would fuse away.
+        """
+        return self.router.predict_with_uncertainty(q_emb)
+
     def score_texts(self, texts: Sequence[str]):
         """(s_hat, c_hat), both (B, K) — one fused pass over the batch."""
         return self._scores(embed_texts(texts))

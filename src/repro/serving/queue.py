@@ -42,17 +42,42 @@ class Request:
 
     # Filled in by the runtime.
     status: str = PENDING
-    member: int = -1                   # routed pool member index
+    member: int = -1                   # routed pool member index (last leg)
     admitted_s: float = float("nan")
     service_start_s: float = float("nan")
     finish_s: float = float("nan")
-    cost: float = 0.0
+    cost: float = 0.0                  # $ of the LAST leg served
     output: Optional[np.ndarray] = None
     # Online-adaptation bookkeeping: the scoring-pass embedding (reused by
     # the replay buffer / drift detector) and whether exploration overrode
     # the reward argmax for this request.
     q_emb: Optional[np.ndarray] = None
     explored: bool = False
+    # Multi-leg cascade lifecycle (repro.cascade). A request completing a
+    # leg whose outcome triggers escalation is re-admitted at elevated
+    # priority instead of finalized; these fields carry the cascade state
+    # across legs. ``cum_cost`` is what cascade-aware reward accounting
+    # charges — the SUM of every leg's cost, never just the last one.
+    leg: int = 0                       # completed legs
+    cum_cost: float = 0.0              # $ across ALL legs
+    tried: List[int] = dataclasses.field(default_factory=list)
+    leg_costs: List[float] = dataclasses.field(default_factory=list)
+    leg_quality: List[float] = dataclasses.field(default_factory=list)
+    forced_member: int = -1            # escalation target (-1 = route freely)
+    forced_member_name: str = ""       # resolves the target across hot pool
+    #                                    mutations (index shifts); "" = by index
+    finalized: bool = False            # telemetry completion guard
+    # Best-answer-so-far under keep-best escalation semantics.
+    best_q: float = float("nan")
+    best_q_std: float = 0.0
+    best_member: int = -1
+    best_observed: bool = False        # best_q is feedback, not an estimate
+    best_output: Optional[np.ndarray] = None
+    # Router belief rows pinned at the last scoring pass (cascade policy
+    # inputs): per-member quality mean / ensemble std / predicted cost.
+    s_pred: Optional[np.ndarray] = None
+    s_std_pred: Optional[np.ndarray] = None
+    c_pred: Optional[np.ndarray] = None
 
     @property
     def queue_wait_s(self) -> float:
@@ -61,6 +86,22 @@ class Request:
     @property
     def e2e_latency_s(self) -> float:
         return self.finish_s - self.arrival_s
+
+    def snapshot_leg(self) -> "Request":
+        """Frozen per-leg outcome copy with a fresh rid.
+
+        The online loop observes every *leg* as its own outcome (the
+        adapter learns from both the cheap try and the escalation), but the
+        request object itself stays in flight and its ``member``/``cost``
+        mutate on the next leg — and staged delayed feedback is keyed by
+        rid, which must be unique per outcome. The per-leg lists are
+        copied (the live request keeps appending to them); array fields
+        are shared (never mutated in place).
+        """
+        return dataclasses.replace(
+            self, rid=next(_REQUEST_IDS), status=DONE,
+            tried=list(self.tried), leg_costs=list(self.leg_costs),
+            leg_quality=list(self.leg_quality))
 
 
 class AdmissionQueue:
@@ -72,6 +113,7 @@ class AdmissionQueue:
         self.admitted = 0
         self.rejected = 0
         self.expired = 0
+        self.readmitted = 0
 
     @property
     def depth(self) -> int:
@@ -87,6 +129,21 @@ class AdmissionQueue:
         self._items.append(req)
         self.admitted += 1
         return True
+
+    def offer_front(self, req: Request, now: float) -> None:
+        """Re-admit an escalated leg at the HEAD of the queue.
+
+        Escalated requests are in-flight work with sunk cost: making them
+        queue behind fresh arrivals would stack a second full queue wait
+        onto their latency, and rejecting them under backpressure would
+        throw away a served answer. They therefore jump the FIFO and are
+        exempt from the capacity bound (the request was already admitted
+        once; re-admission never grows the number of live requests).
+        """
+        req.status = PENDING
+        req.admitted_s = now
+        self._items.appendleft(req)
+        self.readmitted += 1
 
     def expire(self, now: float) -> List[Request]:
         """Drop queued requests whose deadline has passed."""

@@ -88,7 +88,7 @@ class MicroBatchScheduler:
                  clock: Optional[SimClock] = None,
                  service_time: Optional[Callable[[str, int, float], float]]
                  = None,
-                 adapter=None):
+                 adapter=None, cascade=None):
         self.engine = engine
         self.config = config or SchedulerConfig()
         self.queue = queue or AdmissionQueue(self.config.queue_capacity)
@@ -101,6 +101,10 @@ class MicroBatchScheduler:
         # scoring-step argmax with the exploration policy and consumes
         # served outcomes after every dispatch round.
         self.adapter = adapter
+        # Cascade escalation (repro.cascade.CascadeCoordinator): turns
+        # completed legs into stop-vs-escalate decisions; escalated
+        # requests are re-admitted at the queue head instead of finalized.
+        self.cascade = cascade
 
     # -- one scheduling round -----------------------------------------------
 
@@ -146,13 +150,34 @@ class MicroBatchScheduler:
         return self.service_time(kind, n, wall_s)
 
     def dispatch(self) -> List[Request]:
-        """Expire, score once, coalesce, generate. Returns served requests."""
-        self.queue.expire(self.clock.now)
+        """Expire, score once, coalesce, generate. Returns served requests.
+
+        With a cascade coordinator installed, a completed generate is a
+        *leg*, not necessarily the end of the request: the coordinator may
+        re-admit the request at the queue head with a forced next member
+        (escalation), and only stop decisions finalize. Every leg's cost
+        is charged to the budget governor as it happens, so the ledger
+        sees the cascade's cumulative spend.
+        """
+        served: List[Request] = []
+        for r in self.queue.expire(self.clock.now):
+            if r.best_output is not None:
+                # Deadline hit mid-cascade: the request already holds a
+                # served answer — deliver best-so-far instead of expiring
+                # work that was paid for.
+                self.queue.expired -= 1
+                r.status = DONE
+                r.output = r.best_output
+                r.member = r.best_member
+                self.telemetry.finalize_request(r)
+                if self.cascade is not None:
+                    self.cascade.on_rescued(r)
+                served.append(r)
         # Hot pool membership can mutate the pool between rounds.
         self.telemetry.sync_members([m.name for m in self.engine.pool])
         batch = self.queue.pop(self.config.score_batch)
         if not batch:
-            return []
+            return served
 
         lam = self.engine.lam
         if self.governor is not None:
@@ -160,25 +185,51 @@ class MicroBatchScheduler:
         self.telemetry.record_lambda(self.clock.now, lam)
 
         t0 = time.perf_counter()
-        if self.adapter is not None:
+        if self.adapter is not None or self.cascade is not None:
             # One embedding pass shared between scoring and the outcome
             # loop (replay / drift want the same q_emb the router saw).
             q_emb = np.asarray(self.engine.embed([r.text for r in batch]))
-            s_hat, c_hat = self.engine.score_emb(q_emb)
-            choices = self.adapter.choose(s_hat, c_hat, lam, self.clock.now)
-            for r, e, ex in zip(batch, q_emb, self.adapter.last_explored):
-                r.q_emb = e
-                r.explored = bool(ex)
+            if self.cascade is not None:
+                s_hat, s_std, c_hat = self.engine.score_emb_uncertainty(q_emb)
+                self.cascade.note_scores(batch, s_hat, s_std, c_hat)
+            else:
+                s_hat, c_hat = self.engine.score_emb(q_emb)
+            if self.adapter is not None:
+                choices = self.adapter.choose(s_hat, c_hat, lam,
+                                              self.clock.now)
+                for r, e, ex in zip(batch, q_emb, self.adapter.last_explored):
+                    r.q_emb = e
+                    r.explored = bool(ex)
+            else:
+                choices = self.engine.choose(s_hat, c_hat, lam)
         else:
             s_hat, c_hat = self.engine.score_texts([r.text for r in batch])
             choices = self.engine.choose(s_hat, c_hat, lam)
+        choices = np.asarray(choices)
+        names = [m.name for m in self.engine.pool]
+        for i, r in enumerate(batch):
+            if r.forced_member >= 0:
+                # Escalated leg: the cascade policy already picked the
+                # ladder rung; the argmax/exploration choice is overridden.
+                # The rung is resolved by member NAME when recorded (hot
+                # pool mutations shift indices — a positional lookup
+                # would silently dispatch a different member); a rung
+                # that no longer exists falls back to free routing — the
+                # request must not be lost.
+                if r.forced_member_name:
+                    if r.forced_member_name in names:
+                        choices[i] = names.index(r.forced_member_name)
+                elif r.forced_member < len(self.engine.pool):
+                    choices[i] = r.forced_member
+                r.forced_member = -1
+                r.forced_member_name = ""
         score_wall = time.perf_counter() - t0
         self.telemetry.record_score_batch(len(batch), score_wall)
         self.clock.advance(self._virtual_dt("score", len(batch), score_wall))
         for r in batch:
             r.service_start_s = self.clock.now
 
-        served: List[Request] = []
+        outcomes: List[Request] = []   # per-leg outcomes for the adapter
         for mi in range(len(self.engine.pool)):
             idx = [i for i, c in enumerate(choices) if int(c) == mi]
             for lo in range(0, len(idx), self.config.max_batch):
@@ -200,16 +251,48 @@ class MicroBatchScheduler:
                     r.member = mi
                     r.output = np.asarray(o)[: r.max_new]
                     r.cost = per_req_cost
-                    r.status = DONE
+                    r.cum_cost += per_req_cost
+                    r.leg += 1
+                    r.tried.append(mi)
+                    r.leg_costs.append(per_req_cost)
                     r.finish_s = self.clock.now
-                    self.telemetry.record_completion(
-                        r.queue_wait_s, r.e2e_latency_s)
+                    if self.cascade is None:
+                        r.status = DONE
+                        self.telemetry.finalize_request(r)
+                        served.append(r)
+                        outcomes.append(r)
+                        continue
+                    nxt = self.cascade.on_leg_complete(r, lam,
+                                                       self.clock.now)
+                    self.telemetry.record_leg(
+                        r.leg, per_req_cost, r.leg_quality[-1],
+                        r.e2e_latency_s)
+                    # The adapter trains on each leg's true attribution
+                    # (member/cost of the leg that ran), which the live
+                    # request object won't keep: snapshot it. (Only the
+                    # adapter consumes outcomes — skip the copies without
+                    # one.)
+                    if self.adapter is not None:
+                        outcomes.append(r.snapshot_leg())
+                    if nxt is not None:
+                        self.telemetry.record_escalation()
+                        r.forced_member = nxt
+                        r.forced_member_name = self.engine.pool[nxt].name
+                        self.queue.offer_front(r, self.clock.now)
+                        continue
+                    r.status = DONE
+                    if r.best_output is not None:
+                        # Keep-best semantics: deliver the best leg's
+                        # answer; cum_cost still charges every leg.
+                        r.output = r.best_output
+                        r.member = r.best_member
+                    self.telemetry.finalize_request(r)
                     served.append(r)
         if self.adapter is not None:
-            if served:
+            if outcomes:
                 # observe() also ticks: staged (delayed-feedback) outcomes
                 # whose scores have landed flush on the same round.
-                self.adapter.observe(served, self.clock.now)
+                self.adapter.observe(outcomes, self.clock.now)
             else:
                 self.adapter.tick(self.clock.now)
         return served

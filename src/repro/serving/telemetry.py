@@ -87,6 +87,16 @@ class Telemetry:
         self.batch_size_sum = 0               # generate micro-batch sizes
         self.max_queue_depth = 0
         self.depth_samples = 0
+        # Cascade (multi-leg) accounting, indexed by leg number - 1. Lists
+        # grow on demand (max_legs is small and operator-bounded).
+        self.leg_served: list = []            # legs served at leg n
+        self.leg_spend: list = []             # $ spent on leg n
+        self.leg_quality_sum: list = []       # observed/estimated quality
+        self.leg_latency: list = []           # Histogram per leg (e2e at
+        #                                       that leg's completion)
+        self.escalations = 0
+        self.finalized_by_leg: list = []      # requests finalized after leg n
+        self.double_finalize_blocked = 0      # idempotence guard trips
         # Effective-lambda trace, bounded: enough to inspect governor
         # behaviour without growing with traffic volume.
         self.lam_trace: Deque[Tuple[float, float]] = deque(maxlen=4096)
@@ -148,6 +158,15 @@ class Telemetry:
         self.max_queue_depth = max(self.max_queue_depth,
                                    other.max_queue_depth)
         self.depth_samples += other.depth_samples
+        self.escalations += other.escalations
+        self.double_finalize_blocked += other.double_finalize_blocked
+        self._grow_legs(len(other.leg_served))
+        for i in range(len(other.leg_served)):
+            self.leg_served[i] += other.leg_served[i]
+            self.leg_spend[i] += other.leg_spend[i]
+            self.leg_quality_sum[i] += other.leg_quality_sum[i]
+            self.leg_latency[i].merge(other.leg_latency[i])
+            self.finalized_by_leg[i] += other.finalized_by_leg[i]
         self.routing_latency.merge(other.routing_latency)
         self.queue_wait.merge(other.queue_wait)
         self.e2e_latency.merge(other.e2e_latency)
@@ -184,6 +203,52 @@ class Telemetry:
         self.queue_wait.record(queue_wait_s)
         self.e2e_latency.record(e2e_s)
 
+    def finalize_request(self, req) -> bool:
+        """Idempotent completion accounting for one request.
+
+        A re-admitted cascade leg flows through the completion path again;
+        this is the single guard making sure a request can never be counted
+        twice in the completion counters / latency histograms, no matter
+        how many legs it ran or how a buggy caller double-drives the
+        finalize path. Returns False (and counts the block) on a repeat.
+        """
+        if req.finalized:
+            self.double_finalize_blocked += 1
+            return False
+        req.finalized = True
+        self.record_completion(req.queue_wait_s, req.e2e_latency_s)
+        # Per-leg attribution only once cascade accounting is live (a
+        # record_leg call or a multi-leg request) — plain single-shot runs
+        # keep their summary free of cascade keys.
+        if self.leg_served or req.leg > 1:
+            leg = max(int(req.leg), 1)
+            self._grow_legs(leg)
+            self.finalized_by_leg[leg - 1] += 1
+        return True
+
+    # -- cascade (multi-leg) accounting --------------------------------------
+
+    def _grow_legs(self, n_legs: int) -> None:
+        while len(self.leg_served) < n_legs:
+            self.leg_served.append(0)
+            self.leg_spend.append(0.0)
+            self.leg_quality_sum.append(0.0)
+            self.leg_latency.append(Histogram())
+            self.finalized_by_leg.append(0)
+
+    def record_leg(self, leg: int, cost: float, quality: float,
+                   latency_s: float) -> None:
+        """One completed cascade leg (leg numbering starts at 1)."""
+        self._grow_legs(leg)
+        i = leg - 1
+        self.leg_served[i] += 1
+        self.leg_spend[i] += cost
+        self.leg_quality_sum[i] += quality
+        self.leg_latency[i].record(latency_s)
+
+    def record_escalation(self) -> None:
+        self.escalations += 1
+
     def record_queue_depth(self, now: float, depth: int) -> None:
         self.max_queue_depth = max(self.max_queue_depth, depth)
         self.depth_samples += 1
@@ -219,6 +284,19 @@ class Telemetry:
             "e2e_p99_ms": self.e2e_latency.percentile(99) * 1e3,
             "max_queue_depth": self.max_queue_depth,
         }
+        if self.leg_served:
+            out["legs_served"] = list(self.leg_served)
+            out["leg_spend"] = list(self.leg_spend)
+            out["leg_mean_quality"] = [
+                (qs / n if n else float("nan"))
+                for qs, n in zip(self.leg_quality_sum, self.leg_served)]
+            out["leg_e2e_p50_ms"] = [
+                h.percentile(50) * 1e3 for h in self.leg_latency]
+            out["finalized_by_leg"] = list(self.finalized_by_leg)
+            out["escalations"] = self.escalations
+            out["escalation_rate"] = (self.escalations / self.completed
+                                      if self.completed else 0.0)
+            out["double_finalize_blocked"] = self.double_finalize_blocked
         if duration_s:
             out["duration_s"] = duration_s
             out["requests_per_s"] = self.completed / duration_s
@@ -244,6 +322,17 @@ class Telemetry:
             f"e2e p50 {s['e2e_p50_ms']:.1f}ms  p99 {s['e2e_p99_ms']:.1f}ms",
             f"max queue depth {s['max_queue_depth']}",
         ]
+        if self.leg_served:
+            per_leg = "  ".join(
+                f"L{i + 1}: n={n} ${sp:.6f} q={mq:.3f} p50={p50:.1f}ms"
+                for i, (n, sp, mq, p50) in enumerate(zip(
+                    s["legs_served"], s["leg_spend"],
+                    s["leg_mean_quality"], s["leg_e2e_p50_ms"])))
+            lines.append(f"cascade legs: {per_leg}")
+            lines.append(
+                f"escalations {s['escalations']} "
+                f"(rate {s['escalation_rate']:.3f})  finalized by leg "
+                + "/".join(str(n) for n in s["finalized_by_leg"]))
         if duration_s:
             lines.append(f"duration {s['duration_s']:.2f}s  "
                          f"throughput {s['requests_per_s']:.1f} req/s")

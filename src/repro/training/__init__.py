@@ -11,6 +11,7 @@ from repro.training.predictor_trainer import (
     COST_TRAIN,
     QUALITY_TRAIN,
     TrainConfig,
+    make_ensemble_predictor_step,
     make_masked_predictor_step,
     make_predictor_step,
     train_dual_predictors,
@@ -20,6 +21,6 @@ from repro.training.predictor_trainer import (
 __all__ = [
     "AdamConfig", "AdamState", "adam_init", "adam_update", "cosine_lr",
     "make_train_step", "COST_TRAIN", "QUALITY_TRAIN", "TrainConfig",
-    "make_masked_predictor_step", "make_predictor_step",
-    "train_dual_predictors", "train_predictor",
+    "make_ensemble_predictor_step", "make_masked_predictor_step",
+    "make_predictor_step", "train_dual_predictors", "train_predictor",
 ]

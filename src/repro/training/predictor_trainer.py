@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.predictors import PREDICTORS
+from repro.core.predictors import ENSEMBLE_KINDS, PREDICTORS
 from repro.training.optim import AdamConfig, adam_init, adam_update
 
 
@@ -64,6 +64,35 @@ def make_predictor_step(kind: str, opt_cfg: AdamConfig):
 
 
 @functools.lru_cache(maxsize=64)
+def make_ensemble_predictor_step(kind: str, opt_cfg: AdamConfig):
+    """Step for deep-ensemble kinds with per-head bootstrap masks.
+
+    ``step(params, state, q (B,dq), m (K,dm), t (B,K), w (B,H)) ->
+    (loss, params, state)``. ``w`` holds per-example per-head bootstrap
+    weights (Poisson(1) counts — bagging): head ``h`` only sees examples
+    with ``w[:, h] > 0`` and sees multiplicities as loss weight, so the
+    heads fit *different resamples* of the same data through the shared
+    trunk — the disagreement that survives is the epistemic uncertainty
+    the cascade escalation policy reads. Same Adam path as
+    :func:`make_predictor_step`.
+    """
+    heads_apply = ENSEMBLE_KINDS[kind]
+
+    def loss_fn(p, q, m, t, w):
+        out = heads_apply(p, q, m)                   # (H, B, K)
+        err = (out - t[None, :, :]) ** 2
+        wm = w.T[:, :, None]                         # (H, B, 1)
+        return jnp.sum(err * wm) / (jnp.sum(wm) * t.shape[1] + 1e-9)
+
+    def step(params, state, q, m, t, w):
+        loss, grads = jax.value_and_grad(loss_fn)(params, q, m, t, w)
+        params, state = adam_update(opt_cfg, grads, state, params)
+        return loss, params, state
+
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=64)
 def make_masked_predictor_step(kind: str, opt_cfg: AdamConfig):
     """Step for online outcome tuples: one observed member per example.
 
@@ -71,6 +100,12 @@ def make_masked_predictor_step(kind: str, opt_cfg: AdamConfig):
     target (B,)) -> (loss, params, state)``. MSE is taken only on the
     routed member's prediction — the counterfactual columns get no
     gradient, which is exactly the partial feedback a served router sees.
+
+    Ensemble kinds train through their *mean* here: every head receives
+    the same gradient direction, so online outcome updates translate the
+    ensemble mean while preserving the bootstrap-established head spread
+    (the epistemic-uncertainty signal is not collapsed by serving-time
+    feedback).
     """
     pred = PREDICTORS[kind]
 
@@ -108,7 +143,17 @@ def train_predictor(
         t_max=cfg.epochs * steps_per_epoch,
     )
     state = adam_init(opt_cfg, params)
-    step = make_predictor_step(kind, opt_cfg)
+    boot = None
+    if kind in ENSEMBLE_KINDS:
+        # One fixed bootstrap resample per head (Poisson(1) bagging
+        # weights), drawn once so every epoch shows each head the same
+        # resampled world — the standard deep-ensemble diversity recipe.
+        n_heads = int(np.shape(params["bo"])[0])
+        boot = jnp.asarray(np.random.default_rng(cfg.seed).poisson(
+            1.0, size=(n, n_heads)).astype(np.float32))
+        step = make_ensemble_predictor_step(kind, opt_cfg)
+    else:
+        step = make_predictor_step(kind, opt_cfg)
 
     @jax.jit
     def eval_loss(p, qv, tv):
@@ -125,7 +170,11 @@ def train_predictor(
             idx = perm[i * cfg.batch_size : (i + 1) * cfg.batch_size]
             if len(idx) == 0:
                 continue
-            loss, params, state = step(params, state, qj[idx], m, tj[idx])
+            if boot is not None:
+                loss, params, state = step(params, state, qj[idx], m,
+                                           tj[idx], boot[idx])
+            else:
+                loss, params, state = step(params, state, qj[idx], m, tj[idx])
             ep_loss += float(loss)
         history["train_loss"].append(ep_loss / steps_per_epoch)
         if val is not None and (epoch % cfg.eval_every == 0 or epoch == cfg.epochs - 1):

@@ -90,6 +90,71 @@ class TestCheckpoint:
             load_checkpoint(path, {"w": jnp.ones((2,)), "extra": jnp.ones((1,))})
 
 
+class TestRouterCheckpoint:
+    """save_router / load_router: the launch/serve.py --save-router /
+    --restore-router persistence path (params + version + scaler meta)."""
+
+    def _router(self, quality_kind="attn-ens"):
+        from repro.core.predictors import PREDICTORS
+        from repro.core.router import PredictiveRouter
+
+        rng = np.random.default_rng(0)
+        dq, k, dm = 12, 3, 4
+        qp = PREDICTORS[quality_kind].init(jax.random.key(0), dq, k, dm)
+        cp = PREDICTORS["attn"].init(jax.random.key(1), dq, k, dm)
+        # float64 scaler on purpose: restores must preserve dtype exactly
+        # for denormalize_cost to reproduce the original arithmetic.
+        scaler = {"mu": rng.random(k), "sd": rng.random(k) + 0.5}
+        return PredictiveRouter(
+            quality_kind, "attn", qp, cp,
+            rng.random((k, dm)).astype(np.float32), reward="R2",
+            cost_scaler=scaler, version=7,
+            centroids=rng.random((dm, dq)).astype(np.float32))
+
+    def test_roundtrip_scores_bitwise_equal(self, tmp_path):
+        from repro.checkpoint import load_router, save_router
+
+        router = self._router()
+        path = os.path.join(tmp_path, "router.npz")
+        save_router(path, router)
+        restored = load_router(path)
+        q = np.random.default_rng(1).normal(size=(9, 12)).astype(np.float32)
+        s1, sd1, c1 = router.predict_with_uncertainty(q)
+        s2, sd2, c2 = restored.predict_with_uncertainty(q)
+        assert np.array_equal(s1, s2)
+        assert np.array_equal(sd1, sd2)
+        assert np.array_equal(c1, c2)
+        assert restored.version == 7
+        assert restored.quality_kind == "attn-ens"
+        assert restored.cost_scaler["mu"].dtype == router.cost_scaler["mu"].dtype
+        np.testing.assert_array_equal(restored.cost_scaler["mu"],
+                                      router.cost_scaler["mu"])
+        np.testing.assert_array_equal(restored.centroids, router.centroids)
+
+    def test_non_router_checkpoint_rejected(self, tmp_path):
+        from repro.checkpoint import load_router
+
+        path = os.path.join(tmp_path, "other.npz")
+        save_checkpoint(path, {"w": jnp.ones((2,))}, {"kind": "lm"})
+        with pytest.raises(ValueError, match="router checkpoint"):
+            load_router(path)
+
+    def test_pool_identity_mismatch_rejected(self, tmp_path):
+        """Member columns are positional: restoring against a different
+        pool of the SAME size must fail loudly, not misroute silently."""
+        from repro.checkpoint import load_router, save_router
+
+        path = os.path.join(tmp_path, "router.npz")
+        save_router(path, self._router(), pool_names=["a", "b", "c"])
+        restored = load_router(path, expect_pool_names=["a", "b", "c"])
+        assert restored.n_members == 3
+        with pytest.raises(ValueError, match="pool"):
+            load_router(path, expect_pool_names=["c", "d", "e"])
+        # order matters too
+        with pytest.raises(ValueError, match="pool"):
+            load_router(path, expect_pool_names=["c", "b", "a"])
+
+
 class TestRouterBenchData:
     def test_deterministic(self):
         d1 = generate(50, seed=3, embed=False)

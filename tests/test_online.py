@@ -294,6 +294,41 @@ class TestMembership:
         explored = adapter.last_explored
         assert ((pol_choices[~explored]) != 2).all()
 
+    def test_established_member_ema_refresh_under_drift(self):
+        """ROADMAP open item: with refresh_established, a graduated
+        member's embedding row follows its drifted outcome centroid
+        instead of waiting for predictor gradients."""
+        eng = make_engine()
+        tracker = MembershipTracker(eng, refresh_established=True,
+                                    refresh_rate=0.2)
+        rng = np.random.default_rng(3)
+        # Member 0 is established (born graduated). Its true quality in
+        # the cluster nearest these embeddings has drifted to ~0.9.
+        emb = _emb(rng, 1)[0]
+        centroids = np.asarray(eng.router.centroids, np.float32)
+        ci = int(np.argmin(np.sum((centroids - emb) ** 2, axis=1)))
+        before = float(tracker.model_emb[0, ci])
+        for _ in range(40):
+            tracker.record_outcome(0, emb, 0.9)
+        after = float(tracker.model_emb[0, ci])
+        assert abs(after - 0.9) < abs(before - 0.9)   # moved toward truth
+        assert after == pytest.approx(0.9, abs=0.01)  # EMA converged
+        assert tracker.emb_dirty
+        # Other clusters' entries are untouched.
+        untouched = [c for c in range(centroids.shape[0]) if c != ci]
+        np.testing.assert_array_equal(
+            tracker.model_emb[0, untouched],
+            np.asarray(eng.router.model_emb)[0, untouched])
+
+    def test_established_refresh_off_by_default(self):
+        eng = make_engine()
+        tracker = MembershipTracker(eng)
+        rng = np.random.default_rng(4)
+        row = tracker.model_emb[0].copy()
+        for _ in range(10):
+            tracker.record_outcome(0, _emb(rng, 1)[0], 0.9)
+        np.testing.assert_array_equal(tracker.model_emb[0], row)
+
     def test_remove_member_remaps_everything(self):
         eng = make_engine()
         adapter = OnlineAdapter(eng, lambda r: 0.5, seed=0)
