@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, load_data, pool_splits, trained_router
+from benchmarks.common import emit, gate, load_data, pool_splits, trained_router
 from repro.cascade import CascadeConfig, CascadePolicy, cost_ladder
 from repro.core.metrics import frontier_dominance, pareto_frontier
 from repro.core.rewards import REWARDS, cascade_outcome
@@ -147,14 +147,19 @@ def main() -> None:
          "|".join(f"{r:.3f}" for r in rates)
          + f";monotone={monotone};nonzero={bool(rates.max() > 0)}")
 
-    if int(dominated.sum()) < MIN_DOMINATED:
+    if not gate("cascade/frontier_dominance",
+                int(dominated.sum()) >= MIN_DOMINATED,
+                f"dominates {int(dominated.sum())}/{len(dominated)} "
+                f"lambda points (need >= {MIN_DOMINATED})"):
         raise SystemExit(
             f"cascade frontier dominates only {int(dominated.sum())}/"
             f"{len(dominated)} single-shot lambda points "
             f"(need >= {MIN_DOMINATED})")
-    if rates.max() <= 0:
+    if not gate("cascade/escalation_nonzero", rates.max() > 0,
+                f"max rate {rates.max():.3f}"):
         raise SystemExit("cascade never escalated at any lambda point")
-    if not monotone:
+    if not gate("cascade/escalation_monotone", monotone,
+                "|".join(f"{r:.3f}" for r in rates)):
         raise SystemExit(
             "escalation rate is not monotone in lambda: "
             + "|".join(f"{r:.3f}" for r in rates))

@@ -4,13 +4,20 @@ Data generation + predictor training are cached under reports/cache so the
 individual tables can be re-run cheaply. Every benchmark prints
 ``name,us_per_call,derived`` CSV rows (us_per_call = router scoring latency
 per query; derived = the table's metric).
+
+Machine-readable summaries: ``benchmarks.run`` installs a
+:class:`BenchReport` per suite; :func:`emit` mirrors every CSV row into it
+and :func:`headline` / :func:`gate` record the suite's headline metric and
+pass/fail acceptance gates. The runner writes the result as
+``reports/bench/BENCH_<suite>.json``.
 """
 from __future__ import annotations
 
+import json
 import os
 import pickle
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -99,5 +106,89 @@ def eval_oracle(pool, te, reward: str) -> Dict:
     return evaluate_sweep(ch, pool.quality[te], pool.cost[te], LAMS)
 
 
+class BenchReport:
+    """Machine-readable summary of one benchmark suite run.
+
+    Collects the suite's emitted CSV rows, an optional explicit headline
+    metric (falls back to the first emitted row), and named pass/fail
+    gates. Serialized as ``BENCH_<suite>.json`` by ``benchmarks.run``.
+    """
+
+    def __init__(self, suite: str):
+        self.suite = suite
+        self.rows: List[Dict] = []
+        self._headline: Optional[Dict] = None
+        self.gates: List[Dict] = []
+        self.wall_s: float = 0.0
+        self.error: Optional[str] = None
+
+    def set_headline(self, metric: str, value: float, unit: str = "") -> None:
+        self._headline = {"metric": metric, "value": float(value),
+                          "unit": unit}
+
+    def add_gate(self, name: str, passed: bool, detail: str = "") -> None:
+        self.gates.append({"name": name, "passed": bool(passed),
+                           "detail": detail})
+
+    @property
+    def headline(self) -> Optional[Dict]:
+        if self._headline is not None:
+            return self._headline
+        if self.rows:
+            r = self.rows[0]
+            return {"metric": r["name"], "value": r["us_per_call"],
+                    "unit": "us_per_call"}
+        return None
+
+    def to_dict(self) -> Dict:
+        return {
+            "suite": self.suite,
+            "headline": self.headline,
+            "gates": self.gates,
+            "gates_passed": all(g["passed"] for g in self.gates),
+            "wall_s": round(self.wall_s, 3),
+            "rows": self.rows,
+            "error": self.error,
+        }
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+# Suite report installed by benchmarks.run around each suite's main().
+_ACTIVE_REPORT: Optional[BenchReport] = None
+
+
+def set_active_report(report: Optional[BenchReport]) -> None:
+    global _ACTIVE_REPORT
+    _ACTIVE_REPORT = report
+
+
+def active_report() -> Optional[BenchReport]:
+    return _ACTIVE_REPORT
+
+
+def headline(metric: str, value: float, unit: str = "") -> None:
+    """Declare the suite's headline metric (latest call wins)."""
+    if _ACTIVE_REPORT is not None:
+        _ACTIVE_REPORT.set_headline(metric, value, unit)
+
+
+def gate(name: str, passed: bool, detail: str = "") -> bool:
+    """Record a named pass/fail acceptance gate; returns ``passed``."""
+    if _ACTIVE_REPORT is not None:
+        _ACTIVE_REPORT.add_gate(name, passed, detail)
+    status = "PASS" if passed else "FAIL"
+    print(f"# gate {name}: {status}  {detail}")
+    return passed
+
+
 def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+    if _ACTIVE_REPORT is not None:
+        _ACTIVE_REPORT.rows.append({
+            "name": name, "us_per_call": round(float(us_per_call), 2),
+            "derived": str(derived)})

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, gate
 from repro.core.rewards import reward_exponential
 from repro.distributed import (
     Coordinator,
@@ -183,20 +183,25 @@ def main() -> None:
     emit("distributed/moe/decode_drops", 0.0,
          f"drops={drops};decode_calls={decode_calls}")
 
-    if delta < -PARITY:
+    if not gate("distributed/reward_parity", delta >= -PARITY,
+                f"back-half reward delta={delta:+.4f} (floor -{PARITY})"):
         raise SystemExit(
             f"multi-worker plane lost more than {PARITY} back-half reward "
             f"vs the single-worker adapter (delta={delta:+.4f})")
-    if len(plane["versions"]) != 1:
+    if not gate("distributed/version_convergence",
+                len(plane["versions"]) == 1,
+                f"versions={sorted(plane['versions'])}"):
         raise SystemExit(
             f"workers did not converge to one router version: "
             f"{plane['versions']}")
-    if decode_calls == 0:
-        raise SystemExit(
-            "decode-drop audit recorded zero MoE decode calls — the "
-            "no-drop gate would be vacuous (DECODE_DROP_LOG must be set "
-            "before the decode path is first traced)")
-    if drops != 0:
+    if not gate("distributed/moe_decode_no_drop",
+                decode_calls > 0 and drops == 0,
+                f"drops={drops} over {decode_calls} decode calls"):
+        if decode_calls == 0:
+            raise SystemExit(
+                "decode-drop audit recorded zero MoE decode calls — the "
+                "no-drop gate would be vacuous (DECODE_DROP_LOG must be set "
+                "before the decode path is first traced)")
         raise SystemExit(
             f"decode-path MoE dropped {drops} tokens "
             f"(over {decode_calls} decode calls)")

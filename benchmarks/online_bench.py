@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, gate
 from repro.core.rewards import reward_exponential
 from repro.launch.serve import build_routed_engine, pool_quality_columns
 from repro.online import (
@@ -143,7 +143,8 @@ def main() -> None:
          f";router_version={ad.engine.router.version}")
     gain = online["mean_reward_back"] - frozen["mean_reward_back"]
     emit("online/gain/back_half_reward", 0.0, f"delta={gain:+.4f}")
-    if gain <= 0:
+    if not gate("online/adaptation_beats_frozen", gain > 0,
+                f"back-half reward delta={gain:+.4f}"):
         raise SystemExit(
             "online adaptation failed to beat the frozen router "
             f"(delta={gain:+.4f})")

@@ -3,14 +3,21 @@
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table2     # one table
 
-Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py). Env:
-REPRO_BENCH_QUERIES (default 4000), REPRO_BENCH_EPOCHS (default 300; paper
-uses 1000), REPRO_BENCH_CACHE.
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py) and
+writes a machine-readable ``BENCH_<suite>.json`` per suite (headline
+metric, gate pass/fail, wall time, every emitted row) under
+``$REPRO_BENCH_OUT`` (default reports/bench). A suite that raises still
+gets its JSON (with the ``error`` field set) before the runner exits
+non-zero. Env: REPRO_BENCH_QUERIES (default 4000), REPRO_BENCH_EPOCHS
+(default 300; paper uses 1000), REPRO_BENCH_CACHE, REPRO_BENCH_OUT.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+from benchmarks.common import BenchReport, set_active_report
 
 from benchmarks import (
     cascade_bench,
@@ -41,15 +48,34 @@ SUITES = {
 }
 
 
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "reports/bench")
+
+
 def main() -> None:
     selected = sys.argv[1:] or list(SUITES)
     print("name,us_per_call,derived")
+    failures = []
     for name in selected:
         if name not in SUITES:
             raise SystemExit(f"unknown suite {name!r}; choose from {list(SUITES)}")
+        report = BenchReport(name)
+        set_active_report(report)
         t0 = time.time()
-        SUITES[name]()
-        print(f"# suite {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        try:
+            SUITES[name]()
+        except Exception as e:  # noqa: BLE001 — recorded, then re-raised
+            report.error = f"{type(e).__name__}: {e}"
+            failures.append(name)
+        finally:
+            report.wall_s = time.time() - t0
+            set_active_report(None)
+            report.save(os.path.join(OUT_DIR, f"BENCH_{name}.json"))
+        if report.error is None and any(
+                not g["passed"] for g in report.gates):
+            failures.append(name)
+        print(f"# suite {name} done in {report.wall_s:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures in: {sorted(set(failures))}")
 
 
 if __name__ == "__main__":

@@ -6,15 +6,26 @@ reduced CPU pool) and p50/p99 *routing* latency per score batch — the
 paper's "router adds microseconds, not milliseconds" serving claim, here
 measured under open-loop load instead of a single offline batch.
 
+Also runs the observability overhead gate: the same trace served with the
+trace recorder installed must keep its p50 per-dispatch wall latency
+within 5% of the tracing-off run (best-of-N reps each, so jit warm-up and
+scheduler noise don't decide the gate). Tracing is a handful of tuple
+appends per request — if this gate fails, an emission site grew a real
+cost.
+
 CPU-sized: 2 pool members, small trace. On TPU the scoring path drops into
 the fused Pallas router_xattn kernel with pool-side K~/V~ reuse.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 
-from benchmarks.common import emit
+import numpy as np
+
+from benchmarks.common import emit, gate, headline
 from repro.launch.serve import build_routed_engine
+from repro.obs import TraceRecorder
 from repro.serving import (
     MicroBatchScheduler,
     SchedulerConfig,
@@ -24,6 +35,71 @@ from repro.serving import (
 
 POOL = ["qwen3-0.6b", "granite-3-8b"]
 N_REQUESTS = 96
+OVERHEAD_REPS = 3          # best-of reps per tracing config
+OVERHEAD_BUDGET = 1.05     # tracing-on p50 must stay within 5%
+
+
+def _make_bench_trace(data, te, seed: int = 0):
+    return make_trace(
+        TraceConfig(kind="poisson", n_requests=N_REQUESTS, rate=1000.0,
+                    seed=seed, max_new=2, prompt_len_max=24, vocab=64),
+        texts=[data.texts[i] for i in te],
+        benchmarks=[data.benchmark[i] for i in te],
+    )
+
+
+def _dispatch_p50_us(engine, data, te, *, tracing: bool) -> float:
+    """p50 wall microseconds per scheduler dispatch over one full trace.
+
+    Drives the run_trace event loop by hand so only the dispatch() calls
+    (scoring + routing + generation bookkeeping — every traced code path)
+    land in the timed window, not trace construction or queue idling.
+    """
+    tracer = TraceRecorder(label="overhead").scoped(0) if tracing else None
+    sched = MicroBatchScheduler(
+        engine, SchedulerConfig(score_batch=32, max_batch=8), tracer=tracer)
+    pending = deque(sorted(_make_bench_trace(data, te),
+                           key=lambda r: r.arrival_s))
+    times = []
+    while pending or sched.queue.depth:
+        while pending and pending[0].arrival_s <= sched.clock.now:
+            sched.queue.offer(pending.popleft(), sched.clock.now)
+        if sched.should_dispatch(flush=not pending):
+            t0 = time.perf_counter()
+            sched.dispatch()
+            times.append(time.perf_counter() - t0)
+            continue
+        nxt = []
+        if pending:
+            nxt.append(pending[0].arrival_s)
+        if sched.queue.depth:
+            head = sched.queue.peek_all()[0]
+            nxt.append(head.admitted_s + sched.config.max_wait_s)
+        nxt_t = min(nxt)
+        if nxt_t <= sched.clock.now:
+            t0 = time.perf_counter()
+            sched.dispatch()
+            times.append(time.perf_counter() - t0)
+            continue
+        sched.clock.advance_to(nxt_t)
+    return float(np.percentile(times, 50)) * 1e6
+
+
+def overhead_gate(engine, data, te) -> None:
+    """Tracing-on p50 dispatch latency within OVERHEAD_BUDGET of off."""
+    _dispatch_p50_us(engine, data, te, tracing=True)   # jit/cache warm-up
+    p50_off = min(_dispatch_p50_us(engine, data, te, tracing=False)
+                  for _ in range(OVERHEAD_REPS))
+    p50_on = min(_dispatch_p50_us(engine, data, te, tracing=True)
+                 for _ in range(OVERHEAD_REPS))
+    ratio = p50_on / p50_off if p50_off > 0 else float("inf")
+    emit("serving/trace_overhead/p50_off", p50_off, f"us={p50_off:.1f}")
+    emit("serving/trace_overhead/p50_on", p50_on, f"us={p50_on:.1f}")
+    emit("serving/trace_overhead/ratio", p50_on, f"ratio={ratio:.4f}")
+    headline("trace_overhead_p50_ratio", ratio, "on/off")
+    gate("serving/trace_overhead_p50", ratio <= OVERHEAD_BUDGET,
+         f"p50 on {p50_on:.1f}us / off {p50_off:.1f}us = {ratio:.4f} "
+         f"(budget {OVERHEAD_BUDGET})")
 
 
 def main() -> None:
@@ -54,6 +130,8 @@ def main() -> None:
              f"p99_ms={summary['routing_p99_ms']:.2f}")
         emit(f"serving/{kind}/mean_generate_batch", us_routing,
              f"batch={summary['mean_generate_batch']:.1f}")
+
+    overhead_gate(engine, data, te)
 
 
 if __name__ == "__main__":

@@ -46,6 +46,10 @@ class CascadeCoordinator:
         self.policy = policy
         self.observed_quality = observed_quality
         self.governor = governor
+        # Observability hook (repro.obs): one "cascade_decision" instant
+        # per completed leg, carrying the policy's expected-marginal-reward
+        # inputs. Installed by the scheduler.
+        self.tracer = None
         self.stats: Dict[str, float] = {
             "legs": 0, "escalations": 0, "finalized": 0,
             "observed_legs": 0, "estimated_legs": 0,
@@ -123,6 +127,19 @@ class CascadeCoordinator:
             )
             if ungated.escalate:
                 self.stats["headroom_blocked"] += 1
+        if self.tracer is not None:
+            self.tracer.instant(
+                "cascade_decision", "cascade", now, key=r.trace_key,
+                args={"leg": len(r.tried),
+                      "escalate": bool(decision.escalate),
+                      "next_member": (int(decision.next_member)
+                                      if decision.escalate else None),
+                      "expected_gain": float(decision.expected_gain),
+                      "best_q": float(r.best_q),
+                      "best_q_std": float(r.best_q_std),
+                      "observed": bool(r.best_observed),
+                      "cum_cost": float(r.cum_cost),
+                      "lam": float(lam), "headroom": float(hr)})
         if not decision.escalate:
             self.stats["finalized"] += 1
             return None

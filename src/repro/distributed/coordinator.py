@@ -57,6 +57,10 @@ class Coordinator:
         self._updater: Optional[IncrementalUpdater] = None
         self._anchor_wid: Optional[int] = None
         self._last_outcome_snap: dict = {}
+        # Observability hook (repro.obs): the shared TraceRecorder (not a
+        # worker-scoped view) — sync events are stamped with the leader's
+        # wid at emission time. Installed by the plane.
+        self.tracer = None
         self.stats = {
             "syncs": 0, "merged": 0, "updates": 0, "update_steps": 0,
             "bursts": 0, "broadcasts": 0, "stale_rejected": 0,
@@ -162,7 +166,13 @@ class Coordinator:
         leader.swaps_accepted += 1
         self.stats["updates"] += 1
         self.stats["update_steps"] += res["steps"]
-        self.broadcast(new_router, exclude=leader)
+        accepted = self.broadcast(new_router, exclude=leader)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "sync_round", "plane", now, wid=leader.wid,
+                args={"version": new_router.version,
+                      "steps": int(res["steps"]), "burst": bool(burst),
+                      "broadcast_accepted": accepted})
         return new_router
 
     def broadcast(self, router, exclude=None) -> int:

@@ -50,6 +50,8 @@ class SharedBudgetLedger(BudgetGovernor):
         t = self._monotone(now)
         if t - self._last_ctrl < self.update_min_interval_s:
             self.throttled += 1
+            self.last_action = "throttled"
+            self.last_utilization = self.utilization(t)
             return self.lam
         self._last_ctrl = t
         return super().update(t)

@@ -39,7 +39,7 @@ class PlaneEvent:
 class ServingPlane:
     def __init__(self, workers: List, coordinator, *,
                  sync_every_s: Optional[float] = None,
-                 events: Sequence[PlaneEvent] = ()):
+                 events: Sequence[PlaneEvent] = (), tracer=None):
         self.workers = {w.wid: w for w in workers}
         self.coordinator = coordinator
         self.sync_every_s = (coordinator.config.sync_every_s
@@ -49,6 +49,16 @@ class ServingPlane:
         self.reassigned = 0
         self.ignored_events: List[PlaneEvent] = []
         self._stash: List = []   # orphans while no worker is alive
+        # Observability (repro.obs): the plane's tracer is the SHARED
+        # TraceRecorder — workers hold worker-scoped views of it, the
+        # coordinator stamps its events with the leader's wid, and
+        # scenario events land here. One recorder means a request that
+        # migrates between workers (crash reassignment) keeps one span
+        # tree across pids.
+        self.tracer = tracer
+        if tracer is not None and getattr(coordinator, "tracer", None) \
+                is None:
+            coordinator.tracer = tracer
 
     # -- request assignment --------------------------------------------------
 
@@ -76,6 +86,9 @@ class ServingPlane:
 
     def _apply_event(self, e: PlaneEvent) -> None:
         w = self.workers[e.wid]
+        if self.tracer is not None:
+            self.tracer.instant("plane_event", "plane", e.t, wid=e.wid,
+                                args={"kind": e.kind})
         if e.kind == "crash" and w.alive:
             orphans = w.crash(e.t)
             self.reassigned += len(orphans)

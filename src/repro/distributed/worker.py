@@ -104,6 +104,10 @@ class WorkerNode:
         self.crashes += 1
         orphans = list(self.queue.pop(self.queue.depth)) + list(self.arrivals)
         self.arrivals.clear()
+        tracer = getattr(self.scheduler, "tracer", None)
+        if tracer is not None:
+            tracer.instant("worker_crash", "plane", now,
+                           args={"orphans": len(orphans)})
         return orphans
 
     def rejoin(self, now: float, router=None,
@@ -118,3 +122,7 @@ class WorkerNode:
             self.adapter.reset_outcome_state(seed)
         if router is not None and router.version > self.engine.router.version:
             self.publish(router)
+        tracer = getattr(self.scheduler, "tracer", None)
+        if tracer is not None:
+            tracer.instant("worker_rejoin", "plane", now,
+                           args={"router_version": self.engine.router.version})

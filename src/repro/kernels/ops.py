@@ -3,6 +3,15 @@
 Handle padding to TPU tile granularity (128 lanes), interpret-mode fallback
 on CPU (this container), and un-padding of results. The rest of the codebase
 calls only these entry points.
+
+Profiling: :func:`set_kernel_profiler` installs a
+:class:`repro.obs.profiling.KernelProfiler` (or anything with a compatible
+``annotate(name, batch=...)`` context manager) around the serving-hot
+entry points — ``router_xattn_pool`` and ``pairwise_l2``. With a profiler
+installed each dispatch blocks until the result is ready (so the timing
+covers device work, not just dispatch) and lands in per-kernel latency
+histograms / per-batch trace spans; with none installed (the default) the
+call goes straight to the jit'd function.
 """
 from __future__ import annotations
 
@@ -15,6 +24,19 @@ from repro.kernels.pairwise_l2 import pairwise_l2_pallas
 from repro.kernels.router_xattn import router_xattn_pallas
 
 LANE = 128
+
+# Installed profiler (None = zero-overhead pass-through).
+_PROFILER = None
+
+
+def set_kernel_profiler(profiler) -> None:
+    """Install (or with ``None`` remove) the kernel dispatch profiler."""
+    global _PROFILER
+    _PROFILER = profiler
+
+
+def get_kernel_profiler():
+    return _PROFILER
 
 
 def _on_tpu() -> bool:
@@ -79,6 +101,15 @@ def router_xattn(
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _router_xattn_pool_jit(
+    q, wq, kt, vt, wo, bo, *, block_b: int = 256, interpret: bool = None
+):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _xattn_padded(q, wq, kt, vt, wo, bo,
+                         block_b=block_b, interpret=interpret)
+
+
 def router_xattn_pool(
     q, wq, kt, vt, wo, bo, *, block_b: int = 256, interpret: bool = None
 ):
@@ -88,17 +119,20 @@ def router_xattn_pool(
     are computed once per pool and reused across every score micro-batch,
     so the per-batch work is only the query-side projection + attention.
     """
-    if interpret is None:
-        interpret = not _on_tpu()
-    return _xattn_padded(q, wq, kt, vt, wo, bo,
-                         block_b=block_b, interpret=interpret)
+    if _PROFILER is None:
+        return _router_xattn_pool_jit(q, wq, kt, vt, wo, bo,
+                                      block_b=block_b, interpret=interpret)
+    with _PROFILER.annotate("router_xattn_pool", batch=int(q.shape[0])):
+        out = _router_xattn_pool_jit(q, wq, kt, vt, wo, bo,
+                                     block_b=block_b, interpret=interpret)
+        jax.block_until_ready(out)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
-def pairwise_l2(
+def _pairwise_l2_jit(
     x, c, *, block_n: int = 256, block_k: int = 256, interpret: bool = None
 ):
-    """Squared L2 distances x (N,d) vs c (K,d) -> (N,K) fp32."""
     if interpret is None:
         interpret = not _on_tpu()
     n, d = x.shape
@@ -113,3 +147,17 @@ def pairwise_l2(
         xp, cp, block_n=block_n, block_k=block_k, interpret=interpret
     )
     return out[:n, :k]
+
+
+def pairwise_l2(
+    x, c, *, block_n: int = 256, block_k: int = 256, interpret: bool = None
+):
+    """Squared L2 distances x (N,d) vs c (K,d) -> (N,K) fp32."""
+    if _PROFILER is None:
+        return _pairwise_l2_jit(x, c, block_n=block_n, block_k=block_k,
+                                interpret=interpret)
+    with _PROFILER.annotate("pairwise_l2", batch=int(x.shape[0])):
+        out = _pairwise_l2_jit(x, c, block_n=block_n, block_k=block_k,
+                               interpret=interpret)
+        jax.block_until_ready(out)
+    return out

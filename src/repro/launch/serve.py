@@ -142,6 +142,58 @@ def build_routed_engine(names, *, seed: int = 0, epochs: int = 120,
     return engine, data, te
 
 
+def _setup_obs(args):
+    """(recorder, registry, profiler) for --trace-out/--metrics-out.
+
+    All three default to None — the runtime's tracer branches then cost
+    nothing. ``--trace-profile`` additionally installs the kernel-dispatch
+    profiler globally (removed again by :func:`_save_obs`).
+    """
+    recorder = registry = profiler = None
+    if args.trace_out or args.trace_profile:
+        from repro.obs import TraceRecorder
+
+        recorder = TraceRecorder(
+            label=f"serve-{args.trace}-seed{args.seed}")
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+
+        registry = MetricsRegistry()
+    if args.trace_profile:
+        from repro.kernels import ops as kops
+        from repro.obs import KernelProfiler
+
+        profiler = KernelProfiler(tracer=recorder)
+        kops.set_kernel_profiler(profiler)
+    return recorder, registry, profiler
+
+
+def _save_obs(args, recorder, registry, profiler):
+    """Write the observability artifacts and uninstall the profiler."""
+    if profiler is not None:
+        from repro.kernels import ops as kops
+
+        kops.set_kernel_profiler(None)
+        print(profiler.report())
+        if registry is not None:
+            profiler.register_metrics(registry)
+    if recorder is not None and args.trace_out:
+        recorder.save(args.trace_out, include_wall=args.trace_profile)
+        print(f"trace written to {args.trace_out} "
+              f"({recorder.n_events} events)")
+    if registry is not None:
+        if args.metrics_out.endswith((".prom", ".txt")):
+            registry.save_prometheus(args.metrics_out)
+        else:
+            # Deterministic snapshot unless the operator opted wall-clock
+            # data in — replays of a seeded run then produce identical
+            # bytes, same contract as the trace.
+            registry.save(args.metrics_out,
+                          deterministic=not args.trace_profile)
+        print(f"metrics snapshot written to {args.metrics_out} "
+              f"({len(registry)} series)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--pool", default="qwen3-0.6b,granite-moe-1b-a400m,granite-3-8b")
@@ -222,6 +274,19 @@ def main(argv=None):
                     help="rejoin the crashed worker at this virtual time")
     ap.add_argument("--crash-worker", type=int, default=1,
                     help="worker id for the crash/rejoin scenario")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run's "
+                         "per-request spans (deterministic: bit-identical "
+                         "across replays of the same seed)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot at end of run "
+                         "(.prom/.txt -> Prometheus text exposition, "
+                         "else canonical JSON)")
+    ap.add_argument("--trace-profile", action="store_true",
+                    help="profile kernel dispatches (wall clock) and "
+                         "include the wall-clock spans/metrics in the "
+                         "artifacts — the outputs are then NOT "
+                         "replay-stable")
     args = ap.parse_args(argv)
     if (args.crash_at is not None and args.rejoin_at is not None
             and args.rejoin_at <= args.crash_at):
@@ -296,9 +361,11 @@ def main(argv=None):
             return fb, fb, stage
         return truth, None, None
 
+    obs = _setup_obs(args)
     if args.workers > 1:
         return _run_plane(args, engine, data, trace, make_feedback,
-                          make_cascade)
+                          make_cascade, obs)
+    recorder, registry, profiler = obs
 
     governor = None
     if args.budget > 0:
@@ -346,7 +413,17 @@ def main(argv=None):
         governor=governor,
         service_time=None if args.wall_time else default_service_model(),
         adapter=adapter, cascade=cascade,
+        tracer=recorder.scoped(0) if recorder is not None else None,
     )
+    if registry is not None:
+        from repro.obs import (
+            register_governor_metrics, register_scheduler_metrics,
+        )
+
+        register_scheduler_metrics(registry, sched)
+        if governor is not None:
+            register_governor_metrics(registry, governor,
+                                      lambda: sched.clock.now)
     summary = sched.run_trace(trace)
 
     print(f"trace={args.trace} requests={args.requests} seed={args.seed}")
@@ -361,10 +438,12 @@ def main(argv=None):
               f"window  spend ${g['total_spend']:.6f}  "
               f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
               f"tightened x{int(g['tightened'])} relaxed x{int(g['relaxed'])}")
+    _save_obs(args, recorder, registry, profiler)
     return summary
 
 
-def _run_plane(args, engine, data, trace, make_feedback, make_cascade):
+def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
+               obs=(None, None, None)):
     """Multi-worker path: build N workers + coordinator, run the plane."""
     from repro.distributed import (
         Coordinator, PlaneEvent, ServingPlane, SharedBudgetLedger,
@@ -372,6 +451,7 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade):
     )
     from repro.serving.scheduler import SimClock
 
+    recorder, registry, profiler = obs
     governor = None
     if args.budget > 0:
         governor = SharedBudgetLedger(args.budget, args.budget_window,
@@ -429,6 +509,7 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade):
             governor=governor, clock=SimClock(),
             service_time=None if args.wall_time else default_service_model(),
             adapter=adapter, cascade=make_cascade(governor),
+            tracer=recorder.scoped(wid) if recorder is not None else None,
         )
         workers.append(WorkerNode(wid, weng, sched, adapter))
 
@@ -442,7 +523,11 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade):
         if args.rejoin_at is not None:
             events.append(
                 PlaneEvent(args.rejoin_at, "rejoin", args.crash_worker))
-    plane = ServingPlane(workers, coord, events=events)
+    plane = ServingPlane(workers, coord, events=events, tracer=recorder)
+    if registry is not None:
+        from repro.obs import register_plane_metrics
+
+        register_plane_metrics(registry, plane)
     summary = plane.run_trace(trace)
 
     print(f"trace={args.trace} requests={args.requests} seed={args.seed} "
@@ -462,6 +547,7 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade):
               f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
               f"tightened x{int(g['tightened'])} relaxed x{int(g['relaxed'])} "
               f"throttled x{governor.throttled}")
+    _save_obs(args, recorder, registry, profiler)
     return summary
 
 

@@ -1,0 +1,57 @@
+"""Unified observability plane: tracing, metrics, kernel profiling.
+
+Three pillars over the serving fleet:
+
+  * :mod:`repro.obs.trace` — deterministic per-request trace spans over
+    the runtime's virtual clocks, exported as Chrome-trace/Perfetto JSON;
+  * :mod:`repro.obs.metrics` — a counter/gauge/histogram registry with
+    Prometheus-text and canonical-JSON exporters;
+  * :mod:`repro.obs.profiling` — wall-clock (+ optional jax profiler)
+    timing hooks around the Pallas kernel entry points.
+
+``repro.obs.wiring`` registers the standard serving metric series;
+``launch/serve.py --trace-out/--metrics-out`` wires everything into the
+serving driver, and ``tools/trace_export.py`` / ``tools/obs_smoke.py``
+consume the artifacts.
+"""
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    HistogramMetric,
+    MetricsRegistry,
+    MultiGauge,
+)
+from repro.obs.profiling import KernelProfiler
+from repro.obs.trace import (
+    WALL_CATS,
+    ScopedTrace,
+    TraceRecorder,
+    request_trees,
+    trace_summary,
+    validate_chrome_trace,
+    validate_span_tree,
+)
+from repro.obs.wiring import (
+    register_governor_metrics,
+    register_plane_metrics,
+    register_scheduler_metrics,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "HistogramMetric",
+    "KernelProfiler",
+    "MetricsRegistry",
+    "MultiGauge",
+    "ScopedTrace",
+    "TraceRecorder",
+    "WALL_CATS",
+    "register_governor_metrics",
+    "register_plane_metrics",
+    "register_scheduler_metrics",
+    "request_trees",
+    "trace_summary",
+    "validate_chrome_trace",
+    "validate_span_tree",
+]

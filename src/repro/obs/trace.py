@@ -1,0 +1,294 @@
+"""Structured per-request tracing over the serving runtime's virtual clocks.
+
+One :class:`TraceRecorder` collects *events* — instants and completed spans
+— from every subsystem a request flows through: admission, queue wait,
+score batch, per-member generate micro-batches, each cascade leg, the
+escalation decision (with the policy's expected-marginal-reward inputs),
+budget-governor verdicts, online-adapter observe/update, and finalize.
+
+Design constraints, in order:
+
+  * **Deterministic.** Event timestamps come from the runtime's virtual
+    clocks, request identity is a recorder-assigned dense *trace key*
+    (admission order, never the process-global ``rid`` counter, which
+    shifts between in-process replays), and the export serializes with
+    sorted keys — so a seeded run's trace is bit-identical across
+    replays. The only wall-clock events are kernel-profiling spans, which
+    live in the ``WALL_CATS`` categories and are excluded from the
+    deterministic export.
+  * **Cheap when off.** Every integration point is an ``if tracer is not
+    None`` branch; with no recorder installed the runtime does zero extra
+    work. When on, recording one event is a single tuple append.
+  * **Fleet-aware.** Events carry a worker id; in the multi-worker plane
+    all workers share one recorder through :meth:`TraceRecorder.scoped`
+    views (the plane's event loop is single-process and deterministic),
+    and independently-built recorders can still :meth:`merge` at rollup.
+
+The export target is the Chrome trace-event JSON format (``ph: "X"``
+complete spans + ``ph: "i"`` instants), which Perfetto / ``chrome://tracing``
+load directly: ``pid`` is the worker id, ``tid`` is the per-request trace
+key (0 = scheduler/runtime scope). ``tools/trace_export.py`` filters,
+validates, and summarizes saved traces.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Categories whose events carry wall-clock measurements; excluded from the
+# deterministic export (and therefore from replay bit-identity checks).
+WALL_CATS = frozenset({"kernel"})
+
+# Event tuple layout (kept a tuple, not a dict/dataclass: recording must be
+# a single append on the scheduler hot path).
+#   (name, cat, ph, ts_s, dur_s, wid, key, args)
+_NAME, _CAT, _PH, _TS, _DUR, _WID, _KEY, _ARGS = range(8)
+
+
+class TraceRecorder:
+    """Append-only event log with deterministic per-request keys."""
+
+    def __init__(self, label: str = "run"):
+        self.label = label
+        self.events: List[tuple] = []
+        self._next_key = 0
+
+    # -- request identity ----------------------------------------------------
+
+    def next_key(self) -> int:
+        k = self._next_key
+        self._next_key += 1
+        return k
+
+    def ensure_key(self, req) -> int:
+        """Assign ``req.trace_key`` on first sight (admission order)."""
+        if req.trace_key < 0:
+            req.trace_key = self.next_key()
+        return req.trace_key
+
+    # -- recording -----------------------------------------------------------
+
+    def instant(self, name: str, cat: str, t: float, *, wid: int = 0,
+                key: Optional[int] = None, args: Optional[dict] = None):
+        self.events.append((name, cat, "i", t, 0.0, wid, key, args))
+
+    def span(self, name: str, cat: str, t0: float, t1: float, *,
+             wid: int = 0, key: Optional[int] = None,
+             args: Optional[dict] = None):
+        self.events.append((name, cat, "X", t0, max(t1 - t0, 0.0), wid, key,
+                            args))
+
+    def scoped(self, wid: int) -> "ScopedTrace":
+        """A view stamping ``wid`` on every event (shared event log)."""
+        return ScopedTrace(self, wid)
+
+    # -- rollup --------------------------------------------------------------
+
+    def merge(self, other: "TraceRecorder") -> None:
+        """Fold an independently-built recorder in (request keys re-based
+        so two recorders that both started at key 0 cannot collide)."""
+        base = self._next_key
+        for e in other.events:
+            key = e[_KEY]
+            self.events.append(e if key is None else
+                               e[:_KEY] + (key + base,) + e[_KEY + 1:])
+        self._next_key = base + other._next_key
+
+    # -- export --------------------------------------------------------------
+
+    def chrome_trace(self, include_wall: bool = False) -> Dict:
+        """Chrome trace-event JSON document (Perfetto-loadable).
+
+        ``include_wall=False`` (the default) drops wall-clock categories so
+        the document is a pure function of the seeded virtual-clock run.
+        Timestamps are microseconds (virtual seconds * 1e6).
+        """
+        events = []
+        wids = set()
+        order = sorted(range(len(self.events)),
+                       key=lambda i: (self.events[i][_TS],
+                                      self.events[i][_WID], i))
+        for i in order:
+            name, cat, ph, ts, dur, wid, key, args = self.events[i]
+            if not include_wall and cat in WALL_CATS:
+                continue
+            wids.add(wid)
+            ev = {
+                "name": name, "cat": cat, "ph": ph,
+                "ts": ts * 1e6, "pid": wid,
+                "tid": 0 if key is None else key + 1,
+            }
+            if ph == "X":
+                ev["dur"] = dur * 1e6
+            if ph == "i":
+                ev["s"] = "t"           # instant scope: thread
+            if args:
+                ev["args"] = args
+            events.append(ev)
+        meta = [{"name": "process_name", "ph": "M", "pid": wid, "tid": 0,
+                 "args": {"name": f"worker {wid}"}}
+                for wid in sorted(wids)]
+        return {
+            "traceEvents": meta + events,
+            "displayTimeUnit": "ms",
+            "otherData": {"label": self.label,
+                          "deterministic": not include_wall},
+        }
+
+    def to_json(self, include_wall: bool = False) -> str:
+        """Canonical serialization — byte-comparable across replays."""
+        return json.dumps(self.chrome_trace(include_wall=include_wall),
+                          sort_keys=True, separators=(",", ":"))
+
+    def save(self, path: str, include_wall: bool = False) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(include_wall=include_wall))
+
+    @property
+    def n_events(self) -> int:
+        return len(self.events)
+
+
+class ScopedTrace:
+    """Worker-scoped view of a shared :class:`TraceRecorder`."""
+
+    __slots__ = ("recorder", "wid")
+
+    def __init__(self, recorder: TraceRecorder, wid: int):
+        self.recorder = recorder
+        self.wid = int(wid)
+
+    def ensure_key(self, req) -> int:
+        return self.recorder.ensure_key(req)
+
+    def instant(self, name, cat, t, *, key=None, args=None):
+        self.recorder.events.append((name, cat, "i", t, 0.0, self.wid, key,
+                                     args))
+
+    def span(self, name, cat, t0, t1, *, key=None, args=None):
+        self.recorder.events.append((name, cat, "X", t0,
+                                     max(t1 - t0, 0.0), self.wid, key, args))
+
+
+# -- validation ---------------------------------------------------------------
+
+_REQUIRED = ("name", "cat", "ph", "ts", "pid", "tid")
+
+
+def validate_chrome_trace(doc) -> List[str]:
+    """Schema problems of a Chrome trace-event document ([] = valid)."""
+    problems: List[str] = []
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        return ["document must be a dict with a 'traceEvents' list"]
+    for i, ev in enumerate(doc["traceEvents"]):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        if ev.get("ph") == "M":
+            continue
+        for k in _REQUIRED:
+            if k not in ev:
+                problems.append(f"event {i} ({ev.get('name')}): missing {k!r}")
+        if ev.get("ph") not in ("X", "i"):
+            problems.append(f"event {i}: unknown ph {ev.get('ph')!r}")
+        if ev.get("ph") == "X" and not (
+                isinstance(ev.get("dur"), (int, float)) and ev["dur"] >= 0):
+            problems.append(f"event {i} ({ev.get('name')}): X without dur>=0")
+        if not isinstance(ev.get("ts"), (int, float)):
+            problems.append(f"event {i}: non-numeric ts")
+    return problems
+
+
+def request_trees(doc) -> Dict[int, Dict]:
+    """Group a trace's request-scope events into per-request trees.
+
+    Returns ``{tid: {"root": event|None, "events": [...], "legs": [...],
+    "admits": [...]}}`` over every tid > 0 (request scope), across all
+    workers — a request that migrated between workers (crash reassignment,
+    cascade re-admission in the plane) contributes events from several
+    pids to one tree.
+    """
+    trees: Dict[int, Dict] = {}
+    for ev in doc.get("traceEvents", ()):
+        if ev.get("ph") == "M" or ev.get("tid", 0) == 0:
+            continue
+        t = trees.setdefault(ev["tid"], {"root": None, "events": [],
+                                         "legs": [], "admits": []})
+        t["events"].append(ev)
+        if ev["name"] == "request" and ev["ph"] == "X":
+            t["root"] = ev
+        elif ev["name"] == "leg" and ev["ph"] == "X":
+            t["legs"].append(ev)
+        elif ev["name"] in ("admit", "readmit"):
+            t["admits"].append(ev)
+    for t in trees.values():
+        t["legs"].sort(key=lambda e: e["ts"])
+    return trees
+
+
+def validate_span_tree(doc, eps_us: float = 0.5) -> List[str]:
+    """Well-formedness of the per-request span trees ([] = well-formed).
+
+    Every finalized request (a ``request`` root span) must cover
+    admission -> legs -> finalize: at least one admit event, all events
+    inside the root interval, completed roots with >= 1 leg span, legs
+    time-ordered and non-overlapping, and per-leg queue_wait spans.
+    """
+    problems: List[str] = []
+    for tid, t in sorted(request_trees(doc).items()):
+        root = t["root"]
+        if root is None:
+            # Un-finalized request scope: only backpressure rejections are
+            # allowed to stay rootless (they never entered the runtime).
+            names = {e["name"] for e in t["events"]}
+            if names - {"reject"}:
+                problems.append(f"request {tid}: events {sorted(names)} "
+                                "without a 'request' root span")
+            continue
+        lo, hi = root["ts"] - eps_us, root["ts"] + root["dur"] + eps_us
+        if not t["admits"]:
+            problems.append(f"request {tid}: no admission event")
+        for ev in t["events"]:
+            end = ev["ts"] + ev.get("dur", 0.0)
+            if ev["ts"] < lo or end > hi:
+                problems.append(
+                    f"request {tid}: {ev['name']} [{ev['ts']:.1f},"
+                    f"{end:.1f}]us outside root [{lo:.1f},{hi:.1f}]us")
+        status = (root.get("args") or {}).get("status")
+        if status == "done" and not t["legs"]:
+            problems.append(f"request {tid}: done without a leg span")
+        prev_end = None
+        for leg in t["legs"]:
+            if prev_end is not None and leg["ts"] < prev_end - eps_us:
+                problems.append(f"request {tid}: overlapping leg spans")
+            prev_end = leg["ts"] + leg["dur"]
+        n_waits = sum(e["name"] == "queue_wait" for e in t["events"])
+        if t["legs"] and n_waits < len(t["legs"]):
+            problems.append(f"request {tid}: {len(t['legs'])} legs but only "
+                            f"{n_waits} queue_wait spans")
+    return problems
+
+
+def trace_summary(doc) -> Dict:
+    """Aggregate counts for quick inspection / tooling."""
+    by_name: Dict[str, int] = {}
+    by_cat: Dict[str, int] = {}
+    wids = set()
+    n = 0
+    for ev in doc.get("traceEvents", ()):
+        if ev.get("ph") == "M":
+            continue
+        n += 1
+        by_name[ev["name"]] = by_name.get(ev["name"], 0) + 1
+        by_cat[ev["cat"]] = by_cat.get(ev["cat"], 0) + 1
+        wids.add(ev["pid"])
+    trees = request_trees(doc)
+    return {
+        "events": n,
+        "by_name": dict(sorted(by_name.items())),
+        "by_cat": dict(sorted(by_cat.items())),
+        "workers": sorted(wids),
+        "requests": len(trees),
+        "finalized": sum(t["root"] is not None for t in trees.values()),
+    }

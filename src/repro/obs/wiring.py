@@ -1,0 +1,179 @@
+"""Standard metric registrations for the serving subsystems.
+
+Every function here registers *callback* metrics: the registry holds
+closures over the live objects and reads them at export time, so the
+serving hot path pays nothing for being observable. The series names are
+the stable external contract (``launch/serve.py --metrics-out``, the CI
+smoke artifacts, dashboards) — keep them append-only.
+
+Solo runs call :func:`register_scheduler_metrics` (+
+:func:`register_governor_metrics` when a governor exists); the
+multi-worker plane calls :func:`register_plane_metrics`, which labels
+per-worker series with ``worker=<wid>`` and registers the shared ledger
+and coordinator exactly once.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.obs.metrics import MetricsRegistry
+
+
+def register_governor_metrics(reg: MetricsRegistry, governor, clock_fn,
+                              labels=()) -> None:
+    """Budget governor / shared ledger series. ``clock_fn() -> now`` supplies
+    the virtual time the rolling window is evaluated at."""
+    reg.gauge("budget_lam", "effective willingness-to-pay", labels=labels,
+              fn=lambda: governor.lam)
+    reg.gauge("budget_headroom", "budget slack in [0,1]", labels=labels,
+              fn=lambda: governor.headroom(clock_fn()))
+    reg.gauge("budget_utilization", "window spend / budget", labels=labels,
+              fn=lambda: governor.utilization(clock_fn()))
+    reg.counter("budget_total_spend", "cumulative $ spent", labels=labels,
+                fn=lambda: governor.total_spend)
+    reg.counter("budget_tightened_total", "lambda tighten steps",
+                labels=labels, fn=lambda: governor.tightened)
+    reg.counter("budget_relaxed_total", "lambda relax steps", labels=labels,
+                fn=lambda: governor.relaxed)
+    throttled = getattr(governor, "throttled", None)
+    if throttled is not None:
+        reg.counter("budget_throttled_total",
+                    "ledger updates skipped by the throttle", labels=labels,
+                    fn=lambda: governor.throttled)
+
+
+def register_scheduler_metrics(reg: MetricsRegistry, sched,
+                               labels=()) -> None:
+    """Queue / telemetry / engine / adapter / cascade series of one
+    scheduler (one worker). The governor is NOT registered here — it may
+    be shared across workers (see :func:`register_plane_metrics`)."""
+    queue, tel, engine = sched.queue, sched.telemetry, sched.engine
+    clock_fn = lambda: sched.clock.now
+
+    reg.gauge("queue_depth", "requests waiting for dispatch", labels=labels,
+              fn=lambda: queue.depth)
+    reg.counter("queue_admitted_total", "admissions", labels=labels,
+                fn=lambda: queue.admitted)
+    reg.counter("queue_rejected_total", "backpressure rejections",
+                labels=labels, fn=lambda: queue.rejected)
+    reg.counter("queue_expired_total", "deadline expiries", labels=labels,
+                fn=lambda: queue.expired)
+    reg.counter("queue_readmitted_total", "cascade re-admissions",
+                labels=labels, fn=lambda: queue.readmitted)
+
+    reg.counter("requests_completed_total", "finalized requests",
+                labels=labels, fn=lambda: tel.completed)
+    reg.counter("score_batches_total", "router scoring rounds", labels=labels,
+                fn=lambda: tel.score_batches)
+    reg.counter("generate_calls_total", "generate micro-batches",
+                labels=labels, fn=lambda: tel.generate_calls)
+    reg.counter("spend_total", "cumulative $ across members", labels=labels,
+                fn=lambda: tel.total_spend)
+    reg.multi_gauge("member_served", "requests served per pool member",
+                    "member", labels=labels,
+                    fn=lambda: dict(zip(tel.member_names,
+                                        (int(c) for c in tel.member_counts))))
+    reg.histogram("queue_wait_s", "admission -> service (virtual s)",
+                  labels=labels, fn=lambda: tel.queue_wait)
+    reg.histogram("e2e_latency_s", "arrival -> finish (virtual s)",
+                  labels=labels, fn=lambda: tel.e2e_latency)
+    # Routing latency is measured wall time -> excluded from the
+    # deterministic snapshot.
+    reg.histogram("routing_latency_s", "score-batch wall latency",
+                  labels=labels, wall=True, fn=lambda: tel.routing_latency)
+
+    # Stub engines in tests/smokes may have no versioned router.
+    if getattr(engine, "router", None) is not None:
+        reg.gauge("router_version", "live router version on this engine",
+                  labels=labels,
+                  fn=lambda: getattr(engine.router, "version", 0))
+
+    adapter = sched.adapter
+    if adapter is not None:
+        reg.counter("online_outcomes_total", "outcomes folded into replay",
+                    labels=labels, fn=lambda: adapter.stats["outcomes"])
+        reg.counter("online_explored_total", "exploration overrides",
+                    labels=labels, fn=lambda: adapter.stats["explored"])
+        reg.counter("online_router_swaps_total", "router publishes",
+                    labels=labels, fn=lambda: adapter.stats["router_swaps"])
+        reg.gauge("exploration_epsilon",
+                  "effective epsilon (headroom-annealed)", labels=labels,
+                  fn=lambda: adapter.policy.config.epsilon
+                  * min(max(adapter.headroom(clock_fn()), 0.0), 1.0))
+        if adapter.drift is not None:
+            drift = adapter.drift
+            reg.counter("drift_alarms_total", "drift alarms raised",
+                        labels=labels, fn=lambda: drift.alarms)
+            reg.gauge("drift_abnormal_streak",
+                      "consecutive abnormal windows (alarm at patience)",
+                      labels=labels, fn=lambda: drift.abnormal_streak)
+            reg.gauge("drift_shift_z", "last window mean-shift z-score",
+                      labels=labels,
+                      fn=lambda: drift.last_stats.get("shift_z", math.nan))
+
+    cascade = sched.cascade
+    if cascade is not None:
+        reg.counter("cascade_legs_total", "completed cascade legs",
+                    labels=labels, fn=lambda: cascade.stats["legs"])
+        reg.counter("cascade_escalations_total", "escalation decisions",
+                    labels=labels, fn=lambda: cascade.stats["escalations"])
+        reg.counter("cascade_headroom_blocked_total",
+                    "escalations suppressed by the budget gate",
+                    labels=labels,
+                    fn=lambda: cascade.stats["headroom_blocked"])
+        reg.gauge("cascade_escalation_rate", "escalations per finalized",
+                  labels=labels, fn=lambda: cascade.escalation_rate)
+        # Escalation rate by rung: escalations out of leg n / legs served
+        # at leg n (the tail rung never escalates by construction).
+        def _by_leg():
+            esc = cascade.escalations_by_leg
+            return {
+                str(i + 1): ((esc[i] if i < len(esc) else 0) / served
+                             if served else 0.0)
+                for i, served in enumerate(sched.telemetry.leg_served)
+            }
+        reg.multi_gauge(
+            "cascade_escalation_rate_by_leg",
+            "P(escalate | completed leg n)", "leg", labels=labels,
+            fn=_by_leg)
+
+
+def register_plane_metrics(reg: MetricsRegistry, plane) -> None:
+    """Fleet-level series: per-worker scheduler metrics (labelled
+    ``worker=<wid>``), worker liveness, the coordinator's sync counters,
+    and the shared budget ledger (registered once)."""
+    workers = sorted(plane.workers.values(), key=lambda w: w.wid)
+    ledger = None
+    for w in workers:
+        labels = (("worker", w.wid),)
+        register_scheduler_metrics(reg, w.scheduler, labels=labels)
+        reg.gauge("worker_alive", "1 = serving, 0 = crashed", labels=labels,
+                  fn=lambda w=w: float(w.alive))
+        reg.counter("worker_crashes_total", "crash events", labels=labels,
+                    fn=lambda w=w: w.crashes)
+        reg.counter("router_swaps_accepted_total", "broadcasts accepted",
+                    labels=labels, fn=lambda w=w: w.swaps_accepted)
+        reg.counter("router_swaps_rejected_total", "stale publishes rejected",
+                    labels=labels, fn=lambda w=w: w.swaps_rejected)
+        if w.scheduler.governor is not None:
+            ledger = w.scheduler.governor
+
+    if ledger is not None:
+        # Shared ledger: evaluate the rolling window at the fleet's newest
+        # virtual time (workers advance independently).
+        clock_fn = lambda: max(w.clock.now for w in plane.workers.values())
+        register_governor_metrics(reg, ledger, clock_fn)
+
+    coord = plane.coordinator
+    reg.counter("plane_reassigned_total", "orphaned requests reassigned",
+                fn=lambda: plane.reassigned)
+    reg.counter("sync_rounds_total", "coordinator sync rounds",
+                fn=lambda: coord.stats["syncs"])
+    reg.counter("sync_updates_total", "leader updates published",
+                fn=lambda: coord.stats["updates"])
+    reg.counter("sync_broadcasts_total", "router broadcasts",
+                fn=lambda: coord.stats["broadcasts"])
+    reg.counter("sync_bursts_total", "escalated drift bursts",
+                fn=lambda: coord.stats["bursts"])
+    reg.gauge("plane_alive_workers", "workers currently serving",
+              fn=lambda: sum(w.alive for w in plane.workers.values()))

@@ -59,6 +59,15 @@ class DriftDetector:
         self.windows_seen = 0
         self.last_stats: Dict[str, float] = {}
 
+    @property
+    def abnormal_streak(self) -> int:
+        """Consecutive abnormal windows so far (alarm fires at patience).
+
+        Public alarm-state readout for the metrics registry: 0 = nominal,
+        >= 1 = an excursion is building toward an alarm.
+        """
+        return self._abnormal_streak
+
     # -- reference -----------------------------------------------------------
 
     def _dispersion(self, emb: np.ndarray) -> float:

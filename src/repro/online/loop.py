@@ -83,6 +83,9 @@ class OnlineAdapter:
         self.defer_updates = defer_updates
         self.pending_burst = False
         self._since_update = 0
+        # Observability hook (repro.obs): observe/drift/update events.
+        # Installed by the scheduler; None = no tracing overhead.
+        self.tracer = None
         self.last_explored = np.zeros(0, bool)   # per-request, last batch
         self.stats: Dict[str, float] = {
             "outcomes": 0, "explored": 0, "updates": 0, "update_steps": 0,
@@ -121,6 +124,7 @@ class OnlineAdapter:
         are staged until :meth:`deliver_feedback` resolves them.
         """
         ready: List[Tuple[object, float]] = []
+        n_staged = 0
         for r in served:
             if getattr(r, "q_emb", None) is None or r.member < 0:
                 continue
@@ -128,8 +132,14 @@ class OnlineAdapter:
             if s_obs is None:
                 self.stage.stage(r, now)
                 self.stats["staged"] += 1
+                n_staged += 1
             else:
                 ready.append((r, float(s_obs)))
+        if self.tracer is not None and served:
+            self.tracer.instant(
+                "adapter_observe", "online", now,
+                args={"served": len(served), "immediate": len(ready),
+                      "staged": n_staged})
         self._commit(ready, now)
         self.tick(now)
 
@@ -166,22 +176,29 @@ class OnlineAdapter:
         if self.drift is not None and embs:
             if self.drift.observe(np.stack(embs), now):
                 self.stats["drift_alarms"] += 1
+                if self.tracer is not None:
+                    stats = self.drift.last_stats
+                    self.tracer.instant(
+                        "drift_alarm", "online", now,
+                        args={"shift_z": stats.get("shift_z"),
+                              "dispersion_z": stats.get("dispersion_z"),
+                              "deferred": self.defer_updates})
                 if self.defer_updates:
                     self.pending_burst = True
                 else:
                     self.stats["bursts"] += 1
-                    self._update(self.config.burst_steps)
+                    self._update(self.config.burst_steps, now)
                 # Recovery: re-anchor the detector on the post-shift regime
                 # so it arms for the *next* excursion instead of alarming
                 # on every subsequent window.
                 self.drift.refit()
         if (self._since_update >= self.config.update_every
                 and not self.defer_updates):
-            self._update(self.config.steps_per_update)
+            self._update(self.config.steps_per_update, now)
 
     # -- incremental updates -------------------------------------------------
 
-    def _update(self, n_steps: int) -> None:
+    def _update(self, n_steps: int, now: float = 0.0) -> None:
         self._since_update = 0
         if len(self.replay) < self.config.min_buffer:
             return
@@ -196,6 +213,13 @@ class OnlineAdapter:
         self.stats["router_swaps"] += 1
         self.stats["last_quality_loss"] = res["quality_loss"]
         self.stats["last_cost_loss"] = res["cost_loss"]
+        if self.tracer is not None:
+            # The engine's on_swap hook already emitted "router_swap"; this
+            # carries the update's provenance alongside it.
+            self.tracer.instant(
+                "router_update", "online", now,
+                args={"steps": int(res["steps"]),
+                      "version": self.engine.router.version})
 
     # -- crash recovery (multi-worker plane) ---------------------------------
 

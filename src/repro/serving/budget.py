@@ -68,6 +68,10 @@ class BudgetGovernor:
         self.total_spend = 0.0
         self.tightened = 0   # adjustment counters (telemetry)
         self.relaxed = 0
+        # Last controller verdict (observability: the scheduler's trace
+        # emits one "governor" instant per update).
+        self.last_action = "hold"
+        self.last_utilization = 0.0
 
     # -- spend accounting ---------------------------------------------------
 
@@ -106,13 +110,18 @@ class BudgetGovernor:
     def update(self, now: float) -> float:
         """One controller step; call once per scheduler dispatch."""
         u = self.utilization(now)
+        self.last_utilization = u
         if u > self.high_water:
             step = (self.high_water / u) ** self.gain
             self._scale *= max(step, self.min_step)
             self.tightened += 1
+            self.last_action = "tighten"
         elif u < self.low_water and self._scale < 1.0:
             self._scale = min(self._scale / self.decay, 1.0)
             self.relaxed += 1
+            self.last_action = "relax"
+        else:
+            self.last_action = "hold"
         return self.lam
 
     def summary(self, now: float) -> Dict[str, float]:

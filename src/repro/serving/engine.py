@@ -100,6 +100,10 @@ class RoutedEngine:
     pool: List[PoolMember]
     lam: float = 1.0
     use_pallas: bool = False
+    # Observability hook: called with the new router version after every
+    # successful swap (the scheduler wires this to the trace recorder).
+    on_swap: Optional[Callable[[int], None]] = dataclasses.field(
+        default=None, repr=False)
     _pool_proj: Optional[Tuple[jax.Array, jax.Array]] = dataclasses.field(
         default=None, repr=False)
 
@@ -184,6 +188,8 @@ class RoutedEngine:
                 f"live v{self.router.version}")
         self.router = new_router
         self.refresh_pool()
+        if self.on_swap is not None:
+            self.on_swap(new_router.version)
 
     def choose(self, s_hat: np.ndarray, c_hat: np.ndarray,
                lam: Optional[float] = None) -> np.ndarray:

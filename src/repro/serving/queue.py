@@ -39,6 +39,11 @@ class Request:
     arrival_s: float = 0.0             # trace arrival time (virtual clock)
     deadline_s: Optional[float] = None # absolute; None = never expires
     rid: int = dataclasses.field(default_factory=lambda: next(_REQUEST_IDS))
+    # Observability identity: assigned by the TraceRecorder in admission
+    # order (dense, deterministic across replays — unlike ``rid``, whose
+    # process-global counter shifts between in-process runs). -1 = no
+    # tracer has seen this request.
+    trace_key: int = -1
 
     # Filled in by the runtime.
     status: str = PENDING
@@ -114,6 +119,10 @@ class AdmissionQueue:
         self.rejected = 0
         self.expired = 0
         self.readmitted = 0
+        # Optional trace hook (repro.obs): admission/rejection/expiry are
+        # queue-owned lifecycle transitions, so their events are emitted
+        # here. The scheduler installs the tracer.
+        self.tracer = None
 
     @property
     def depth(self) -> int:
@@ -124,10 +133,18 @@ class AdmissionQueue:
         if len(self._items) >= self.capacity:
             req.status = REJECTED
             self.rejected += 1
+            if self.tracer is not None:
+                self.tracer.instant("reject", "queue", now,
+                                    key=self.tracer.ensure_key(req),
+                                    args={"depth": len(self._items)})
             return False
         req.admitted_s = now
         self._items.append(req)
         self.admitted += 1
+        if self.tracer is not None:
+            self.tracer.instant("admit", "queue", now,
+                                key=self.tracer.ensure_key(req),
+                                args={"depth": len(self._items)})
         return True
 
     def offer_front(self, req: Request, now: float) -> None:
@@ -144,6 +161,12 @@ class AdmissionQueue:
         req.admitted_s = now
         self._items.appendleft(req)
         self.readmitted += 1
+        if self.tracer is not None:
+            self.tracer.instant("readmit", "queue", now,
+                                key=self.tracer.ensure_key(req),
+                                args={"leg": req.leg,
+                                      "member": req.forced_member_name
+                                      or str(req.forced_member)})
 
     def expire(self, now: float) -> List[Request]:
         """Drop queued requests whose deadline has passed."""
@@ -154,6 +177,10 @@ class AdmissionQueue:
                 req.status = EXPIRED
                 req.finish_s = now
                 dropped.append(req)
+                if self.tracer is not None:
+                    self.tracer.instant("expire", "queue", now,
+                                        key=self.tracer.ensure_key(req),
+                                        args={"deadline_s": req.deadline_s})
             else:
                 survivors.append(req)
         self._items = survivors

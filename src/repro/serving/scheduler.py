@@ -88,7 +88,7 @@ class MicroBatchScheduler:
                  clock: Optional[SimClock] = None,
                  service_time: Optional[Callable[[str, int, float], float]]
                  = None,
-                 adapter=None, cascade=None):
+                 adapter=None, cascade=None, tracer=None):
         self.engine = engine
         self.config = config or SchedulerConfig()
         self.queue = queue or AdmissionQueue(self.config.queue_capacity)
@@ -97,6 +97,25 @@ class MicroBatchScheduler:
         self.governor = governor
         self.clock = clock or SimClock()
         self.service_time = service_time
+        # Observability (repro.obs): one tracer fans out to every hook the
+        # scheduler owns — the queue's admission events, the cascade's
+        # decision instants, the adapter's observe/update events, and the
+        # engine's router-swap notifications. All emission sites are
+        # ``if tracer is not None`` branches: with no tracer the runtime
+        # does zero extra work.
+        self.tracer = tracer
+        if tracer is not None:
+            self.queue.tracer = tracer
+            if cascade is not None and getattr(cascade, "tracer", None) \
+                    is None:
+                cascade.tracer = tracer
+            if adapter is not None and getattr(adapter, "tracer", None) \
+                    is None:
+                adapter.tracer = tracer
+            if getattr(engine, "on_swap", None) is None:
+                engine.on_swap = lambda version: tracer.instant(
+                    "router_swap", "online", self.clock.now,
+                    args={"version": version})
         # Online adaptation (repro.online.OnlineAdapter): overrides the
         # scoring-step argmax with the exploration policy and consumes
         # served outcomes after every dispatch round.
@@ -160,6 +179,7 @@ class MicroBatchScheduler:
         sees the cascade's cumulative spend.
         """
         served: List[Request] = []
+        tracer = self.tracer
         for r in self.queue.expire(self.clock.now):
             if r.best_output is not None:
                 # Deadline hit mid-cascade: the request already holds a
@@ -172,7 +192,17 @@ class MicroBatchScheduler:
                 self.telemetry.finalize_request(r)
                 if self.cascade is not None:
                     self.cascade.on_rescued(r)
+                if tracer is not None:
+                    tracer.span("request", "request", r.arrival_s,
+                                r.finish_s, key=r.trace_key,
+                                args={"status": "done", "legs": r.leg,
+                                      "rescued": True,
+                                      "cum_cost": r.cum_cost})
                 served.append(r)
+            elif tracer is not None:
+                tracer.span("request", "request", r.arrival_s, r.finish_s,
+                            key=r.trace_key,
+                            args={"status": "expired", "legs": r.leg})
         # Hot pool membership can mutate the pool between rounds.
         self.telemetry.sync_members([m.name for m in self.engine.pool])
         batch = self.queue.pop(self.config.score_batch)
@@ -182,8 +212,15 @@ class MicroBatchScheduler:
         lam = self.engine.lam
         if self.governor is not None:
             lam = self.governor.update(self.clock.now)
+            if tracer is not None:
+                tracer.instant(
+                    "governor", "budget", self.clock.now,
+                    args={"lam": lam,
+                          "action": self.governor.last_action,
+                          "utilization": self.governor.last_utilization})
         self.telemetry.record_lambda(self.clock.now, lam)
 
+        t_score0 = self.clock.now
         t0 = time.perf_counter()
         if self.adapter is not None or self.cascade is not None:
             # One embedding pass shared between scoring and the outcome
@@ -226,8 +263,18 @@ class MicroBatchScheduler:
         score_wall = time.perf_counter() - t0
         self.telemetry.record_score_batch(len(batch), score_wall)
         self.clock.advance(self._virtual_dt("score", len(batch), score_wall))
+        if tracer is not None:
+            # Stub engines in tests/smokes may have no versioned router.
+            version = getattr(getattr(self.engine, "router", None),
+                              "version", None)
+            tracer.span("score_batch", "sched", t_score0, self.clock.now,
+                        args={"n": len(batch), "router_version": version})
         for r in batch:
             r.service_start_s = self.clock.now
+            if tracer is not None:
+                tracer.span("queue_wait", "queue", r.admitted_s,
+                            self.clock.now, key=r.trace_key,
+                            args={"leg": r.leg + 1})
 
         outcomes: List[Request] = []   # per-leg outcomes for the adapter
         for mi in range(len(self.engine.pool)):
@@ -235,6 +282,7 @@ class MicroBatchScheduler:
             for lo in range(0, len(idx), self.config.max_batch):
                 chunk = [batch[i] for i in idx[lo:lo + self.config.max_batch]]
                 max_new = max(r.max_new for r in chunk)
+                t_gen0 = self.clock.now
                 t0 = time.perf_counter()
                 outs, cost = self.engine.generate_member(
                     mi, [r.prompt for r in chunk], max_new=max_new)
@@ -246,6 +294,10 @@ class MicroBatchScheduler:
                 delivered = sum(min(len(o), r.max_new)
                                 for o, r in zip(outs, chunk))
                 self.telemetry.record_generate(mi, len(chunk), delivered, cost)
+                if tracer is not None:
+                    tracer.span("generate", "sched", t_gen0, self.clock.now,
+                                args={"member": self.engine.pool[mi].name,
+                                      "n": len(chunk), "cost": cost})
                 per_req_cost = cost / len(chunk)
                 for r, o in zip(chunk, outs):
                     r.member = mi
@@ -256,9 +308,23 @@ class MicroBatchScheduler:
                     r.tried.append(mi)
                     r.leg_costs.append(per_req_cost)
                     r.finish_s = self.clock.now
+                    if tracer is not None:
+                        tracer.span(
+                            "leg", "request", r.service_start_s, r.finish_s,
+                            key=r.trace_key,
+                            args={"leg": r.leg,
+                                  "member": self.engine.pool[mi].name,
+                                  "cost": per_req_cost})
                     if self.cascade is None:
                         r.status = DONE
                         self.telemetry.finalize_request(r)
+                        if tracer is not None:
+                            tracer.span(
+                                "request", "request", r.arrival_s,
+                                r.finish_s, key=r.trace_key,
+                                args={"status": "done", "legs": r.leg,
+                                      "member": self.engine.pool[mi].name,
+                                      "cum_cost": r.cum_cost})
                         served.append(r)
                         outcomes.append(r)
                         continue
@@ -287,6 +353,15 @@ class MicroBatchScheduler:
                         r.output = r.best_output
                         r.member = r.best_member
                     self.telemetry.finalize_request(r)
+                    if tracer is not None:
+                        name = (self.engine.pool[r.member].name
+                                if 0 <= r.member < len(self.engine.pool)
+                                else str(r.member))
+                        tracer.span(
+                            "request", "request", r.arrival_s, r.finish_s,
+                            key=r.trace_key,
+                            args={"status": "done", "legs": r.leg,
+                                  "member": name, "cum_cost": r.cum_cost})
                     served.append(r)
         if self.adapter is not None:
             if outcomes:

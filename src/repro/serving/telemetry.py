@@ -47,20 +47,33 @@ class Histogram:
         self.max = max(self.max, other.max)
 
     def percentile(self, p: float) -> float:
-        """Approximate percentile (log-interpolated inside the bucket)."""
+        """Approximate percentile (log-interpolated inside the bucket).
+
+        The under/overflow buckets have no fixed outer edge, so they
+        interpolate against the observed min/max instead of collapsing to
+        a single point — a histogram whose every value landed below
+        ``edges[0]`` still reports percentile(100) == max, not min.
+        Interpolation falls back to linear when a bucket bound is
+        non-positive (only reachable through min/max in the under/overflow
+        buckets; the interior edges are strictly positive).
+        """
         if self.count == 0:
             return float("nan")
         target = p / 100.0 * self.count
         seen = 0
         for i, c in enumerate(self.counts):
             if seen + c >= target and c > 0:
-                if i == 0:
-                    return self.min
-                if i >= len(self.edges):
-                    return self.max
-                lo, hi = self.edges[i - 1], self.edges[i]
                 frac = (target - seen) / c
-                est = lo * (hi / lo) ** frac
+                if i == 0:
+                    lo, hi = self.min, min(self.edges[0], self.max)
+                elif i >= len(self.edges):
+                    lo, hi = max(self.edges[-1], self.min), self.max
+                else:
+                    lo, hi = self.edges[i - 1], self.edges[i]
+                if lo > 0 and hi > 0:
+                    est = lo * (hi / lo) ** frac
+                else:
+                    est = lo + (hi - lo) * frac
                 return min(max(est, self.min), self.max)
             seen += c
         return self.max

@@ -1,0 +1,136 @@
+"""Property-based tests for the serving telemetry ``Histogram`` (via the
+``_hypothesis_compat`` shim: real hypothesis when installed, bounded
+deterministic grid otherwise).
+
+Property families:
+  * percentile bounds and monotonicity — for any recorded stream,
+    percentile(p) stays inside [min, max] and is non-decreasing in p;
+  * under/overflow boundary behaviour — streams living entirely below
+    edges[0] or above edges[-1] still span [min, max] across the
+    percentile range instead of collapsing to one endpoint (the bug this
+    file pins: the underflow bucket used to return ``min`` for every p,
+    so an all-underflow histogram reported percentile(100) == min);
+  * merge algebra — merging preserves count/total/min/max exactly,
+    merging an empty histogram is an identity, and merge order doesn't
+    change any percentile.
+"""
+import math
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.telemetry import Histogram
+
+
+def _hist(values, **kw):
+    h = Histogram(**kw)
+    for v in values:
+        h.record(float(v))
+    return h
+
+
+class TestPercentileInvariants:
+    @given(st.lists(st.floats(1e-8, 1e5), min_size=1, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_bounds(self, values):
+        h = _hist(values)
+        for p in (0, 1, 25, 50, 75, 99, 100):
+            est = h.percentile(p)
+            assert h.min <= est <= h.max
+
+    @given(st.lists(st.floats(1e-8, 1e5), min_size=1, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_monotone_in_p(self, values):
+        h = _hist(values)
+        ps = list(range(0, 101, 5))
+        ests = [h.percentile(p) for p in ps]
+        assert all(a <= b + 1e-12 for a, b in zip(ests, ests[1:]))
+
+    @given(st.floats(1e-8, 1e5))
+    @settings(max_examples=40, deadline=None)
+    def test_single_value_is_exact(self, v):
+        h = _hist([v])
+        for p in (0, 50, 100):
+            assert h.percentile(p) == v
+
+
+class TestUnderOverflowBuckets:
+    """Values outside [edges[0], edges[-1]] land in the open-ended
+    under/overflow buckets, which interpolate against observed min/max."""
+
+    def test_all_underflow_spans_min_max(self):
+        # Every value below edges[0]=1e-6: percentile(100) must reach max.
+        h = _hist([1e-9, 2e-9, 5e-8, 9e-7])
+        assert h.percentile(100) == h.max == 9e-7
+        assert h.percentile(0) == h.min == 1e-9
+        assert h.min < h.percentile(50) <= h.max
+
+    def test_all_overflow_spans_min_max(self):
+        # Every value above edges[-1]=1e3.
+        h = _hist([2e3, 5e3, 4e4, 9e5])
+        assert h.percentile(0) == h.min == 2e3
+        assert h.percentile(100) == h.max == 9e5
+        assert h.min <= h.percentile(50) < h.max
+
+    def test_nonpositive_values_underflow(self):
+        # record() accepts any float; zero/negative values can only land
+        # in the underflow bucket, where interpolation must fall back to
+        # linear (log-interp needs positive bounds) and stay in bounds.
+        h = _hist([-3.0, -1.0, 0.0, 0.5])
+        for p in (0, 25, 50, 75, 100):
+            assert h.min <= h.percentile(p) <= h.max
+        assert h.percentile(0) == -3.0
+        assert h.percentile(100) == 0.5
+
+    @given(st.lists(st.floats(1e-9, 5e-7), min_size=1, max_size=40))
+    @settings(max_examples=40, deadline=None)
+    def test_underflow_monotone(self, values):
+        h = _hist(values)
+        ps = list(range(0, 101, 10))
+        ests = [h.percentile(p) for p in ps]
+        assert all(a <= b + 1e-20 for a, b in zip(ests, ests[1:]))
+        assert ests[0] == h.min and ests[-1] == h.max
+
+
+class TestMergeAlgebra:
+    def test_empty_merge_identity(self):
+        h = _hist([0.01, 0.2, 3.0])
+        snap = (h.count, h.total, h.min, h.max, h.percentile(50))
+        h.merge(Histogram())
+        assert (h.count, h.total, h.min, h.max, h.percentile(50)) == snap
+
+    def test_merge_into_empty(self):
+        a, b = Histogram(), _hist([0.5, 0.7])
+        a.merge(b)
+        assert (a.count, a.min, a.max) == (2, 0.5, 0.7)
+        # A merge of two empties keeps the empty sentinels and nan stats.
+        e = Histogram()
+        e.merge(Histogram())
+        assert e.count == 0
+        assert e.min == float("inf") and e.max == float("-inf")
+        assert math.isnan(e.percentile(50)) and math.isnan(e.mean)
+
+    @given(st.lists(st.floats(1e-7, 1e4), min_size=0, max_size=30),
+           st.lists(st.floats(1e-7, 1e4), min_size=0, max_size=30))
+    @settings(max_examples=40, deadline=None)
+    def test_merge_matches_combined_stream(self, xs, ys):
+        a, b = _hist(xs), _hist(ys)
+        a.merge(b)
+        both = _hist(list(xs) + list(ys))
+        assert a.count == both.count
+        assert np.array_equal(a.counts, both.counts)
+        assert a.min == both.min and a.max == both.max
+        assert math.isclose(a.total, both.total, rel_tol=1e-12, abs_tol=1e-12)
+        for p in (0, 50, 99, 100):
+            pa, pb = a.percentile(p), both.percentile(p)
+            assert (math.isnan(pa) and math.isnan(pb)) or pa == pb
+
+    def test_merge_rejects_mismatched_edges(self):
+        a = Histogram(n_buckets=10)
+        b = Histogram(n_buckets=12)
+        try:
+            a.merge(b)
+        except ValueError:
+            return
+        raise AssertionError("merge with different edges must raise")

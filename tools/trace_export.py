@@ -1,0 +1,130 @@
+"""Inspect / validate / filter Chrome-trace JSON emitted by the serving
+runtime (``--trace-out`` on ``repro.launch.serve``, ``tools/obs_smoke.py``).
+
+The files are already Perfetto-loadable (https://ui.perfetto.dev — open the
+JSON directly, or chrome://tracing). This CLI covers what a UI doesn't:
+
+    # validate schema + span-tree well-formedness, print a summary
+    PYTHONPATH=src python tools/trace_export.py trace.json
+
+    # one request's full span tree (tid = trace key + 1)
+    PYTHONPATH=src python tools/trace_export.py trace.json --request 7
+
+    # re-emit a filtered trace (one worker / selected categories) for
+    # loading into Perfetto, pretty-printed for diffing
+    PYTHONPATH=src python tools/trace_export.py trace.json \\
+        --worker 0 --cat request,cascade -o filtered.json --pretty
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import (
+    request_trees,
+    trace_summary,
+    validate_chrome_trace,
+    validate_span_tree,
+)
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def filter_doc(doc: dict, worker=None, cats=None) -> dict:
+    """Subset a trace document; metadata rows follow surviving workers."""
+    out = []
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") == "M":
+            if worker is None or ev.get("pid") == worker:
+                out.append(ev)
+            continue
+        if worker is not None and ev.get("pid") != worker:
+            continue
+        if cats is not None and ev.get("cat") not in cats:
+            continue
+        out.append(ev)
+    return {**doc, "traceEvents": out}
+
+
+def print_request(doc: dict, key: int) -> int:
+    trees = request_trees(doc)
+    tid = key + 1
+    if tid not in trees:
+        print(f"no events for request trace key {key} (tid {tid})")
+        return 1
+    t = trees[tid]
+    for ev in sorted(t["events"], key=lambda e: (e["ts"], e.get("dur", 0))):
+        dur = f"  dur={ev['dur'] / 1e3:.3f}ms" if "dur" in ev else ""
+        args = f"  {ev['args']}" if ev.get("args") else ""
+        print(f"  {ev['ts'] / 1e3:10.3f}ms  w{ev['pid']}  "
+              f"[{ev['cat']}] {ev['name']}{dur}{args}")
+    root = t["root"]
+    if root is not None:
+        print(f"request root: status={root.get('args', {}).get('status')}  "
+              f"legs={root.get('args', {}).get('legs')}  "
+              f"span {root['ts'] / 1e3:.3f}ms -> "
+              f"{(root['ts'] + root['dur']) / 1e3:.3f}ms")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON file")
+    ap.add_argument("--request", type=int, default=None, metavar="KEY",
+                    help="print one request's span tree (its trace key)")
+    ap.add_argument("--worker", type=int, default=None,
+                    help="keep only this worker's events")
+    ap.add_argument("--cat", default=None,
+                    help="comma-separated categories to keep")
+    ap.add_argument("-o", "--out", default=None,
+                    help="write the (filtered) trace JSON here")
+    ap.add_argument("--pretty", action="store_true",
+                    help="indent the output JSON")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip schema/span-tree validation")
+    args = ap.parse_args()
+
+    doc = load(args.trace)
+
+    rc = 0
+    if not args.no_validate:
+        schema = validate_chrome_trace(doc)
+        tree = validate_span_tree(doc)
+        for err in schema[:20]:
+            print(f"schema: {err}")
+        for err in tree[:20]:
+            print(f"span-tree: {err}")
+        if schema or tree:
+            rc = 1
+        else:
+            print("valid chrome trace, well-formed span tree")
+
+    if args.request is not None:
+        return print_request(doc, args.request) or rc
+
+    summ = trace_summary(doc)
+    print(f"label: {doc.get('otherData', {}).get('label')}  "
+          f"deterministic: {doc.get('otherData', {}).get('deterministic')}")
+    print(f"{summ['events']} events  workers {summ['workers']}  "
+          f"requests {summ['requests']} ({summ['finalized']} finalized)")
+    by = ", ".join(f"{k}={v}" for k, v in sorted(summ["by_name"].items()))
+    print(f"by name: {by}")
+
+    if args.out:
+        cats = set(args.cat.split(",")) if args.cat else None
+        filtered = filter_doc(doc, worker=args.worker, cats=cats)
+        with open(args.out, "w") as f:
+            json.dump(filtered, f, sort_keys=True,
+                      indent=2 if args.pretty else None,
+                      separators=None if args.pretty else (",", ":"))
+        n = sum(1 for e in filtered["traceEvents"] if e.get("ph") != "M")
+        print(f"wrote {n} events -> {args.out}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
