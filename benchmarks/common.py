@@ -122,9 +122,16 @@ class BenchReport:
         self.wall_s: float = 0.0
         self.error: Optional[str] = None
 
-    def set_headline(self, metric: str, value: float, unit: str = "") -> None:
+    def set_headline(self, metric: str, value: float, unit: str = "",
+                     direction: Optional[str] = None) -> None:
+        """``direction`` declares which way is better ("higher"/"lower");
+        ``tools/bench_diff.py`` only treats a headline move as a
+        regression when a direction is declared."""
+        if direction not in (None, "higher", "lower"):
+            raise ValueError(f"direction must be higher/lower, "
+                             f"got {direction!r}")
         self._headline = {"metric": metric, "value": float(value),
-                          "unit": unit}
+                          "unit": unit, "direction": direction}
 
     def add_gate(self, name: str, passed: bool, detail: str = "") -> None:
         self.gates.append({"name": name, "passed": bool(passed),
@@ -137,7 +144,7 @@ class BenchReport:
         if self.rows:
             r = self.rows[0]
             return {"metric": r["name"], "value": r["us_per_call"],
-                    "unit": "us_per_call"}
+                    "unit": "us_per_call", "direction": None}
         return None
 
     def to_dict(self) -> Dict:
@@ -171,10 +178,13 @@ def active_report() -> Optional[BenchReport]:
     return _ACTIVE_REPORT
 
 
-def headline(metric: str, value: float, unit: str = "") -> None:
-    """Declare the suite's headline metric (latest call wins)."""
+def headline(metric: str, value: float, unit: str = "",
+             direction: Optional[str] = None) -> None:
+    """Declare the suite's headline metric (latest call wins).
+    ``direction`` ("higher"/"lower" = better) arms the bench-trajectory
+    regression check in ``tools/bench_diff.py``."""
     if _ACTIVE_REPORT is not None:
-        _ACTIVE_REPORT.set_headline(metric, value, unit)
+        _ACTIVE_REPORT.set_headline(metric, value, unit, direction)
 
 
 def gate(name: str, passed: bool, detail: str = "") -> bool:

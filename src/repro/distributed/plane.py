@@ -39,7 +39,8 @@ class PlaneEvent:
 class ServingPlane:
     def __init__(self, workers: List, coordinator, *,
                  sync_every_s: Optional[float] = None,
-                 events: Sequence[PlaneEvent] = (), tracer=None):
+                 events: Sequence[PlaneEvent] = (), tracer=None,
+                 flusher=None):
         self.workers = {w.wid: w for w in workers}
         self.coordinator = coordinator
         self.sync_every_s = (coordinator.config.sync_every_s
@@ -59,6 +60,11 @@ class ServingPlane:
         if tracer is not None and getattr(coordinator, "tracer", None) \
                 is None:
             coordinator.tracer = tracer
+        # Streaming flusher (repro.obs.stream.ObsFlusher): ticked at the
+        # event loop's deterministic decision points on the fleet's
+        # high-water virtual time — flush boundaries are a pure function
+        # of the seeded schedule, so segment contents replay bit-identical.
+        self.flusher = flusher
 
     # -- request assignment --------------------------------------------------
 
@@ -118,6 +124,7 @@ class ServingPlane:
         t_start = min((w.clock.now for w in self.workers.values()),
                       default=0.0)
         next_sync = t_start + self.sync_every_s
+        t_hi = t_start                  # fleet high-water virtual time
         while True:
             acts = [(w.next_action_s(), w.wid) for w in self._alive()]
             acts = [a for a in acts if a[0] != float("inf")]
@@ -133,9 +140,15 @@ class ServingPlane:
                 continue
             if next_sync <= t_next:
                 self.coordinator.sync_round(next_sync)
+                t_hi = max(t_hi, next_sync)
                 next_sync += self.sync_every_s
+                if self.flusher is not None:
+                    self.flusher.maybe_flush(t_hi)
                 continue
             self.workers[wid].step(t_next)
+            t_hi = max(t_hi, t_next)
+            if self.flusher is not None:
+                self.flusher.maybe_flush(t_hi)
 
         t_end = max(w.clock.now for w in self.workers.values())
         for w in self._alive():
@@ -143,6 +156,13 @@ class ServingPlane:
                 w.adapter.tick(t_end)     # final staged-feedback flush
         self.coordinator.sync_round(t_end)
         self.coordinator.converge()
+        # Forced end-of-run SLO evaluation (the fleet shares one tracker):
+        # a run shorter than the check throttle must still surface alerts.
+        slos = {id(w.scheduler.slo): w.scheduler.slo
+                for w in self.workers.values()
+                if w.scheduler.slo is not None}
+        for slo in slos.values():
+            slo.check(t_end, force=True)
         for w in self.workers.values():
             w.telemetry.rejected = w.queue.rejected
             w.telemetry.expired = w.queue.expired

@@ -88,7 +88,7 @@ class WorkerNode:
         self.clock.advance_to(t)
         while self.arrivals and self.arrivals[0].arrival_s <= self.clock.now:
             self.queue.offer(self.arrivals.popleft(), self.clock.now)
-        self.telemetry.record_queue_depth(self.clock.now, self.queue.depth)
+        self.scheduler.note_queue_depth()
         served = []
         if self.scheduler.should_dispatch(flush=not self.arrivals):
             served = self.scheduler.dispatch()

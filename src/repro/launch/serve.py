@@ -142,34 +142,67 @@ def build_routed_engine(names, *, seed: int = 0, epochs: int = 120,
     return engine, data, te
 
 
+def _streaming_requested(args) -> bool:
+    return (args.scrape_every is not None or args.trace_sample is not None
+            or args.trace_cap is not None or args.obs_dir is not None)
+
+
 def _setup_obs(args):
-    """(recorder, registry, profiler) for --trace-out/--metrics-out.
+    """(recorder, registry, profiler, flusher) from the obs flags.
 
-    All three default to None — the runtime's tracer branches then cost
-    nothing. ``--trace-profile`` additionally installs the kernel-dispatch
-    profiler globally (removed again by :func:`_save_obs`).
+    All default to None — the runtime's tracer branches then cost nothing.
+    Streaming mode (any of ``--scrape-every/--trace-sample/--trace-cap/
+    --obs-dir``) builds the recorder with the sampler/cap installed and an
+    :class:`ObsFlusher` over the segment directory; with no
+    ``--scrape-every`` the flusher still applies sampling, in one
+    final-only flush. ``--trace-profile`` additionally installs the
+    kernel-dispatch profiler globally (removed again by :func:`_save_obs`).
     """
-    recorder = registry = profiler = None
-    if args.trace_out or args.trace_profile:
-        from repro.obs import TraceRecorder
+    recorder = registry = profiler = flusher = None
+    streaming = _streaming_requested(args)
+    label = f"serve-{args.trace}-seed{args.seed}"
+    if args.trace_out or args.trace_profile or streaming:
+        from repro.obs import TraceRecorder, TraceSampler
 
+        sampler = None
+        if args.trace_sample is not None:
+            sampler = TraceSampler(args.trace_sample, seed=args.seed,
+                                   head=args.trace_head)
         recorder = TraceRecorder(
-            label=f"serve-{args.trace}-seed{args.seed}")
-    if args.metrics_out:
+            label=label, sampler=sampler,
+            max_buffered_per_worker=args.trace_cap)
+    if args.metrics_out or streaming:
         from repro.obs import MetricsRegistry
 
         registry = MetricsRegistry()
+    if streaming:
+        from repro.obs import ObsFlusher
+
+        obs_dir = args.obs_dir or f"obs_{args.trace}_seed{args.seed}"
+        args.obs_dir = obs_dir
+        flusher = ObsFlusher(
+            obs_dir, recorder=recorder, registry=registry,
+            scrape_every_s=args.scrape_every, label=label,
+            include_wall=args.trace_profile,
+            deterministic_metrics=not args.trace_profile)
     if args.trace_profile:
         from repro.kernels import ops as kops
         from repro.obs import KernelProfiler
 
         profiler = KernelProfiler(tracer=recorder)
         kops.set_kernel_profiler(profiler)
-    return recorder, registry, profiler
+    return recorder, registry, profiler, flusher
 
 
-def _save_obs(args, recorder, registry, profiler):
-    """Write the observability artifacts and uninstall the profiler."""
+def _save_obs(args, recorder, registry, profiler, flusher=None,
+              now: float = 0.0):
+    """Write the observability artifacts and uninstall the profiler.
+
+    ``now`` is the run's final virtual time — it stamps the flusher's
+    last segment and manifest. In streaming mode ``--trace-out`` becomes
+    the concatenation of the rotated segments (still one valid,
+    replay-stable Chrome trace — minus sampled-out request trees).
+    """
     if profiler is not None:
         from repro.kernels import ops as kops
 
@@ -177,11 +210,28 @@ def _save_obs(args, recorder, registry, profiler):
         print(profiler.report())
         if registry is not None:
             profiler.register_metrics(registry)
-    if recorder is not None and args.trace_out:
+    if flusher is not None:
+        flusher.finalize(now)
+        stats = recorder.drop_stats
+        print(f"obs segments written to {args.obs_dir} "
+              f"({flusher.seq} flushes, peak {recorder.peak_buffered} "
+              f"buffered events, {stats['requests_sampled_out']} trees "
+              f"sampled out, {stats['requests_shed']} shed)")
+        if args.trace_out:
+            import json as _json
+
+            from repro.obs import concat_dir
+
+            doc = concat_dir(args.obs_dir)
+            with open(args.trace_out, "w") as f:
+                f.write(_json.dumps(doc, sort_keys=True,
+                                    separators=(",", ":")))
+            print(f"concatenated trace written to {args.trace_out}")
+    elif recorder is not None and args.trace_out:
         recorder.save(args.trace_out, include_wall=args.trace_profile)
         print(f"trace written to {args.trace_out} "
               f"({recorder.n_events} events)")
-    if registry is not None:
+    if registry is not None and args.metrics_out:
         if args.metrics_out.endswith((".prom", ".txt")):
             registry.save_prometheus(args.metrics_out)
         else:
@@ -192,6 +242,28 @@ def _save_obs(args, recorder, registry, profiler):
                           deterministic=not args.trace_profile)
         print(f"metrics snapshot written to {args.metrics_out} "
               f"({len(registry)} series)")
+
+
+def _make_slo(args, tracer=None):
+    """SLO tracker from the --slo-* flags (None when none are set)."""
+    from repro.obs import build_slo_tracker
+
+    return build_slo_tracker(
+        tracer=tracer, p95_target_s=args.slo_p95,
+        miss_rate_budget=args.slo_miss_rate,
+        quality_floor=args.slo_quality_floor,
+        spend_per_window=args.slo_spend, window_s=args.slo_window)
+
+
+def _print_slo(slo, now: float) -> None:
+    if slo is None:
+        return
+    firing = slo.firing()
+    burns = {name: f"{b['long']:.2f}x"
+             for name, b in slo.burn_rates(now).items()}
+    print(f"slo: {slo.alerts_total} alert transitions  "
+          f"firing {firing if firing else 'none'}  long-window burn "
+          + "  ".join(f"{k}={v}" for k, v in burns.items()))
 
 
 def main(argv=None):
@@ -287,6 +359,39 @@ def main(argv=None):
                          "include the wall-clock spans/metrics in the "
                          "artifacts — the outputs are then NOT "
                          "replay-stable")
+    ap.add_argument("--scrape-every", type=float, default=None,
+                    metavar="VIRT_S",
+                    help="streaming obs: flush completed trace spans and a "
+                         "metrics scrape to rotating segments every this "
+                         "many virtual seconds (bounds recorder memory)")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="segment directory for streaming obs (default "
+                         "obs_<trace>_seed<seed> when streaming is on)")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    metavar="RATE",
+                    help="deterministic per-request trace sampling rate in "
+                         "[0,1]; anomalous requests (escalations, expiries, "
+                         "rescues) are always kept")
+    ap.add_argument("--trace-head", type=int, default=8,
+                    help="always keep the first N request trees regardless "
+                         "of --trace-sample")
+    ap.add_argument("--trace-cap", type=int, default=None, metavar="N",
+                    help="hard per-worker buffered-event cap: new request "
+                         "trees are shed (with drop accounting) past it")
+    ap.add_argument("--slo-p95", type=float, default=None, metavar="VIRT_S",
+                    help="SLO: p95 e2e latency target (error budget 5%%)")
+    ap.add_argument("--slo-miss-rate", type=float, default=None,
+                    metavar="FRAC",
+                    help="SLO: allowed deadline-miss fraction")
+    ap.add_argument("--slo-quality-floor", type=float, default=None,
+                    help="SLO: per-request quality floor (error budget 10%%)")
+    ap.add_argument("--slo-spend", type=float, default=None, metavar="USD",
+                    help="SLO: $ spend allowed per --slo-window")
+    ap.add_argument("--slo-window", type=float, default=0.25,
+                    metavar="VIRT_S",
+                    help="SLO compliance window, virtual seconds (the "
+                         "burn-rate alert pairs it with a window/12 short "
+                         "window)")
     args = ap.parse_args(argv)
     if (args.crash_at is not None and args.rejoin_at is not None
             and args.rejoin_at <= args.crash_at):
@@ -365,7 +470,7 @@ def main(argv=None):
     if args.workers > 1:
         return _run_plane(args, engine, data, trace, make_feedback,
                           make_cascade, obs)
-    recorder, registry, profiler = obs
+    recorder, registry, profiler, flusher = obs
 
     governor = None
     if args.budget > 0:
@@ -404,6 +509,7 @@ def main(argv=None):
         )
 
     cascade = make_cascade(governor)
+    slo = _make_slo(args, tracer=recorder)
     sched = MicroBatchScheduler(
         engine,
         SchedulerConfig(score_batch=args.score_batch,
@@ -414,16 +520,22 @@ def main(argv=None):
         service_time=None if args.wall_time else default_service_model(),
         adapter=adapter, cascade=cascade,
         tracer=recorder.scoped(0) if recorder is not None else None,
+        slo=slo, flusher=flusher,
     )
     if registry is not None:
         from repro.obs import (
             register_governor_metrics, register_scheduler_metrics,
+            register_slo_metrics, register_stream_metrics,
         )
 
         register_scheduler_metrics(registry, sched)
         if governor is not None:
             register_governor_metrics(registry, governor,
                                       lambda: sched.clock.now)
+        if slo is not None:
+            register_slo_metrics(registry, slo, lambda: sched.clock.now)
+        if flusher is not None:
+            register_stream_metrics(registry, flusher)
     summary = sched.run_trace(trace)
 
     print(f"trace={args.trace} requests={args.requests} seed={args.seed}")
@@ -438,12 +550,14 @@ def main(argv=None):
               f"window  spend ${g['total_spend']:.6f}  "
               f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
               f"tightened x{int(g['tightened'])} relaxed x{int(g['relaxed'])}")
-    _save_obs(args, recorder, registry, profiler)
+    _print_slo(slo, sched.clock.now)
+    _save_obs(args, recorder, registry, profiler, flusher,
+              now=sched.clock.now)
     return summary
 
 
 def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
-               obs=(None, None, None)):
+               obs=(None, None, None, None)):
     """Multi-worker path: build N workers + coordinator, run the plane."""
     from repro.distributed import (
         Coordinator, PlaneEvent, ServingPlane, SharedBudgetLedger,
@@ -451,7 +565,10 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
     )
     from repro.serving.scheduler import SimClock
 
-    recorder, registry, profiler = obs
+    recorder, registry, profiler, flusher = obs
+    # One fleet-level SLO tracker: every worker's finalized requests feed
+    # the same rolling windows (they tolerate cross-worker time skew).
+    slo = _make_slo(args, tracer=recorder)
     governor = None
     if args.budget > 0:
         governor = SharedBudgetLedger(args.budget, args.budget_window,
@@ -510,6 +627,7 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
             service_time=None if args.wall_time else default_service_model(),
             adapter=adapter, cascade=make_cascade(governor),
             tracer=recorder.scoped(wid) if recorder is not None else None,
+            slo=slo,
         )
         workers.append(WorkerNode(wid, weng, sched, adapter))
 
@@ -523,11 +641,21 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
         if args.rejoin_at is not None:
             events.append(
                 PlaneEvent(args.rejoin_at, "rejoin", args.crash_worker))
-    plane = ServingPlane(workers, coord, events=events, tracer=recorder)
+    plane = ServingPlane(workers, coord, events=events, tracer=recorder,
+                         flusher=flusher)
     if registry is not None:
-        from repro.obs import register_plane_metrics
+        from repro.obs import (
+            register_plane_metrics, register_slo_metrics,
+            register_stream_metrics,
+        )
 
         register_plane_metrics(registry, plane)
+        if slo is not None:
+            register_slo_metrics(
+                registry, slo,
+                lambda: max(w.clock.now for w in plane.workers.values()))
+        if flusher is not None:
+            register_stream_metrics(registry, flusher)
     summary = plane.run_trace(trace)
 
     print(f"trace={args.trace} requests={args.requests} seed={args.seed} "
@@ -547,7 +675,9 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
               f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
               f"tightened x{int(g['tightened'])} relaxed x{int(g['relaxed'])} "
               f"throttled x{governor.throttled}")
-    _save_obs(args, recorder, registry, profiler)
+    t_end = max(w.clock.now for w in workers)
+    _print_slo(slo, t_end)
+    _save_obs(args, recorder, registry, profiler, flusher, now=t_end)
     return summary
 
 

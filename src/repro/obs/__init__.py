@@ -1,18 +1,26 @@
-"""Unified observability plane: tracing, metrics, kernel profiling.
+"""Unified observability plane: tracing, metrics, streaming, SLOs.
 
-Three pillars over the serving fleet:
+Pillars over the serving fleet:
 
   * :mod:`repro.obs.trace` — deterministic per-request trace spans over
-    the runtime's virtual clocks, exported as Chrome-trace/Perfetto JSON;
+    the runtime's virtual clocks, exported as Chrome-trace/Perfetto JSON
+    (complete spans, instants, and native counter tracks);
   * :mod:`repro.obs.metrics` — a counter/gauge/histogram registry with
     Prometheus-text and canonical-JSON exporters;
+  * :mod:`repro.obs.stream` — virtual-clock-driven segment flushes that
+    bound recorder memory for long-lived runs, plus segment stitching;
+  * :mod:`repro.obs.sampling` — deterministic head+tail per-request trace
+    sampling with an always-keep anomaly lane and a hard buffered cap;
+  * :mod:`repro.obs.slo` — SLO monitors with multi-window burn-rate
+    alerting on the virtual clock;
   * :mod:`repro.obs.profiling` — wall-clock (+ optional jax profiler)
     timing hooks around the Pallas kernel entry points.
 
 ``repro.obs.wiring`` registers the standard serving metric series;
-``launch/serve.py --trace-out/--metrics-out`` wires everything into the
-serving driver, and ``tools/trace_export.py`` / ``tools/obs_smoke.py``
-consume the artifacts.
+``launch/serve.py`` wires everything into the serving driver
+(``--trace-out/--metrics-out/--scrape-every/--trace-sample/--slo-*``),
+and ``tools/trace_export.py`` / ``tools/obs_smoke.py`` consume the
+artifacts.
 """
 from repro.obs.metrics import (
     Counter,
@@ -22,10 +30,20 @@ from repro.obs.metrics import (
     MultiGauge,
 )
 from repro.obs.profiling import KernelProfiler
+from repro.obs.sampling import TraceSampler, is_anomaly_event
+from repro.obs.slo import (
+    BurnRateSLO,
+    RollingWindow,
+    SLOTracker,
+    SpendBurnSLO,
+    build_slo_tracker,
+)
+from repro.obs.stream import ObsFlusher, concat_dir, concat_segments
 from repro.obs.trace import (
     WALL_CATS,
     ScopedTrace,
     TraceRecorder,
+    build_trace_doc,
     request_trees,
     trace_summary,
     validate_chrome_trace,
@@ -35,21 +53,36 @@ from repro.obs.wiring import (
     register_governor_metrics,
     register_plane_metrics,
     register_scheduler_metrics,
+    register_slo_metrics,
+    register_stream_metrics,
 )
 
 __all__ = [
+    "BurnRateSLO",
     "Counter",
     "Gauge",
     "HistogramMetric",
     "KernelProfiler",
     "MetricsRegistry",
     "MultiGauge",
+    "ObsFlusher",
+    "RollingWindow",
+    "SLOTracker",
     "ScopedTrace",
+    "SpendBurnSLO",
     "TraceRecorder",
+    "TraceSampler",
     "WALL_CATS",
+    "build_slo_tracker",
+    "build_trace_doc",
+    "concat_dir",
+    "concat_segments",
+    "is_anomaly_event",
     "register_governor_metrics",
     "register_plane_metrics",
     "register_scheduler_metrics",
+    "register_slo_metrics",
+    "register_stream_metrics",
     "request_trees",
     "trace_summary",
     "validate_chrome_trace",

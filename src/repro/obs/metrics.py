@@ -217,11 +217,17 @@ class MetricsRegistry:
         with open(path, "w") as f:
             f.write(self.to_json(deterministic=deterministic))
 
-    def prometheus(self) -> str:
-        """Prometheus text exposition format (one scrape of the registry)."""
+    def prometheus(self, deterministic: bool = False) -> str:
+        """Prometheus text exposition format (one scrape of the registry).
+
+        ``deterministic=True`` skips wall-clock metrics, mirroring
+        :meth:`snapshot` — streaming segment scrapes use it so the whole
+        obs directory stays byte-identical across seeded replays."""
         lines: List[str] = []
         seen_names = set()
         for m in self._metrics:
+            if deterministic and m.wall:
+                continue
             if m.name not in seen_names:
                 seen_names.add(m.name)
                 if m.help:

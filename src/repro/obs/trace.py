@@ -25,15 +25,27 @@ Design constraints, in order:
     and independently-built recorders can still :meth:`merge` at rollup.
 
 The export target is the Chrome trace-event JSON format (``ph: "X"``
-complete spans + ``ph: "i"`` instants), which Perfetto / ``chrome://tracing``
-load directly: ``pid`` is the worker id, ``tid`` is the per-request trace
-key (0 = scheduler/runtime scope). ``tools/trace_export.py`` filters,
-validates, and summarizes saved traces.
+complete spans + ``ph: "i"`` instants + ``ph: "C"`` counter samples, which
+Perfetto renders as native counter tracks), loaded directly by Perfetto /
+``chrome://tracing``: ``pid`` is the worker id, ``tid`` is the per-request
+trace key (0 = scheduler/runtime scope). ``tools/trace_export.py``
+filters, validates, concatenates, and summarizes saved traces.
+
+**Streaming mode** (:mod:`repro.obs.stream`) keeps the recorder bounded
+for unbounded runs: events of *closed* request trees (root span recorded)
+are periodically :meth:`~TraceRecorder.drain`-ed to rotating segment
+files, optionally head+tail-sampled per request
+(:mod:`repro.obs.sampling`), and a hard per-worker buffered-event cap
+sheds whole request trees (with drop accounting) under overload. With no
+sampler/cap/drain the recorder behaves exactly as the append-only PR-6
+log.
 """
 from __future__ import annotations
 
 import json
 from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.sampling import is_anomaly_event
 
 # Categories whose events carry wall-clock measurements; excluded from the
 # deterministic export (and therefore from replay bit-identity checks).
@@ -46,12 +58,34 @@ _NAME, _CAT, _PH, _TS, _DUR, _WID, _KEY, _ARGS = range(8)
 
 
 class TraceRecorder:
-    """Append-only event log with deterministic per-request keys."""
+    """Append-only event log with deterministic per-request keys.
 
-    def __init__(self, label: str = "run"):
+    ``sampler`` (a :class:`repro.obs.sampling.TraceSampler`) and
+    ``max_buffered_per_worker`` opt the recorder into streaming semantics:
+    sampling is applied per closed request tree at :meth:`drain` time (so
+    the tail-lane anomaly flag is known), and the cap sheds whole request
+    trees at record time once a worker's buffered events exceed it. Both
+    default off — a bare recorder keeps everything, exactly as before.
+    """
+
+    def __init__(self, label: str = "run", *, sampler=None,
+                 max_buffered_per_worker: Optional[int] = None):
         self.label = label
         self.events: List[tuple] = []
         self._next_key = 0
+        self.sampler = sampler
+        self.max_buffered_per_worker = max_buffered_per_worker
+        # Streaming state: closed request trees awaiting drain, anomalous
+        # keys (always-keep lane), shed keys (cap overflow), per-worker
+        # buffered-event counts, and drop accounting.
+        self._closed: set = set()
+        self._anomaly: set = set()
+        self._shed: set = set()
+        self._buffered: Dict[int, int] = {}
+        self.peak_buffered = 0
+        self.stats = {"events": 0, "dropped_cap": 0, "dropped_sampled": 0,
+                      "requests_closed": 0, "requests_sampled_out": 0,
+                      "requests_shed": 0}
 
     # -- request identity ----------------------------------------------------
 
@@ -68,19 +102,102 @@ class TraceRecorder:
 
     # -- recording -----------------------------------------------------------
 
+    def _record(self, name: str, cat: str, ph: str, ts: float, dur: float,
+                wid: int, key: Optional[int], args: Optional[dict]) -> None:
+        """Single recording funnel: cap shedding, close/anomaly marking."""
+        self.stats["events"] += 1
+        if key is not None:
+            if key in self._shed:
+                self.stats["dropped_cap"] += 1
+                return
+            cap = self.max_buffered_per_worker
+            if cap is not None and self._buffered.get(wid, 0) >= cap:
+                # Hard cap: shed this request's tree (already-buffered
+                # events of the key are discarded at the next drain).
+                self._shed.add(key)
+                self._closed.discard(key)
+                self._anomaly.discard(key)
+                self.stats["requests_shed"] += 1
+                self.stats["dropped_cap"] += 1
+                return
+            if name == "reject" or (name == "request" and ph == "X"):
+                # Tree complete: a rejection is a single-instant tree, a
+                # root span is the finalize. Flushable at the next drain.
+                self._closed.add(key)
+                self.stats["requests_closed"] += 1
+            if is_anomaly_event(name, args):
+                self._anomaly.add(key)
+        self.events.append((name, cat, ph, ts, dur, wid, key, args))
+        self._buffered[wid] = self._buffered.get(wid, 0) + 1
+        if len(self.events) > self.peak_buffered:
+            self.peak_buffered = len(self.events)
+
     def instant(self, name: str, cat: str, t: float, *, wid: int = 0,
                 key: Optional[int] = None, args: Optional[dict] = None):
-        self.events.append((name, cat, "i", t, 0.0, wid, key, args))
+        self._record(name, cat, "i", t, 0.0, wid, key, args)
 
     def span(self, name: str, cat: str, t0: float, t1: float, *,
              wid: int = 0, key: Optional[int] = None,
              args: Optional[dict] = None):
-        self.events.append((name, cat, "X", t0, max(t1 - t0, 0.0), wid, key,
-                            args))
+        self._record(name, cat, "X", t0, max(t1 - t0, 0.0), wid, key, args)
+
+    def counter(self, name: str, t: float, value: float, *,
+                wid: int = 0) -> None:
+        """One sample of a Perfetto counter track (``ph: "C"``) — e.g. the
+        budget ledger's effective lambda or a worker's queue depth."""
+        self._record(name, "counter", "C", t, 0.0, wid, None,
+                     {"value": float(value)})
 
     def scoped(self, wid: int) -> "ScopedTrace":
         """A view stamping ``wid`` on every event (shared event log)."""
         return ScopedTrace(self, wid)
+
+    # -- streaming drain ------------------------------------------------------
+
+    def drain(self, force: bool = False) -> List[tuple]:
+        """Remove and return the flushable events.
+
+        Flushable = runtime-scope events (no request key) + events of
+        *closed* request trees that survive sampling (anomalous trees are
+        always kept, shed trees are always dropped). ``force=True`` also
+        drains open trees (end of run) — unsampled, since an open tree
+        never finished deciding its tail. Buffered memory after a drain is
+        bounded by in-flight requests, not run length.
+        """
+        drop = set()
+        if self.sampler is not None:
+            drop = {k for k in self._closed
+                    if k not in self._anomaly and not self.sampler.keep(k)}
+            self.stats["requests_sampled_out"] += len(drop)
+        out: List[tuple] = []
+        kept: List[tuple] = []
+        for e in self.events:
+            key = e[_KEY]
+            if key is None:
+                out.append(e)
+            elif key in self._shed:
+                self.stats["dropped_cap"] += 1
+            elif key in drop:
+                self.stats["dropped_sampled"] += 1
+            elif force or key in self._closed:
+                out.append(e)
+            else:
+                kept.append(e)
+        self.events = kept
+        # Shed keys stay tracked (late events of a shed tree must keep
+        # dropping); closed/anomaly bookkeeping for drained trees is done.
+        self._closed.clear()
+        self._anomaly = {k for k in self._anomaly if k not in drop}
+        if force:
+            self._anomaly.clear()
+        self._buffered = {}
+        for e in kept:
+            self._buffered[e[_WID]] = self._buffered.get(e[_WID], 0) + 1
+        return out
+
+    @property
+    def drop_stats(self) -> Dict[str, int]:
+        return dict(self.stats)
 
     # -- rollup --------------------------------------------------------------
 
@@ -103,37 +220,8 @@ class TraceRecorder:
         the document is a pure function of the seeded virtual-clock run.
         Timestamps are microseconds (virtual seconds * 1e6).
         """
-        events = []
-        wids = set()
-        order = sorted(range(len(self.events)),
-                       key=lambda i: (self.events[i][_TS],
-                                      self.events[i][_WID], i))
-        for i in order:
-            name, cat, ph, ts, dur, wid, key, args = self.events[i]
-            if not include_wall and cat in WALL_CATS:
-                continue
-            wids.add(wid)
-            ev = {
-                "name": name, "cat": cat, "ph": ph,
-                "ts": ts * 1e6, "pid": wid,
-                "tid": 0 if key is None else key + 1,
-            }
-            if ph == "X":
-                ev["dur"] = dur * 1e6
-            if ph == "i":
-                ev["s"] = "t"           # instant scope: thread
-            if args:
-                ev["args"] = args
-            events.append(ev)
-        meta = [{"name": "process_name", "ph": "M", "pid": wid, "tid": 0,
-                 "args": {"name": f"worker {wid}"}}
-                for wid in sorted(wids)]
-        return {
-            "traceEvents": meta + events,
-            "displayTimeUnit": "ms",
-            "otherData": {"label": self.label,
-                          "deterministic": not include_wall},
-        }
+        return build_trace_doc(self.events, label=self.label,
+                               include_wall=include_wall)
 
     def to_json(self, include_wall: bool = False) -> str:
         """Canonical serialization — byte-comparable across replays."""
@@ -162,12 +250,67 @@ class ScopedTrace:
         return self.recorder.ensure_key(req)
 
     def instant(self, name, cat, t, *, key=None, args=None):
-        self.recorder.events.append((name, cat, "i", t, 0.0, self.wid, key,
-                                     args))
+        self.recorder._record(name, cat, "i", t, 0.0, self.wid, key, args)
 
     def span(self, name, cat, t0, t1, *, key=None, args=None):
-        self.recorder.events.append((name, cat, "X", t0,
-                                     max(t1 - t0, 0.0), self.wid, key, args))
+        self.recorder._record(name, cat, "X", t0, max(t1 - t0, 0.0),
+                              self.wid, key, args)
+
+    def counter(self, name, t, value):
+        self.recorder.counter(name, t, value, wid=self.wid)
+
+
+# -- export helpers -----------------------------------------------------------
+
+
+def build_trace_doc(events: Sequence[tuple], *, label: str = "run",
+                    include_wall: bool = False,
+                    other: Optional[dict] = None) -> Dict:
+    """Build a Chrome trace-event document from raw event tuples.
+
+    Shared by :meth:`TraceRecorder.chrome_trace` (whole buffer) and the
+    streaming flusher (one drained batch per segment). Events are sorted by
+    (ts, wid, arrival index) so the output is a pure function of the event
+    set, and ``process_name`` metadata rows are emitted for every worker
+    seen in *this* document.
+    """
+    out = []
+    wids = set()
+    order = sorted(range(len(events)),
+                   key=lambda i: (events[i][_TS], events[i][_WID], i))
+    for i in order:
+        name, cat, ph, ts, dur, wid, key, args = events[i]
+        if not include_wall and cat in WALL_CATS:
+            continue
+        wids.add(wid)
+        ev = {
+            "name": name, "cat": cat, "ph": ph,
+            "ts": ts * 1e6, "pid": wid,
+            "tid": 0 if key is None else key + 1,
+        }
+        if ph == "X":
+            ev["dur"] = dur * 1e6
+        if ph == "i":
+            ev["s"] = "t"               # instant scope: thread
+        if args:
+            ev["args"] = args
+        out.append(ev)
+    meta = [{"name": "process_name", "ph": "M", "pid": wid, "tid": 0,
+             "args": {"name": f"worker {wid}"}}
+            for wid in sorted(wids)]
+    other_data = {"label": label, "deterministic": not include_wall}
+    if other:
+        other_data.update(other)
+    return {
+        "traceEvents": meta + out,
+        "displayTimeUnit": "ms",
+        "otherData": other_data,
+    }
+
+
+def trace_doc_to_json(doc: Dict) -> str:
+    """Canonical serialization — byte-comparable across replays."""
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
 
 
 # -- validation ---------------------------------------------------------------
@@ -190,11 +333,17 @@ def validate_chrome_trace(doc) -> List[str]:
         for k in _REQUIRED:
             if k not in ev:
                 problems.append(f"event {i} ({ev.get('name')}): missing {k!r}")
-        if ev.get("ph") not in ("X", "i"):
+        if ev.get("ph") not in ("X", "i", "C"):
             problems.append(f"event {i}: unknown ph {ev.get('ph')!r}")
         if ev.get("ph") == "X" and not (
                 isinstance(ev.get("dur"), (int, float)) and ev["dur"] >= 0):
             problems.append(f"event {i} ({ev.get('name')}): X without dur>=0")
+        if ev.get("ph") == "C":
+            args = ev.get("args")
+            if not (isinstance(args, dict) and args and all(
+                    isinstance(v, (int, float)) for v in args.values())):
+                problems.append(f"event {i} ({ev.get('name')}): C counter "
+                                "without numeric args")
         if not isinstance(ev.get("ts"), (int, float)):
             problems.append(f"event {i}: non-numeric ts")
     return problems
@@ -234,8 +383,20 @@ def validate_span_tree(doc, eps_us: float = 0.5) -> List[str]:
     admission -> legs -> finalize: at least one admit event, all events
     inside the root interval, completed roots with >= 1 leg span, legs
     time-ordered and non-overlapping, and per-leg queue_wait spans.
+
+    Legs carrying a ``gen`` arg (span link) must resolve to a runtime-scope
+    ``generate`` micro-batch span on the same worker whose interval lies
+    inside the leg's. Legs without the arg are skipped — hand-built traces
+    and pre-link documents stay valid.
     """
     problems: List[str] = []
+    gen_spans: Dict[Tuple[int, int], Dict] = {}
+    for ev in doc.get("traceEvents", ()):
+        if (ev.get("ph") == "X" and ev.get("name") == "generate"
+                and ev.get("tid", 0) == 0):
+            gen = (ev.get("args") or {}).get("gen")
+            if gen is not None:
+                gen_spans[(ev["pid"], gen)] = ev
     for tid, t in sorted(request_trees(doc).items()):
         root = t["root"]
         if root is None:
@@ -263,6 +424,25 @@ def validate_span_tree(doc, eps_us: float = 0.5) -> List[str]:
             if prev_end is not None and leg["ts"] < prev_end - eps_us:
                 problems.append(f"request {tid}: overlapping leg spans")
             prev_end = leg["ts"] + leg["dur"]
+            gen = (leg.get("args") or {}).get("gen")
+            if gen is None:
+                continue
+            src = gen_spans.get((leg["pid"], gen))
+            if src is None:
+                problems.append(f"request {tid}: leg links gen={gen} but no "
+                                f"generate span on worker {leg['pid']}")
+                continue
+            if (src["ts"] < leg["ts"] - eps_us or
+                    src["ts"] + src["dur"] > prev_end + eps_us):
+                problems.append(
+                    f"request {tid}: linked generate span gen={gen} "
+                    f"[{src['ts']:.1f},{src['ts'] + src['dur']:.1f}]us "
+                    f"outside leg [{leg['ts']:.1f},{prev_end:.1f}]us")
+            lm = (leg.get("args") or {}).get("member")
+            gm = (src.get("args") or {}).get("member")
+            if lm is not None and gm is not None and lm != gm:
+                problems.append(f"request {tid}: leg member {lm!r} != "
+                                f"linked generate member {gm!r}")
         n_waits = sum(e["name"] == "queue_wait" for e in t["events"])
         if t["legs"] and n_waits < len(t["legs"]):
             problems.append(f"request {tid}: {len(t['legs'])} legs but only "

@@ -138,6 +138,51 @@ def register_scheduler_metrics(reg: MetricsRegistry, sched,
             fn=_by_leg)
 
 
+def register_slo_metrics(reg: MetricsRegistry, tracker, clock_fn,
+                         labels=()) -> None:
+    """Burn-rate / firing-state series of an :class:`SLOTracker`.
+    ``clock_fn() -> now`` supplies the virtual time the rolling windows
+    are evaluated at."""
+    reg.counter("slo_alerts_total", "SLO alert transitions", labels=labels,
+                fn=lambda: tracker.alerts_total)
+    reg.multi_gauge(
+        "slo_burn_rate_short", "error-budget burn over the short window",
+        "slo", labels=labels,
+        fn=lambda: {s.name: s.burns(clock_fn())["short"]
+                    for s in tracker.slos})
+    reg.multi_gauge(
+        "slo_burn_rate_long", "error-budget burn over the long window",
+        "slo", labels=labels,
+        fn=lambda: {s.name: s.burns(clock_fn())["long"]
+                    for s in tracker.slos})
+    reg.multi_gauge(
+        "slo_firing", "1 = multi-window alert condition active", "slo",
+        labels=labels,
+        fn=lambda: {s.name: float(s.firing) for s in tracker.slos})
+
+
+def register_stream_metrics(reg: MetricsRegistry, flusher,
+                            labels=()) -> None:
+    """Segment/drop accounting of an :class:`ObsFlusher` + its recorder."""
+    reg.counter("obs_segments_total", "segment flushes written",
+                labels=labels, fn=lambda: flusher.seq)
+    rec = flusher.recorder
+    if rec is not None:
+        reg.gauge("obs_buffered_events", "events buffered in the recorder",
+                  labels=labels, fn=lambda: rec.n_events)
+        reg.gauge("obs_peak_buffered_events", "high-water buffered events",
+                  labels=labels, fn=lambda: rec.peak_buffered)
+        reg.counter("obs_dropped_sampled_total",
+                    "events dropped by trace sampling", labels=labels,
+                    fn=lambda: rec.stats["dropped_sampled"])
+        reg.counter("obs_dropped_cap_total",
+                    "events dropped by the per-worker cap", labels=labels,
+                    fn=lambda: rec.stats["dropped_cap"])
+        reg.counter("obs_requests_shed_total",
+                    "request trees shed by the cap", labels=labels,
+                    fn=lambda: rec.stats["requests_shed"])
+
+
 def register_plane_metrics(reg: MetricsRegistry, plane) -> None:
     """Fleet-level series: per-worker scheduler metrics (labelled
     ``worker=<wid>``), worker liveness, the coordinator's sync counters,

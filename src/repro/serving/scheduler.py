@@ -22,6 +22,7 @@ can be overridden with a model for fully deterministic tests.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
@@ -88,7 +89,8 @@ class MicroBatchScheduler:
                  clock: Optional[SimClock] = None,
                  service_time: Optional[Callable[[str, int, float], float]]
                  = None,
-                 adapter=None, cascade=None, tracer=None):
+                 adapter=None, cascade=None, tracer=None, slo=None,
+                 flusher=None):
         self.engine = engine
         self.config = config or SchedulerConfig()
         self.queue = queue or AdmissionQueue(self.config.queue_capacity)
@@ -116,6 +118,19 @@ class MicroBatchScheduler:
                 engine.on_swap = lambda version: tracer.instant(
                     "router_swap", "online", self.clock.now,
                     args={"version": version})
+        # SLO monitors (repro.obs.slo.SLOTracker): every finalized request
+        # is observed once, and burn rates are re-evaluated at the end of
+        # each dispatch round (the tracker throttles itself).
+        self.slo = slo
+        if slo is not None and slo.tracer is None:
+            slo.tracer = tracer
+        # Streaming flusher (repro.obs.stream.ObsFlusher): run_trace ticks
+        # it on the virtual clock; the multi-worker plane drives its own.
+        self.flusher = flusher
+        # Perfetto counter tracks are emitted on value *change* only —
+        # a flat series costs one event, not one per tick.
+        self._ctr_depth: Optional[int] = None
+        self._ctr_lam: Optional[float] = None
         # Online adaptation (repro.online.OnlineAdapter): overrides the
         # scoring-step argmax with the exploration policy and consumes
         # served outcomes after every dispatch round.
@@ -168,6 +183,26 @@ class MicroBatchScheduler:
             return wall_s
         return self.service_time(kind, n, wall_s)
 
+    def note_queue_depth(self) -> None:
+        """Sample queue depth into telemetry (+ a Perfetto counter track on
+        change). The single depth-sampling entry point for every host loop
+        (run_trace, the plane's worker steps)."""
+        depth = self.queue.depth
+        self.telemetry.record_queue_depth(self.clock.now, depth)
+        if self.tracer is not None and depth != self._ctr_depth:
+            self._ctr_depth = depth
+            self.tracer.counter("queue_depth", self.clock.now, depth)
+
+    def _observe_slo(self, r: Request, *, missed: bool) -> None:
+        quality = None
+        if not math.isnan(r.best_q):
+            quality = r.best_q
+        elif r.leg_quality:
+            quality = r.leg_quality[-1]
+        self.slo.observe_request(
+            r.finish_s, e2e_s=r.e2e_latency_s, missed=missed,
+            quality=quality, cost=r.cum_cost if r.cum_cost else r.cost)
+
     def dispatch(self) -> List[Request]:
         """Expire, score once, coalesce, generate. Returns served requests.
 
@@ -198,15 +233,22 @@ class MicroBatchScheduler:
                                 args={"status": "done", "legs": r.leg,
                                       "rescued": True,
                                       "cum_cost": r.cum_cost})
+                if self.slo is not None:
+                    self._observe_slo(r, missed=True)
                 served.append(r)
-            elif tracer is not None:
-                tracer.span("request", "request", r.arrival_s, r.finish_s,
-                            key=r.trace_key,
-                            args={"status": "expired", "legs": r.leg})
+            else:
+                if tracer is not None:
+                    tracer.span("request", "request", r.arrival_s,
+                                r.finish_s, key=r.trace_key,
+                                args={"status": "expired", "legs": r.leg})
+                if self.slo is not None:
+                    self._observe_slo(r, missed=True)
         # Hot pool membership can mutate the pool between rounds.
         self.telemetry.sync_members([m.name for m in self.engine.pool])
         batch = self.queue.pop(self.config.score_batch)
         if not batch:
+            if self.slo is not None:
+                self.slo.check(self.clock.now)
             return served
 
         lam = self.engine.lam
@@ -218,6 +260,9 @@ class MicroBatchScheduler:
                     args={"lam": lam,
                           "action": self.governor.last_action,
                           "utilization": self.governor.last_utilization})
+        if tracer is not None and lam != self._ctr_lam:
+            self._ctr_lam = lam
+            tracer.counter("budget_lam", self.clock.now, lam)
         self.telemetry.record_lambda(self.clock.now, lam)
 
         t_score0 = self.clock.now
@@ -294,10 +339,16 @@ class MicroBatchScheduler:
                 delivered = sum(min(len(o), r.max_new)
                                 for o, r in zip(outs, chunk))
                 self.telemetry.record_generate(mi, len(chunk), delivered, cost)
+                # Span-link id: this worker's generate micro-batch sequence
+                # number (unique per pid — telemetry is per-worker). Leg
+                # spans carry the same id so tooling can jump from a
+                # request's leg to the micro-batch that served it.
+                gen_id = self.telemetry.generate_calls
                 if tracer is not None:
                     tracer.span("generate", "sched", t_gen0, self.clock.now,
                                 args={"member": self.engine.pool[mi].name,
-                                      "n": len(chunk), "cost": cost})
+                                      "n": len(chunk), "cost": cost,
+                                      "gen": gen_id})
                 per_req_cost = cost / len(chunk)
                 for r, o in zip(chunk, outs):
                     r.member = mi
@@ -314,7 +365,7 @@ class MicroBatchScheduler:
                             key=r.trace_key,
                             args={"leg": r.leg,
                                   "member": self.engine.pool[mi].name,
-                                  "cost": per_req_cost})
+                                  "cost": per_req_cost, "gen": gen_id})
                     if self.cascade is None:
                         r.status = DONE
                         self.telemetry.finalize_request(r)
@@ -325,6 +376,8 @@ class MicroBatchScheduler:
                                 args={"status": "done", "legs": r.leg,
                                       "member": self.engine.pool[mi].name,
                                       "cum_cost": r.cum_cost})
+                        if self.slo is not None:
+                            self._observe_slo(r, missed=False)
                         served.append(r)
                         outcomes.append(r)
                         continue
@@ -362,6 +415,8 @@ class MicroBatchScheduler:
                             key=r.trace_key,
                             args={"status": "done", "legs": r.leg,
                                   "member": name, "cum_cost": r.cum_cost})
+                    if self.slo is not None:
+                        self._observe_slo(r, missed=False)
                     served.append(r)
         if self.adapter is not None:
             if outcomes:
@@ -370,6 +425,8 @@ class MicroBatchScheduler:
                 self.adapter.observe(outcomes, self.clock.now)
             else:
                 self.adapter.tick(self.clock.now)
+        if self.slo is not None:
+            self.slo.check(self.clock.now)
         return served
 
     # -- open-loop trace replay ---------------------------------------------
@@ -386,7 +443,9 @@ class MicroBatchScheduler:
         while pending or self.queue.depth:
             while pending and pending[0].arrival_s <= self.clock.now:
                 self.queue.offer(pending.popleft(), self.clock.now)
-            self.telemetry.record_queue_depth(self.clock.now, self.queue.depth)
+            self.note_queue_depth()
+            if self.flusher is not None:
+                self.flusher.maybe_flush(self.clock.now)
             if self.should_dispatch(flush=not pending):
                 self.dispatch()
                 continue
@@ -408,6 +467,10 @@ class MicroBatchScheduler:
             # of the trace still commit (later ones expire when the stage
             # has a timeout configured, else stay pending).
             self.adapter.tick(self.clock.now)
+        if self.slo is not None:
+            # Forced end-of-trace evaluation: a run shorter than the check
+            # throttle must still surface its alert transitions.
+            self.slo.check(self.clock.now, force=True)
         self.telemetry.rejected = self.queue.rejected
         self.telemetry.expired = self.queue.expired
         return self.telemetry.summary(self.clock.now - t_start)

@@ -8,10 +8,62 @@ so memory stays O(buckets) at any traffic volume).
 from __future__ import annotations
 
 import math
-from collections import deque
-from typing import Deque, Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+class BoundedSeries:
+    """Bounded (t, value) series with deterministic stride decimation.
+
+    Keeps every ``stride``-th appended sample; when the kept set reaches
+    ``cap`` points, every other point is dropped and the stride doubles.
+    Unlike a ring buffer (the old ``deque(maxlen=...)``), coverage always
+    spans the *whole* run — the head is thinned, never discarded — at
+    resolution uniform in append index. The kept set is a pure function of
+    the append sequence: replay-deterministic, no RNG, no wall clock.
+    Memory is O(cap) at any traffic volume.
+    """
+
+    def __init__(self, cap: int = 4096):
+        if cap < 2:
+            raise ValueError("cap must be >= 2")
+        self.cap = int(cap)
+        self.stride = 1
+        self.n_seen = 0
+        self._points: List[Tuple[float, float]] = []
+
+    def append(self, t: float, value: float) -> None:
+        if self.n_seen % self.stride == 0:
+            self._points.append((t, value))
+            if len(self._points) >= self.cap:
+                self._points = self._points[::2]
+                self.stride *= 2
+        self.n_seen += 1
+
+    def merge(self, other: "BoundedSeries") -> None:
+        """Fold another series in: union sorted by time, re-decimated to
+        this series' cap (multi-worker rollup keeps whole-run coverage)."""
+        pts = sorted(self._points + list(other._points))
+        stride = max(self.stride, other.stride)
+        while len(pts) >= self.cap:
+            pts = pts[::2]
+            stride *= 2
+        self._points = pts
+        self.stride = stride
+        self.n_seen += other.n_seen
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    def __iter__(self):
+        return iter(self._points)
+
+    def __getitem__(self, i):
+        return self._points[i]
+
+    def __bool__(self) -> bool:
+        return bool(self._points)
 
 
 class Histogram:
@@ -110,9 +162,11 @@ class Telemetry:
         self.escalations = 0
         self.finalized_by_leg: list = []      # requests finalized after leg n
         self.double_finalize_blocked = 0      # idempotence guard trips
-        # Effective-lambda trace, bounded: enough to inspect governor
-        # behaviour without growing with traffic volume.
-        self.lam_trace: Deque[Tuple[float, float]] = deque(maxlen=4096)
+        # Bounded whole-run time series: effective lambda per dispatch
+        # round and queue depth per loop tick. Deterministically thinned,
+        # never ring-truncated — the start of the run stays inspectable.
+        self.lam_trace = BoundedSeries(cap=4096)
+        self.depth_trace = BoundedSeries(cap=4096)
 
     def sync_members(self, names: Sequence[str]) -> None:
         """Re-align per-member counters with the (hot-mutated) pool.
@@ -183,8 +237,8 @@ class Telemetry:
         self.routing_latency.merge(other.routing_latency)
         self.queue_wait.merge(other.queue_wait)
         self.e2e_latency.merge(other.e2e_latency)
-        merged = sorted(list(self.lam_trace) + list(other.lam_trace))
-        self.lam_trace = deque(merged, maxlen=self.lam_trace.maxlen)
+        self.lam_trace.merge(other.lam_trace)
+        self.depth_trace.merge(other.depth_trace)
 
     @classmethod
     def rollup(cls, parts: Sequence["Telemetry"]) -> "Telemetry":
@@ -265,9 +319,10 @@ class Telemetry:
     def record_queue_depth(self, now: float, depth: int) -> None:
         self.max_queue_depth = max(self.max_queue_depth, depth)
         self.depth_samples += 1
+        self.depth_trace.append(now, float(depth))
 
     def record_lambda(self, now: float, lam: float) -> None:
-        self.lam_trace.append((now, lam))
+        self.lam_trace.append(now, float(lam))
 
     # -- reporting ----------------------------------------------------------
 

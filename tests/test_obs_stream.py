@@ -1,0 +1,577 @@
+"""Streaming observability tests: deterministic head+tail sampling, the
+bounded recorder (cap shedding + drop accounting), rotating segment
+flushes on the virtual clock, segment concatenation, SLO burn-rate
+monitors, counter tracks, gen span links, and the bounded telemetry
+series.
+
+The contract under test throughout: every streaming decision — keep/drop,
+segment boundary, alert transition — is a pure function of the seeded
+virtual-clock run, so a replay reproduces identical segment *bytes*; and
+anomalous request trees (expired / rescued / escalated) survive any
+sample rate, with everything dropped showing up in the drop accounting
+rather than vanishing.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.obs import (
+    ObsFlusher,
+    TraceRecorder,
+    TraceSampler,
+    concat_dir,
+    is_anomaly_event,
+    request_trees,
+    validate_chrome_trace,
+    validate_span_tree,
+)
+from repro.obs.slo import (
+    BurnRateSLO,
+    RollingWindow,
+    SLOTracker,
+    SpendBurnSLO,
+    build_slo_tracker,
+)
+from repro.obs.stream import segment_paths
+from repro.serving import MicroBatchScheduler, Request, SchedulerConfig
+from repro.serving.telemetry import BoundedSeries
+
+
+def req(text="q", arrival=0.0, deadline=None, n_prompt=4, max_new=2):
+    return Request(text=text, prompt=np.zeros(n_prompt, np.int32),
+                   max_new=max_new, arrival_s=arrival, deadline_s=deadline)
+
+
+class FakeMember:
+    def __init__(self, name, cost_rate):
+        self.name = name
+        self.cost_rate = cost_rate
+
+
+class FakeEngine:
+    def __init__(self, cost_rates=(1.0, 10.0), quality=(0.5, 1.0)):
+        self.pool = [FakeMember(f"m{i}", c) for i, c in enumerate(cost_rates)]
+        self.quality = np.asarray(quality, np.float64)
+        self.lam = 100.0
+
+    def score_texts(self, texts):
+        b = len(texts)
+        s = np.tile(self.quality, (b, 1))
+        c = np.tile([m.cost_rate for m in self.pool], (b, 1))
+        return s, c
+
+    def choose(self, s_hat, c_hat, lam=None):
+        lam = self.lam if lam is None else lam
+        return np.argmax(s_hat * np.exp(-c_hat / lam), axis=-1)
+
+    def generate_member(self, mi, prompts, max_new=8):
+        outs = [np.zeros(max_new, np.int32) for _ in prompts]
+        return outs, self.pool[mi].cost_rate * len(prompts)
+
+
+def run_streaming(out_dir, *, n=24, rate=0.25, head=4, cap=None,
+                  scrape_every=0.002, tight_deadlines=(), slo=None):
+    """One seeded streaming run: recorder + sampler (+cap) + flusher."""
+    rec = TraceRecorder(label="stream-test",
+                        sampler=TraceSampler(rate, seed=0, head=head),
+                        max_buffered_per_worker=cap)
+    flusher = ObsFlusher(out_dir, recorder=rec, scrape_every_s=scrape_every,
+                         label="stream-test")
+    sched = MicroBatchScheduler(
+        FakeEngine(), SchedulerConfig(score_batch=8, max_batch=4),
+        service_time=lambda kind, n_, wall: 1e-3,
+        tracer=rec.scoped(0), slo=slo, flusher=flusher)
+    reqs = []
+    for i in range(n):
+        deadline = 0.002 if i in tight_deadlines else None
+        reqs.append(req(text=str(i), arrival=i * 1e-4, deadline=deadline))
+    summary = sched.run_trace(reqs)
+    flusher.finalize(sched.clock.now)
+    return rec, flusher, sched, summary
+
+
+# ---------------------------------------------------------------------------
+# TraceSampler properties
+# ---------------------------------------------------------------------------
+
+class TestTraceSampler:
+    @given(st.integers(0, 5000), st.floats(0.0, 1.0))
+    @settings(max_examples=60, deadline=None)
+    def test_keep_is_pure_function_of_seed_key_rate(self, key, rate):
+        a = TraceSampler(rate, seed=7, head=0)
+        b = TraceSampler(rate, seed=7, head=0)
+        assert a.keep(key) == b.keep(key)
+
+    @given(st.integers(0, 5000))
+    @settings(max_examples=60, deadline=None)
+    def test_keep_monotone_in_rate(self, key):
+        """A request kept at a lower rate is kept at every higher rate —
+        raising --trace-sample only ever adds trees, never swaps them."""
+        rates = [0.0, 0.1, 0.25, 0.5, 0.9, 1.0]
+        kept = [TraceSampler(r, seed=3, head=0).keep(key) for r in rates]
+        assert kept == sorted(kept)   # False* then True*
+
+    @given(st.integers(0, 64))
+    @settings(max_examples=40, deadline=None)
+    def test_head_always_kept(self, head):
+        s = TraceSampler(0.0, seed=0, head=head)
+        assert all(s.keep(k) for k in range(head))
+        assert not any(s.keep(k) for k in range(head, head + 50))
+
+    def test_rate_extremes(self):
+        assert TraceSampler(1.0, head=0).keep_set(range(100)) == set(
+            range(100))
+        assert TraceSampler(0.0, head=0).keep_set(range(100)) == set()
+
+    def test_keep_fraction_tracks_rate(self):
+        for rate in (0.1, 0.25, 0.5, 0.75):
+            frac = len(TraceSampler(rate, seed=0, head=0).keep_set(
+                range(4000))) / 4000
+            assert abs(frac - rate) < 0.03
+
+    def test_seed_changes_keep_set(self):
+        keys = range(200)
+        a = TraceSampler(0.5, seed=0, head=0).keep_set(keys)
+        b = TraceSampler(0.5, seed=1, head=0).keep_set(keys)
+        assert a != b
+
+    def test_invalid_rate_rejected(self):
+        with pytest.raises(ValueError):
+            TraceSampler(1.5)
+
+    def test_anomaly_event_detection(self):
+        assert is_anomaly_event("readmit", None)
+        assert is_anomaly_event("expire", None)
+        assert is_anomaly_event("request", {"status": "expired"})
+        assert is_anomaly_event("request", {"status": "done",
+                                            "rescued": True})
+        assert not is_anomaly_event("request", {"status": "done"})
+        assert not is_anomaly_event("admit", None)
+
+
+# ---------------------------------------------------------------------------
+# Recorder streaming semantics (drain / cap / accounting)
+# ---------------------------------------------------------------------------
+
+class TestRecorderStreaming:
+    def close_tree(self, rec, key, t0):
+        rec.instant("admit", "queue", t0, key=key)
+        rec.span("leg", "request", t0, t0 + 0.01, key=key,
+                 args={"leg": 1, "member": "m0"})
+        rec.span("queue_wait", "queue", t0, t0 + 0.001, key=key,
+                 args={"leg": 1})
+        rec.span("request", "request", t0, t0 + 0.01, key=key,
+                 args={"status": "done", "legs": 1})
+
+    def test_drain_moves_closed_trees_only(self):
+        rec = TraceRecorder()
+        k0, k1 = rec.next_key(), rec.next_key()
+        self.close_tree(rec, k0, 0.0)
+        rec.instant("admit", "queue", 0.5, key=k1)   # open tree
+        rec.span("score_batch", "sched", 0.0, 0.01)  # runtime scope
+        out = rec.drain()
+        names = [e[0] for e in out]
+        assert names.count("request") == 1 and "score_batch" in names
+        assert rec.n_events == 1        # k1's admit still buffered
+        # Second drain with force flushes the open tree too.
+        out2 = rec.drain(force=True)
+        assert [e[0] for e in out2] == ["admit"] and rec.n_events == 0
+
+    def test_sampling_drops_with_accounting_anomaly_kept(self):
+        rec = TraceRecorder(sampler=TraceSampler(0.0, head=0))
+        k_plain, k_anom = rec.next_key(), rec.next_key()
+        self.close_tree(rec, k_plain, 0.0)
+        # Anomalous tree: expired root.
+        rec.instant("admit", "queue", 1.0, key=k_anom)
+        rec.span("request", "request", 1.0, 1.5, key=k_anom,
+                 args={"status": "expired", "legs": 0})
+        out = rec.drain()
+        keys = {e[6] for e in out}
+        assert keys == {k_anom}
+        assert rec.stats["requests_sampled_out"] == 1
+        assert rec.stats["dropped_sampled"] == 4
+        assert rec.n_events == 0
+
+    def test_cap_sheds_whole_trees_and_late_events(self):
+        rec = TraceRecorder(max_buffered_per_worker=6)
+        keys = [rec.next_key() for _ in range(4)]
+        for i, k in enumerate(keys):
+            rec.instant("admit", "queue", i * 0.1, key=k)
+            rec.span("queue_wait", "queue", i * 0.1, i * 0.1 + 0.01, key=k,
+                     args={"leg": 1})
+        # 8 events recorded against cap 6: trees opened after the cap was
+        # hit are shed whole.
+        assert rec.stats["requests_shed"] >= 1
+        shed = set(rec._shed)
+        assert shed
+        # Late events of a shed tree keep dropping.
+        before = rec.n_events
+        rec.span("request", "request", 0.0, 1.0, key=next(iter(shed)),
+                 args={"status": "done", "legs": 1})
+        assert rec.n_events == before
+        assert rec.stats["dropped_cap"] >= 2
+
+    def test_event_conservation_law(self):
+        """recorded == drained + still-buffered + dropped (cap + sampled)."""
+        rec = TraceRecorder(sampler=TraceSampler(0.3, seed=1, head=2),
+                            max_buffered_per_worker=16)
+        drained = 0
+        for i in range(40):
+            k = rec.next_key()
+            self.close_tree(rec, k, i * 0.1)
+            if i % 7 == 0:
+                drained += len(rec.drain())
+        drained += len(rec.drain(force=True))
+        s = rec.stats
+        assert s["events"] == (drained + rec.n_events + s["dropped_cap"]
+                               + s["dropped_sampled"])
+        assert s["requests_sampled_out"] > 0
+
+    def test_bare_recorder_unchanged(self):
+        rec = TraceRecorder()
+        self.close_tree(rec, rec.next_key(), 0.0)
+        assert rec.stats["dropped_cap"] == 0
+        assert rec.stats["dropped_sampled"] == 0
+        assert validate_span_tree(rec.chrome_trace()) == []
+
+    def test_counter_events_export_as_counter_tracks(self):
+        rec = TraceRecorder()
+        rec.counter("queue_depth", 0.0, 3)
+        rec.counter("queue_depth", 0.1, 5)
+        doc = rec.chrome_trace()
+        assert validate_chrome_trace(doc) == []
+        ctrs = [e for e in doc["traceEvents"] if e.get("ph") == "C"]
+        assert len(ctrs) == 2
+        assert ctrs[0]["args"] == {"value": 3.0}
+        assert ctrs[0]["tid"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Flusher: rotating segments, manifest, concat, replay byte-identity
+# ---------------------------------------------------------------------------
+
+class TestObsFlusher:
+    def test_segment_boundaries_pure_function_of_virtual_time(self, tmp_path):
+        rec = TraceRecorder()
+        fl = ObsFlusher(str(tmp_path), recorder=rec, scrape_every_s=1.0)
+        assert fl.maybe_flush(0.0) == 0      # first call arms
+        assert fl.maybe_flush(0.5) == 0
+        assert fl.maybe_flush(3.7) == 3      # catch-up: 1.0, 2.0, 3.0
+        assert fl.maybe_flush(3.8) == 0
+        assert fl.seq == 3
+
+    def test_requires_recorder_or_registry(self, tmp_path):
+        with pytest.raises(ValueError):
+            ObsFlusher(str(tmp_path))
+        with pytest.raises(ValueError):
+            ObsFlusher(str(tmp_path), recorder=TraceRecorder(),
+                       scrape_every_s=0.0)
+
+    def test_streaming_run_segments_concat_to_valid_trace(self, tmp_path):
+        out = str(tmp_path / "obs")
+        rec, fl, sched, summary = run_streaming(out, rate=1.0)
+        paths = segment_paths(out)
+        assert len(paths) >= 2               # actually rotated mid-run
+        for p in paths:                      # each segment valid standalone
+            with open(p) as f:
+                assert validate_chrome_trace(json.load(f)) == []
+        doc = concat_dir(out)
+        assert validate_chrome_trace(doc) == []
+        assert validate_span_tree(doc) == []
+        trees = request_trees(doc)
+        assert sum(t["root"] is not None for t in trees.values()) \
+            == summary["completed"] == 24
+        assert doc["otherData"]["segments"] == len(paths)
+        # Manifest bookkeeping matches the directory.
+        with open(os.path.join(out, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["trace_segments"] == [os.path.basename(p) for p in paths]
+        assert man["sampler"] == {"rate": 1.0, "seed": 0, "head": 4}
+
+    def test_replay_segments_byte_identical(self, tmp_path):
+        a, b = str(tmp_path / "a"), str(tmp_path / "b")
+        run_streaming(a, rate=0.25, tight_deadlines=range(16, 24))
+        run_streaming(b, rate=0.25, tight_deadlines=range(16, 24))
+        names = sorted(os.listdir(a))
+        assert names == sorted(os.listdir(b))
+        for n in names:
+            with open(os.path.join(a, n), "rb") as f:
+                blob_a = f.read()
+            with open(os.path.join(b, n), "rb") as f:
+                blob_b = f.read()
+            assert blob_a == blob_b, f"segment {n} differs across replays"
+
+    def test_anomalous_trees_survive_zero_sample_rate(self, tmp_path):
+        out = str(tmp_path / "obs")
+        rec, fl, sched, summary = run_streaming(
+            out, rate=0.0, head=0, tight_deadlines=range(12, 24))
+        assert summary["expired"] > 0
+        doc = concat_dir(out)
+        trees = request_trees(doc)
+        statuses = [t["root"]["args"]["status"] for t in trees.values()
+                    if t["root"] is not None]
+        # Every expired request retained; every plain "done" sampled out.
+        assert statuses.count("expired") == summary["expired"]
+        assert "done" not in statuses
+        assert rec.stats["requests_sampled_out"] > 0
+        assert doc["otherData"]["drops"]["requests_sampled_out"] \
+            == rec.stats["requests_sampled_out"]
+
+    def test_cap_bounds_recorder_memory(self, tmp_path):
+        out = str(tmp_path / "obs")
+        rec, fl, sched, summary = run_streaming(out, n=48, rate=1.0, cap=64)
+        assert rec.peak_buffered < 64 + 48       # cap + one tree's slack
+        # Unbounded replay of the same trace buffers far more.
+        rec2, *_ = run_streaming(str(tmp_path / "ub"), n=48, rate=1.0,
+                                 scrape_every=1e9)
+        assert rec2.peak_buffered > rec.peak_buffered
+        if rec.stats["requests_shed"]:
+            d = concat_dir(out)["otherData"]["drops"]
+            assert d["requests_shed"] == rec.stats["requests_shed"]
+
+    def test_counter_tracks_in_streamed_trace(self, tmp_path):
+        out = str(tmp_path / "obs")
+        run_streaming(out, rate=1.0)
+        doc = concat_dir(out)
+        ctr_names = {e["name"] for e in doc["traceEvents"]
+                     if e.get("ph") == "C"}
+        assert "queue_depth" in ctr_names
+        assert "budget_lam" in ctr_names
+
+    def test_gen_span_links_validate_and_catch_mismatch(self, tmp_path):
+        out = str(tmp_path / "obs")
+        run_streaming(out, rate=1.0)
+        doc = concat_dir(out)
+        legs = [e for e in doc["traceEvents"]
+                if e.get("name") == "leg" and e.get("ph") == "X"]
+        assert legs and all("gen" in e["args"] for e in legs)
+        assert validate_span_tree(doc) == []
+        # Tampered link: point one leg at a generate batch that is not its
+        # own — the validator must notice.
+        legs[0]["args"]["gen"] = 10 ** 9
+        assert any("gen" in p for p in validate_span_tree(doc))
+
+
+# ---------------------------------------------------------------------------
+# SLO window math + burn-rate alerting
+# ---------------------------------------------------------------------------
+
+class TestRollingWindow:
+    @given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=40))
+    @settings(max_examples=60, deadline=None)
+    def test_totals_match_naive_reference(self, times):
+        """Bucketed totals agree with a brute-force scan up to bucket-edge
+        granularity: every event inside (now - W, now] shifted by one
+        bucket width is counted, nothing older than W + width survives."""
+        w = RollingWindow(2.0, n_buckets=20)
+        for i, t in enumerate(times):
+            w.add(t, bad=i % 2, value=1.0)
+        now = max(times)
+        n, bad, val = w.totals(now)
+        width = w.width
+        lo_n = sum(1 for t in times if now - 2.0 + width < t <= now)
+        hi_n = sum(1 for t in times if now - 2.0 - width < t <= now + width)
+        assert lo_n <= n <= hi_n
+        assert val == float(n)
+
+    def test_out_of_order_adds_land_in_window(self):
+        w = RollingWindow(10.0)
+        w.add(9.0)
+        w.add(3.0)     # late arrival from a lagging worker
+        w.add(9.5)
+        assert w.totals(10.0)[0] == 3
+        assert w.totals(25.0)[0] == 0
+
+    def test_pruning_keeps_memory_bounded(self):
+        w = RollingWindow(1.0, n_buckets=10)
+        for i in range(10000):
+            w.add(i * 0.01)
+        assert len(w._buckets) < 30
+
+    def test_invalid_window_rejected(self):
+        with pytest.raises(ValueError):
+            RollingWindow(0.0)
+
+
+class TestBurnRateSLO:
+    def test_burn_is_bad_fraction_over_budget(self):
+        s = BurnRateSLO("deadline_miss", error_budget=0.1, short_s=1.0,
+                        long_s=12.0)
+        for i in range(10):
+            s.observe(float(i), bad=(i < 2))   # 20% bad overall
+        b = s.burns(10.0)
+        assert b["long"] == pytest.approx((2 / 10) / 0.1)
+
+    def test_multi_window_gating_resists_blips(self):
+        """A short bad blip after a long good stretch must not fire; a
+        sustained burn must."""
+        s = BurnRateSLO("deadline_miss", error_budget=0.05, short_s=1.0,
+                        long_s=12.0, threshold=1.0)
+        for i in range(110):
+            s.observe(i * 0.1, bad=False)      # 11s of clean traffic
+        for i in range(3):
+            s.observe(11.0 + i * 0.1, bad=True)
+        assert s.burns(11.3)["short"] >= 1.0   # blip spikes the short win
+        assert not s.evaluate(11.3)            # ...but long window holds
+        for i in range(60):
+            s.observe(11.3 + i * 0.1, bad=True)
+        assert s.evaluate(17.3)                # sustained: both windows over
+
+    def test_min_events_guard(self):
+        s = BurnRateSLO("x", error_budget=0.01, short_s=1.0, long_s=2.0,
+                        min_events=5)
+        s.observe(0.0, bad=True)
+        assert s.burns(0.5) == {"short": 0.0, "long": 0.0}
+
+    @given(st.floats(0.05, 1.0), st.integers(1, 30))
+    @settings(max_examples=40, deadline=None)
+    def test_all_bad_burn_is_budget_inverse(self, budget, n):
+        s = BurnRateSLO("x", error_budget=budget, short_s=1.0, long_s=4.0)
+        for i in range(n):
+            s.observe(i * 4.0 / max(n, 1) * 0.9, bad=True)
+        assert s.burns(3.6)["long"] == pytest.approx(1.0 / budget)
+
+    def test_spend_burn_tracks_rate_vs_budget(self):
+        s = SpendBurnSLO("spend", budget=100.0, window_s=10.0, short_s=1.0)
+        # Spend 200 over the 10s window: 2x the budgeted rate.
+        for i in range(10):
+            s.observe(i * 1.0 + 0.5, cost=20.0)
+        assert s.burns(10.0)["long"] == pytest.approx(2.0)
+        assert s.evaluate(10.0)
+
+
+class TestSLOTracker:
+    def test_alert_transitions_and_trace_instants(self):
+        rec = TraceRecorder()
+        s = BurnRateSLO("deadline_miss", error_budget=0.05, short_s=0.5,
+                        long_s=6.0)
+        tr = SLOTracker([s], tracer=rec, check_every_s=0.25)
+        for i in range(40):
+            tr.observe_request(i * 0.1, e2e_s=0.01, missed=True,
+                               quality=1.0, cost=0.0)
+        assert tr.check(4.0, force=True)
+        assert tr.firing() == ["deadline_miss"]
+        # Recovery: a long clean stretch clears both windows.
+        for i in range(400):
+            tr.observe_request(4.0 + i * 0.05, e2e_s=0.01, missed=False,
+                               quality=1.0, cost=0.0)
+        assert tr.check(24.0, force=True)
+        assert tr.firing() == []
+        states = [a["state"] for a in tr.alerts]
+        assert states == ["firing", "resolved"]
+        names = [e[0] for e in rec.events]
+        assert names.count("slo_alert") == 2
+
+    def test_check_is_throttled(self):
+        s = BurnRateSLO("x", error_budget=0.5, short_s=1.0, long_s=2.0)
+        tr = SLOTracker([s], check_every_s=1.0)
+        tr.check(0.0)
+        nxt = tr._next_check
+        tr.check(0.5)
+        assert tr._next_check == nxt
+
+    def test_build_slo_tracker(self):
+        assert build_slo_tracker() is None
+        tr = build_slo_tracker(p95_target_s=0.01, miss_rate_budget=0.02,
+                               quality_floor=0.5, spend_per_window=10.0,
+                               window_s=0.24)
+        assert [s.name for s in tr.slos] == [
+            "latency_p95", "deadline_miss", "quality_floor", "spend"]
+        assert tr.slos[0].short.window_s == pytest.approx(0.02)
+        assert tr.check_every_s == pytest.approx(0.01)
+
+    def test_scheduler_integration_fires_deadline_slo(self, tmp_path):
+        slo = build_slo_tracker(miss_rate_budget=0.01, window_s=0.12,
+                                threshold=1.0)
+        rec, fl, sched, summary = run_streaming(
+            str(tmp_path / "obs"), rate=1.0,
+            tight_deadlines=range(8, 24), slo=slo)
+        assert summary["expired"] > 0
+        assert any(a["slo"] == "deadline_miss" and a["state"] == "firing"
+                   for a in slo.alerts)
+        doc = concat_dir(str(tmp_path / "obs"))
+        assert any(e["name"] == "slo_alert" for e in doc["traceEvents"]
+                   if e.get("ph") == "i")
+
+    def test_slo_replay_determinism(self, tmp_path):
+        def run(sub):
+            slo = build_slo_tracker(miss_rate_budget=0.01, window_s=0.12)
+            run_streaming(str(tmp_path / sub), rate=1.0,
+                          tight_deadlines=range(8, 24), slo=slo)
+            return slo.alerts
+        assert run("a") == run("b")
+
+
+# ---------------------------------------------------------------------------
+# BoundedSeries (deterministically downsampled telemetry series)
+# ---------------------------------------------------------------------------
+
+class TestBoundedSeries:
+    def test_memory_bounded_coverage_whole_run(self):
+        s = BoundedSeries(cap=64)
+        for i in range(10000):
+            s.append(i * 0.001, float(i))
+        assert len(s) < 64
+        assert s.n_seen == 10000
+        # Whole-run coverage: the head survives decimation (a ring buffer
+        # would have discarded it) and the kept tail is recent.
+        assert s[0][0] == 0.0
+        assert s[-1][0] > 9.0
+        # Uniform resolution: consecutive kept points are one stride apart.
+        ts = [t for t, _ in s]
+        gaps = {round(b - a, 9) for a, b in zip(ts, ts[1:])}
+        assert len(gaps) == 1
+
+    def test_deterministic_replay(self):
+        def build():
+            s = BoundedSeries(cap=32)
+            for i in range(777):
+                s.append(i * 0.01, i % 17)
+            return list(s)
+        assert build() == build()
+
+    @given(st.integers(1, 2000))
+    @settings(max_examples=40, deadline=None)
+    def test_len_never_exceeds_cap(self, n):
+        s = BoundedSeries(cap=16)
+        for i in range(n):
+            s.append(float(i), 0.0)
+        assert len(s) <= 16
+        assert bool(s) is (n > 0)
+
+    def test_merge_spans_both_runs_and_stays_bounded(self):
+        a, b = BoundedSeries(cap=32), BoundedSeries(cap=32)
+        for i in range(500):
+            a.append(i * 0.01, 1.0)           # t in [0, 5)
+            b.append(5.0 + i * 0.01, 2.0)     # t in [5, 10)
+        a.merge(b)
+        assert len(a) < 32
+        assert a.n_seen == 1000
+        ts = [t for t, _ in a]
+        assert ts == sorted(ts)
+        assert ts[0] < 1.0 and ts[-1] > 9.0   # coverage spans both workers
+
+    def test_small_series_kept_exactly(self):
+        s = BoundedSeries(cap=4096)
+        for i in range(10):
+            s.append(float(i), float(-i))
+        assert list(s) == [(float(i), float(-i)) for i in range(10)]
+        assert s.stride == 1
+
+    def test_telemetry_uses_bounded_series(self):
+        from repro.serving.telemetry import Telemetry
+        te = Telemetry(["m0"])
+        for i in range(10000):
+            te.record_lambda(i * 1e-3, 50.0)
+            te.record_queue_depth(i * 1e-3, i % 7)
+        assert isinstance(te.lam_trace, BoundedSeries)
+        assert len(te.lam_trace) <= 4096
+        assert len(te.depth_trace) <= 4096
+        other = Telemetry(["m0"])
+        other.record_lambda(99.0, 10.0)
+        te.merge(other)
+        assert te.lam_trace.n_seen == 10001

@@ -1,0 +1,127 @@
+"""Diff two bench-artifact directories and fail on regressions.
+
+Each CI bench run archives ``BENCH_<suite>.json`` files (written by
+``benchmarks.run``); this tool compares the new run against the previous
+run's artifacts — the bench *trajectory* check that catches a perf slide
+between PRs that no single run's absolute gates would:
+
+    python tools/bench_diff.py reports/bench_prev reports/bench \\
+        --max-regress 0.10
+
+Failure conditions:
+
+  * a suite that previously passed its gates now fails one (named);
+  * a suite that previously ran clean now errors;
+  * a directional headline metric regressed by more than ``--max-regress``
+    (relative). Headlines declare their direction via
+    ``benchmarks.common.headline(..., direction="lower"|"higher")``;
+    undirected headlines are reported but never fail the diff.
+
+Suites with no baseline artifact are reported as new and pass (the first
+archived run seeds the trajectory). Stdlib-only: runs in CI without the
+repo on PYTHONPATH.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def load_reports(dirpath: str) -> Dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(dirpath, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                out[name] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: unreadable {path}: {e}")
+    return out
+
+
+def gate_map(report: dict) -> Dict[str, bool]:
+    return {g["name"]: bool(g["passed"]) for g in report.get("gates", ())}
+
+
+def headline_regression(prev: dict, new: dict,
+                        max_regress: float) -> Optional[Tuple[str, float]]:
+    """(description, relative regression) when the headline moved the wrong
+    way by more than ``max_regress``; None otherwise."""
+    hp, hn = prev.get("headline"), new.get("headline")
+    if not hp or not hn or hp.get("metric") != hn.get("metric"):
+        return None
+    direction = hn.get("direction") or hp.get("direction")
+    if direction not in ("higher", "lower"):
+        return None
+    pv, nv = hp.get("value"), hn.get("value")
+    if not isinstance(pv, (int, float)) or not isinstance(nv, (int, float)) \
+            or pv == 0:
+        return None
+    rel = (nv - pv) / abs(pv)
+    regress = rel if direction == "lower" else -rel
+    if regress > max_regress:
+        return (f"{hn['metric']} {pv:g} -> {nv:g} "
+                f"({regress * 100:+.1f}% worse, direction={direction})",
+                regress)
+    return None
+
+
+def diff(prev_dir: str, new_dir: str, max_regress: float) -> List[str]:
+    """Human-readable failure list ([] = trajectory clean)."""
+    prev, new = load_reports(prev_dir), load_reports(new_dir)
+    failures: List[str] = []
+    if not new:
+        return [f"no BENCH_*.json artifacts in {new_dir}"]
+    for name, rn in sorted(new.items()):
+        rp = prev.get(name)
+        if rp is None:
+            print(f"{name}: no baseline — seeding trajectory")
+            continue
+        if rn.get("error") and not rp.get("error"):
+            failures.append(f"{name}: new error: {rn['error']}")
+            continue
+        gp, gn = gate_map(rp), gate_map(rn)
+        for gname, passed in sorted(gn.items()):
+            if not passed and gp.get(gname, False):
+                failures.append(f"{name}: gate {gname} passed -> FAILED")
+        hr = headline_regression(rp, rn, max_regress)
+        if hr is not None:
+            failures.append(f"{name}: headline regressed: {hr[0]}")
+        else:
+            hp, hn = rp.get("headline"), rn.get("headline")
+            if hp and hn and hp.get("metric") == hn.get("metric"):
+                print(f"{name}: {hn['metric']} {hp.get('value'):g} -> "
+                      f"{hn.get('value'):g}")
+    for name in sorted(set(prev) - set(new)):
+        print(f"warning: suite {name} has a baseline but no new artifact")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("prev", help="baseline artifact dir (previous CI run)")
+    ap.add_argument("new", help="this run's artifact dir")
+    ap.add_argument("--max-regress", type=float, default=0.10,
+                    help="max allowed relative regression on directional "
+                         "headline metrics (default 0.10 = 10%%)")
+    args = ap.parse_args()
+
+    if not os.path.isdir(args.prev):
+        # First run on a fresh cache: nothing to diff against.
+        print(f"no baseline dir {args.prev} — seeding trajectory")
+        return 0
+    failures = diff(args.prev, args.new, args.max_regress)
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    if failures:
+        return 1
+    print("bench trajectory clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

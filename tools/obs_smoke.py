@@ -11,9 +11,16 @@ Checks:
   * the exported trace is schema-valid Chrome JSON and its span tree is
     well-formed — every request covered admission -> legs -> finalize,
     legs nested inside their request root, no overlapping legs;
+  * every cascade leg span links (via its ``gen`` arg) to the generate
+    micro-batch span that actually served it;
   * the run replays bit-identically: trace JSON and deterministic metrics
     snapshot are byte-equal across two fresh runs (virtual-clock
     timestamps and admission-order trace keys, no wall time anywhere);
+  * the same run in **streaming mode** (sampling 0.25 + per-worker cap +
+    rotating segment flushes) concatenates back into a valid trace that
+    retains 100%% of the escalated request trees, bounds the recorder's
+    peak buffer, and is segment-for-segment byte-identical across
+    replays;
   * artifacts land on disk for CI upload (--out-dir).
 
     PYTHONPATH=src python tools/obs_smoke.py [--out-dir reports/obs_smoke]
@@ -38,13 +45,17 @@ from repro.core.predictors import PREDICTORS
 from repro.core.router import PredictiveRouter
 from repro.obs import (
     MetricsRegistry,
+    ObsFlusher,
     TraceRecorder,
+    TraceSampler,
+    concat_dir,
     register_scheduler_metrics,
     request_trees,
     trace_summary,
     validate_chrome_trace,
     validate_span_tree,
 )
+from repro.obs.trace import trace_doc_to_json
 from repro.serving import (
     MicroBatchScheduler,
     Request,
@@ -103,8 +114,18 @@ def build_engine(rng):
     return RoutedEngine(router=router, pool=pool, lam=LAM)
 
 
-def run_traced():
-    """One seeded cascade run under the recorder; returns artifacts."""
+STREAM_RATE, STREAM_CAP, SCRAPE_S = 0.25, 4096, 2e-3
+
+
+def run_traced(stream_dir=None):
+    """One seeded cascade run under the recorder; returns artifacts.
+
+    With ``stream_dir`` set the run uses the full streaming stack —
+    deterministic head+tail sampling (rate ``STREAM_RATE``, head=0 so
+    sampling actually bites), a per-worker buffered-event cap, and
+    rotating segment flushes every ``SCRAPE_S`` virtual seconds — and the
+    returned trace JSON is the canonical concatenation of the segments.
+    """
     rng = np.random.default_rng(SEED)
     engine = build_engine(rng)
     easy = region_emb(rng, N_REQ // 2, +1.0)
@@ -126,7 +147,15 @@ def run_traced():
     emb_of = {r.text: e for r, e in zip(reqs, embs)}
     engine.embed = lambda texts: np.stack([emb_of[t] for t in texts])
 
-    recorder = TraceRecorder(label=f"obs-smoke-seed{SEED}")
+    label = f"obs-smoke-seed{SEED}"
+    if stream_dir is None:
+        recorder, flusher = TraceRecorder(label=label), None
+    else:
+        recorder = TraceRecorder(
+            label=label, sampler=TraceSampler(STREAM_RATE, seed=SEED, head=0),
+            max_buffered_per_worker=STREAM_CAP)
+        flusher = ObsFlusher(stream_dir, recorder=recorder,
+                             scrape_every_s=SCRAPE_S, label=label)
     registry = MetricsRegistry()
     coordinator = CascadeCoordinator(
         CascadePolicy(ladder, CascadeConfig(max_legs=3, beta=1.0)),
@@ -134,10 +163,15 @@ def run_traced():
     sched = MicroBatchScheduler(
         engine, SchedulerConfig(score_batch=16, max_batch=16),
         cascade=coordinator, service_time=lambda kind, n, wall: 1e-3,
-        tracer=recorder.scoped(0))
+        tracer=recorder.scoped(0), flusher=flusher)
     register_scheduler_metrics(registry, sched)
     summary = sched.run_trace(reqs)
-    return recorder.to_json(), registry.to_json(deterministic=True), summary
+    if flusher is not None:
+        flusher.finalize(sched.clock.now)
+        trace_json = trace_doc_to_json(concat_dir(stream_dir))
+    else:
+        trace_json = recorder.to_json()
+    return trace_json, registry.to_json(deterministic=True), summary, recorder
 
 
 def main() -> int:
@@ -147,9 +181,9 @@ def main() -> int:
     args = ap.parse_args()
 
     t0 = time.perf_counter()
-    trace1, metrics1, s1 = run_traced()
+    trace1, metrics1, s1, _ = run_traced()
     wall = time.perf_counter() - t0
-    trace2, metrics2, _ = run_traced()
+    trace2, metrics2, _, _ = run_traced()
 
     import json
     doc = json.loads(trace1)
@@ -162,12 +196,36 @@ def main() -> int:
         and any(e["name"] == "leg" for e in t["events"])
         and len(t["admits"]) >= 1
         for t in trees.values())
+    legs = [e for t in trees.values() for e in t["legs"]]
+    linked = legs and all("gen" in (e.get("args") or {}) for e in legs)
+
+    # Streaming mode: same seeded scenario through sampling + cap +
+    # rotating flushes, twice, into sibling segment dirs.
+    sdir1 = os.path.join(args.out_dir, "stream")
+    sdir2 = os.path.join(args.out_dir, "stream_replay")
+    st1, _, ss1, srec = run_traced(stream_dir=sdir1)
+    st2, _, _, _ = run_traced(stream_dir=sdir2)
+    sdoc = json.loads(st1)
+    s_schema = validate_chrome_trace(sdoc)
+    s_tree = validate_span_tree(sdoc)
+    s_trees = request_trees(sdoc)
+    # Escalated trees are anomalous (readmit instants): 100% retained.
+    readmits = sum(1 for t in s_trees.values() for e in t["events"]
+                   if e["name"] == "readmit")
+    n_kept = len(s_trees)
+    seg_identical = (
+        sorted(os.listdir(sdir1)) == sorted(os.listdir(sdir2))
+        and all(open(os.path.join(sdir1, n), "rb").read()
+                == open(os.path.join(sdir2, n), "rb").read()
+                for n in os.listdir(sdir1)))
 
     os.makedirs(args.out_dir, exist_ok=True)
     with open(os.path.join(args.out_dir, "trace.json"), "w") as f:
         f.write(trace1)
     with open(os.path.join(args.out_dir, "metrics.json"), "w") as f:
         f.write(metrics1)
+    with open(os.path.join(args.out_dir, "stream_trace.json"), "w") as f:
+        f.write(st1)
 
     checks = {
         "schema-valid chrome trace": not schema_errors,
@@ -177,17 +235,32 @@ def main() -> int:
             and s1["completed"] == N_REQ,
         "cascade decisions traced":
             summ["by_name"].get("cascade_decision", 0) >= N_REQ,
+        "legs link their generate micro-batch span": bool(linked),
         "replay bit-identity (trace)": trace1 == trace2,
         "replay bit-identity (metrics)": metrics1 == metrics2,
+        "streaming concat schema+tree valid": not (s_schema or s_tree),
+        "streaming retains all escalated trees":
+            ss1["escalations"] > 0 and readmits == ss1["escalations"],
+        "streaming samples out non-anomalous trees":
+            0 < n_kept < N_REQ
+            and srec.stats["requests_sampled_out"] > 0,
+        "streaming recorder peak under cap":
+            srec.peak_buffered < STREAM_CAP
+            and srec.peak_buffered < summ["events"],
+        "streaming replay segment byte-identity":
+            seg_identical and st1 == st2,
         "trace under 5s": wall < 5.0,
     }
     for name, ok in checks.items():
         print(f"  [{'ok' if ok else 'FAIL'}] {name}")
-    for err in (schema_errors + tree_errors)[:8]:
+    for err in (schema_errors + tree_errors + s_schema + s_tree)[:8]:
         print(f"    error: {err}")
     print(f"{summ['events']} events  {summ['requests']} requests  "
           f"escalations {s1['escalations']}  wall {wall:.2f}s  "
           f"artifacts -> {args.out_dir}/")
+    print(f"streaming: {len(os.listdir(sdir1))} segment files  "
+          f"{n_kept}/{N_REQ} trees kept  peak buffered "
+          f"{srec.peak_buffered}  drops {srec.drop_stats}")
     ok = all(checks.values())
     print(f"obs smoke: {'OK' if ok else 'FAIL'}")
     return 0 if ok else 1

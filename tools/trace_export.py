@@ -14,6 +14,12 @@ JSON directly, or chrome://tracing). This CLI covers what a UI doesn't:
     # loading into Perfetto, pretty-printed for diffing
     PYTHONPATH=src python tools/trace_export.py trace.json \\
         --worker 0 --cat request,cascade -o filtered.json --pretty
+
+    # stitch a streaming run's rotated segments (--scrape-every) back
+    # into one valid Chrome trace; accepts the obs dir (reads its
+    # manifest) or explicit segment files in flush order
+    PYTHONPATH=src python tools/trace_export.py concat obs_dir \\
+        -o full.json
 """
 from __future__ import annotations
 
@@ -71,7 +77,69 @@ def print_request(doc: dict, key: int) -> int:
     return 0
 
 
+def main_concat(argv) -> int:
+    import os
+
+    from repro.obs import concat_segments
+    from repro.obs.stream import segment_paths
+
+    ap = argparse.ArgumentParser(
+        prog="trace_export.py concat",
+        description="stitch rotated trace segments into one Chrome trace")
+    ap.add_argument("inputs", nargs="+",
+                    help="an obs segment directory (reads manifest.json) "
+                         "or trace-*.json segment files in flush order")
+    ap.add_argument("-o", "--out", default=None,
+                    help="write the stitched trace here (default: stdout "
+                         "summary only)")
+    ap.add_argument("--pretty", action="store_true",
+                    help="indent the output JSON")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip schema/span-tree validation")
+    args = ap.parse_args(argv)
+
+    if len(args.inputs) == 1 and os.path.isdir(args.inputs[0]):
+        paths = segment_paths(args.inputs[0])
+    else:
+        paths = args.inputs
+    if not paths:
+        print("no trace segments found")
+        return 1
+    doc = concat_segments(paths)
+
+    rc = 0
+    if not args.no_validate:
+        schema = validate_chrome_trace(doc)
+        tree = validate_span_tree(doc)
+        for err in schema[:20]:
+            print(f"schema: {err}")
+        for err in tree[:20]:
+            print(f"span-tree: {err}")
+        if schema or tree:
+            rc = 1
+        else:
+            print("valid chrome trace, well-formed span tree")
+
+    summ = trace_summary(doc)
+    print(f"{len(paths)} segments -> {summ['events']} events  "
+          f"workers {summ['workers']}  requests {summ['requests']} "
+          f"({summ['finalized']} finalized)")
+    if doc["otherData"].get("drops"):
+        d = doc["otherData"]["drops"]
+        print(f"drops: {d.get('requests_sampled_out', 0)} trees sampled "
+              f"out, {d.get('requests_shed', 0)} shed by the cap")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f, sort_keys=True,
+                      indent=2 if args.pretty else None,
+                      separators=None if args.pretty else (",", ":"))
+        print(f"wrote stitched trace -> {args.out}")
+    return rc
+
+
 def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "concat":
+        return main_concat(sys.argv[2:])
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace", help="Chrome-trace JSON file")
     ap.add_argument("--request", type=int, default=None, metavar="KEY",
