@@ -53,7 +53,7 @@ class CascadeCoordinator:
         self.stats: Dict[str, float] = {
             "legs": 0, "escalations": 0, "finalized": 0,
             "observed_legs": 0, "estimated_legs": 0,
-            "headroom_blocked": 0,
+            "headroom_blocked": 0, "cache_stops": 0,
         }
         # Escalation counts indexed by the leg that triggered them
         # (leg 1 -> leg 2 escalations live at index 0, etc.).
@@ -157,6 +157,13 @@ class CascadeCoordinator:
         escalation rate stays honest."""
         self.stats["finalized"] += 1
 
+    def on_cache_served(self, r) -> None:
+        """Rung 0 stopped: a semantic-cache hit finalized the request
+        without entering the real ladder. Counted as a finalization (the
+        request is done) but not as a leg — no pool member ran."""
+        self.stats["finalized"] += 1
+        self.stats["cache_stops"] += 1
+
     # -- reporting -----------------------------------------------------------
 
     @property
@@ -176,5 +183,6 @@ class CascadeCoordinator:
             f"rate {self.escalation_rate:.3f}  "
             f"quality signal observed/estimated "
             f"{int(s['observed_legs'])}/{int(s['estimated_legs'])}  "
-            f"headroom-blocked {int(s['headroom_blocked'])}"
+            f"headroom-blocked {int(s['headroom_blocked'])}  "
+            f"cache-stops {int(s['cache_stops'])}"
         )

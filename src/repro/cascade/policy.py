@@ -141,3 +141,22 @@ class CascadePolicy:
                                    best_gain if np.isfinite(best_gain)
                                    else 0.0)
         return CascadeDecision(True, best_m, best_gain)
+
+    def decide_rung0(self, *, q_cache: float, sigma_cache: float,
+                     s_hat: np.ndarray, s_std: np.ndarray,
+                     c_hat: np.ndarray, lam: float,
+                     headroom: float = 1.0) -> CascadeDecision:
+        """Semantic-cache rung 0: keep the cached answer or enter the ladder.
+
+        A cache hit is a zero-marginal-cost leg with nothing tried yet:
+        the stop value is the reward of the cached answer's quality
+        (discounted by the distance-derived confidence spread
+        ``sigma_cache``, exactly like ensemble disagreement on an
+        estimated leg) at ``cum_cost = 0``; escalation candidates are the
+        whole ladder at their predicted costs. Escalating "falls through"
+        the cache — the request is then scored and routed normally.
+        """
+        return self.decide(
+            s_cur=q_cache, s_std_cur=sigma_cache, s_hat=s_hat,
+            s_std=s_std, c_hat=c_hat, cum_cost=0.0, tried=(),
+            lam=lam, observed=False, headroom=headroom)

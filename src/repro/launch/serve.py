@@ -12,7 +12,11 @@
 escalation (repro.cascade): answers that look inadequate against the next
 cost-ladder rung's expected marginal reward are re-admitted at elevated
 priority, every leg is charged to the budget ledger, and telemetry splits
-quality/cost/latency by leg. ``--save-router`` / ``--restore-router``
+quality/cost/latency by leg. ``--semcache`` adds a semantic answer cache
+as rung 0 of that ladder: near-duplicate queries (see ``--trace neardup``)
+are answered from cache when the rung-0 stop-vs-escalate decision — the
+same expected-marginal-reward math as the cascade — says the cached
+answer's risk-adjusted quality beats paying for generation. ``--save-router`` / ``--restore-router``
 persist the trained router (params + version + cost-scaler meta); restored
 routers score bitwise-identically.
 
@@ -50,13 +54,16 @@ from repro.core.router import PredictiveRouter
 from repro.data import generate
 from repro.models import lm as lm_mod
 from repro.serving import (
+    TRACE_KINDS,
     BudgetGovernor,
     MicroBatchScheduler,
     PoolMember,
     RoutedEngine,
     SchedulerConfig,
+    SemanticCache,
     TraceConfig,
     arch_cost_rate,
+    calibrate_radius,
     default_service_model,
     make_trace,
 )
@@ -270,8 +277,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--pool", default="qwen3-0.6b,granite-moe-1b-a400m,granite-3-8b")
     ap.add_argument("--requests", type=int, default=200)
-    ap.add_argument("--trace", default="poisson",
-                    choices=("poisson", "bursty", "drift"))
+    ap.add_argument("--trace", default="poisson", choices=TRACE_KINDS)
     ap.add_argument("--rate", type=float, default=400.0,
                     help="mean arrivals per virtual second")
     ap.add_argument("--lam", type=float, default=1.0,
@@ -316,6 +322,18 @@ def main(argv=None):
                     help="cascade: budget headroom in [0,1] below which "
                          "escalation is blocked (0 disables the gate; "
                          "needs --budget to have any effect)")
+    ap.add_argument("--semcache", action="store_true",
+                    help="semantic answer cache as cascade rung 0: "
+                         "embedding-keyed reuse of finalized answers for "
+                         "near-duplicate queries, stop-vs-escalate decided "
+                         "by the same expected-marginal-reward policy as "
+                         "the cascade ladder")
+    ap.add_argument("--cache-radius", type=float, default=None,
+                    help="semcache: L2 match radius in embedding space "
+                         "(default: calibrated from the training split's "
+                         "nearest-neighbour distance quantile)")
+    ap.add_argument("--cache-cap", type=int, default=256,
+                    help="semcache: max entries (LRU eviction past it)")
     ap.add_argument("--save-router", default=None, metavar="PATH",
                     help="persist the trained router (params + version + "
                          "cost-scaler meta) after offline training")
@@ -453,6 +471,19 @@ def main(argv=None):
         return CascadeCoordinator(policy, observed_quality=truth,
                                   governor=governor)
 
+    def make_semcache():
+        """Fresh rung-0 semantic cache (policy/drift hooks are wired by the
+        scheduler from the cascade policy and the adapter's detector)."""
+        if not args.semcache:
+            return None
+        radius = args.cache_radius
+        if radius is None:
+            tr, _, _ = data.split(seed=args.seed)
+            radius = calibrate_radius(data.emb[tr])
+            print(f"semcache radius calibrated to {radius:.4f} "
+                  f"(training-split NN-distance quantile)")
+        return SemanticCache(radius, cap=args.cache_cap)
+
     def make_feedback(seed):
         """(quality_feedback, feedback_source, stage) for one adapter."""
         if args.feedback_delay > 0:
@@ -469,7 +500,7 @@ def main(argv=None):
     obs = _setup_obs(args)
     if args.workers > 1:
         return _run_plane(args, engine, data, trace, make_feedback,
-                          make_cascade, obs)
+                          make_cascade, obs, make_semcache)
     recorder, registry, profiler, flusher = obs
 
     governor = None
@@ -509,6 +540,7 @@ def main(argv=None):
         )
 
     cascade = make_cascade(governor)
+    semcache = make_semcache()
     slo = _make_slo(args, tracer=recorder)
     sched = MicroBatchScheduler(
         engine,
@@ -518,7 +550,7 @@ def main(argv=None):
                         queue_capacity=args.queue_capacity),
         governor=governor,
         service_time=None if args.wall_time else default_service_model(),
-        adapter=adapter, cascade=cascade,
+        adapter=adapter, cascade=cascade, semcache=semcache,
         tracer=recorder.scoped(0) if recorder is not None else None,
         slo=slo, flusher=flusher,
     )
@@ -542,6 +574,14 @@ def main(argv=None):
     print(sched.telemetry.report(summary.get("duration_s")))
     if cascade is not None:
         print(cascade.report())
+    if semcache is not None:
+        rep = semcache.report()
+        print(f"semcache: {rep['served']} served / {rep['lookups']} lookups "
+              f"(hit rate {rep['hit_rate']:.2f})  "
+              f"{rep['fallthroughs']} fallthroughs  "
+              f"{rep['stale_hits']} stale  {rep['evicted']} evicted  "
+              f"{rep['invalidations']} invalidated  "
+              f"{rep['entries']} entries")
     if adapter is not None:
         print(adapter.report())
     if governor is not None:
@@ -557,7 +597,7 @@ def main(argv=None):
 
 
 def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
-               obs=(None, None, None, None)):
+               obs=(None, None, None, None), make_semcache=lambda: None):
     """Multi-worker path: build N workers + coordinator, run the plane."""
     from repro.distributed import (
         Coordinator, PlaneEvent, ServingPlane, SharedBudgetLedger,
@@ -626,6 +666,7 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
             governor=governor, clock=SimClock(),
             service_time=None if args.wall_time else default_service_model(),
             adapter=adapter, cascade=make_cascade(governor),
+            semcache=make_semcache(),
             tracer=recorder.scoped(wid) if recorder is not None else None,
             slo=slo,
         )
@@ -664,6 +705,12 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
     if args.cascade:
         for w in sorted(workers, key=lambda w: w.wid):
             print(f"w{w.wid} {w.scheduler.cascade.report()}")
+    if args.semcache:
+        for w in sorted(workers, key=lambda w: w.wid):
+            rep = w.scheduler.semcache.report()
+            print(f"w{w.wid} semcache: {rep['served']}/{rep['lookups']} "
+                  f"served (hit rate {rep['hit_rate']:.2f})  "
+                  f"{rep['entries']} entries")
     if args.online:
         for w in sorted(workers, key=lambda w: w.wid):
             print(f"w{w.wid} {w.adapter.report()}")

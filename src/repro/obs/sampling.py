@@ -33,7 +33,7 @@ from typing import Iterable, Optional, Set
 # (tail-sampling always-keep lane). Runtime-scope events (no request key)
 # are never subject to sampling, so they need no entry here even when
 # anomalous (drift_alarm, worker_crash/rejoin, governor verdicts).
-ANOMALY_EVENTS = frozenset({"readmit", "expire"})
+ANOMALY_EVENTS = frozenset({"readmit", "expire", "rescued"})
 
 # Root-span statuses / flags that mark the tree anomalous at finalize.
 _ANOMALY_STATUS = frozenset({"expired"})

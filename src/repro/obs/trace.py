@@ -416,9 +416,23 @@ def validate_span_tree(doc, eps_us: float = 0.5) -> List[str]:
                 problems.append(
                     f"request {tid}: {ev['name']} [{ev['ts']:.1f},"
                     f"{end:.1f}]us outside root [{lo:.1f},{hi:.1f}]us")
-        status = (root.get("args") or {}).get("status")
-        if status == "done" and not t["legs"]:
+        root_args = root.get("args") or {}
+        status = root_args.get("status")
+        if status == "done" and not t["legs"] and not root_args.get("cached"):
+            # Cache-served requests legitimately finish with zero legs —
+            # the semantic cache is rung 0, no pool member ran.
             problems.append(f"request {tid}: done without a leg span")
+        # Expiry/rescue consistency: a done root must never contain an
+        # `expire` instant (the queue classifies rescues up front), and a
+        # `rescued` instant only appears under a rescued root.
+        if status == "done" and any(
+                e["name"] == "expire" for e in t["events"]):
+            problems.append(
+                f"request {tid}: 'expire' instant under a done root")
+        if (any(e["name"] == "rescued" for e in t["events"])
+                and not root_args.get("rescued")):
+            problems.append(
+                f"request {tid}: 'rescued' instant under an un-rescued root")
         prev_end = None
         for leg in t["legs"]:
             if prev_end is not None and leg["ts"] < prev_end - eps_us:

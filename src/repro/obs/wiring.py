@@ -137,6 +137,30 @@ def register_scheduler_metrics(reg: MetricsRegistry, sched,
             "P(escalate | completed leg n)", "leg", labels=labels,
             fn=_by_leg)
 
+    semcache = getattr(sched, "semcache", None)
+    if semcache is not None:
+        reg.counter("semcache_hits_total", "cache answers served (rung 0)",
+                    labels=labels, fn=lambda: semcache.stats["served"])
+        reg.counter("semcache_misses_total", "lookups with no usable entry",
+                    labels=labels, fn=lambda: semcache.stats["misses"])
+        reg.counter("semcache_fallthroughs_total",
+                    "hits the rung-0 policy escalated past",
+                    labels=labels,
+                    fn=lambda: semcache.stats["fallthroughs"])
+        reg.counter("semcache_stale_hits_total",
+                    "hits on drift-invalidated entries (never served)",
+                    labels=labels,
+                    fn=lambda: semcache.stats["stale_hits"])
+        reg.counter("semcache_invalidations_total",
+                    "entries invalidated by drift alarms", labels=labels,
+                    fn=lambda: semcache.stats["invalidations"])
+        reg.counter("semcache_evictions_total", "LRU evictions at capacity",
+                    labels=labels, fn=lambda: semcache.stats["evicted"])
+        reg.gauge("semcache_entries", "live cache entries", labels=labels,
+                  fn=lambda: len(semcache))
+        reg.gauge("semcache_hit_rate", "served / lookups", labels=labels,
+                  fn=lambda: semcache.report()["hit_rate"])
+
 
 def register_slo_metrics(reg: MetricsRegistry, tracker, clock_fn,
                          labels=()) -> None:

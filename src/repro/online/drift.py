@@ -58,6 +58,12 @@ class DriftDetector:
         self.alarms = 0
         self.windows_seen = 0
         self.last_stats: Dict[str, float] = {}
+        # Alarm fan-out: callables invoked with the alarm time whenever an
+        # alarm fires, regardless of which caller fed observe(). The
+        # semantic cache registers its invalidation here so one detector
+        # (the adapter's or its own) drives both adaptation and cache
+        # invalidation without the callers coordinating.
+        self.alarm_hooks: List = []
 
     @property
     def abnormal_streak(self) -> int:
@@ -167,5 +173,7 @@ class DriftDetector:
         if self._abnormal_streak >= self.patience:
             self._abnormal_streak = 0
             self.alarms += 1
+            for hook in self.alarm_hooks:
+                hook(now)
             return True
         return False

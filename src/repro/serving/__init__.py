@@ -9,8 +9,10 @@ Layers (bottom up): :mod:`engine` — stateless scoring/dispatch core;
 from repro.serving.budget import BudgetGovernor
 from repro.serving.engine import (
     DOLLARS_PER_TFLOP,
+    REF_TOKENS_OUT,
     PoolMember,
     RoutedEngine,
+    arch_cost_per_token,
     arch_cost_rate,
     pad_prompts,
     prompt_pad_mask,
@@ -29,14 +31,17 @@ from repro.serving.scheduler import (
     SimClock,
     default_service_model,
 )
+from repro.serving.semcache import SemanticCache, calibrate_radius
 from repro.serving.telemetry import Histogram, Telemetry
 from repro.serving.traffic import TRACE_KINDS, TraceConfig, make_trace
 
 __all__ = [
-    "DOLLARS_PER_TFLOP", "PoolMember", "RoutedEngine", "arch_cost_rate",
+    "DOLLARS_PER_TFLOP", "REF_TOKENS_OUT", "PoolMember", "RoutedEngine",
+    "arch_cost_per_token", "arch_cost_rate",
     "pad_prompts", "prompt_pad_mask",
     "AdmissionQueue", "Request", "PENDING", "DONE", "REJECTED",
     "EXPIRED", "BudgetGovernor", "MicroBatchScheduler", "SchedulerConfig",
     "SimClock", "default_service_model", "Histogram", "Telemetry",
+    "SemanticCache", "calibrate_radius",
     "TRACE_KINDS", "TraceConfig", "make_trace",
 ]

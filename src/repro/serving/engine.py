@@ -39,11 +39,22 @@ from repro.models import lm as lm_mod
 # $ per 1e12 FLOPs — anchors active-param FLOPs to an API-like price axis.
 DOLLARS_PER_TFLOP = 2.2e-4
 
+# Nominal generation length the per-request $ rate is quoted at. The
+# router's cost axis trains on this flat rate (a stable, request-agnostic
+# per-member price that keeps the ladder ordering deterministic), while
+# the actual ledger charge is per *delivered* token (see
+# ``generate_member``): ``cost_rate / REF_TOKENS_OUT`` $ per token.
+REF_TOKENS_OUT = 256
 
-def arch_cost_rate(cfg, tokens_out: int = 256) -> float:
-    """$ per request: 2 * N_active FLOPs/token * tokens * $/FLOP."""
-    flops = 2.0 * cfg.active_param_count() * tokens_out
-    return flops / 1e12 * DOLLARS_PER_TFLOP
+
+def arch_cost_per_token(cfg) -> float:
+    """$ per token processed: 2 * N_active FLOPs/token * $/FLOP."""
+    return 2.0 * cfg.active_param_count() / 1e12 * DOLLARS_PER_TFLOP
+
+
+def arch_cost_rate(cfg, tokens_out: int = REF_TOKENS_OUT) -> float:
+    """Nominal $ per request at the reference generation length."""
+    return arch_cost_per_token(cfg) * tokens_out
 
 
 @dataclasses.dataclass
@@ -206,17 +217,31 @@ class RoutedEngine:
     # -- dispatch -----------------------------------------------------------
 
     def generate_member(self, member_idx: int, prompts: Sequence[np.ndarray],
-                        max_new: int = 8) -> Tuple[List[np.ndarray], float]:
+                        max_new: int = 8,
+                        max_new_per_req: Optional[Sequence[int]] = None,
+                        ) -> Tuple[List[np.ndarray], np.ndarray]:
         """Run one generate micro-batch on a pool member.
 
-        ``prompts`` are variable-length token rows; they are left-padded into
-        one batch. Returns (per-request output tokens, $ cost of the call).
+        ``prompts`` are variable-length token rows; they are left-padded
+        into one batch. Returns ``(per-request output tokens, per-request
+        $ costs)``. The charge is *delivered work* — prefill (prompt
+        tokens) plus the new tokens each request actually receives (capped
+        by its own ``max_new_per_req`` entry when given, so chunk-mates
+        with different caps pay different $ even though the micro-batch
+        generates to the chunk max) — at the member's per-token rate,
+        never a flat per-request price.
         """
         member = self.pool[member_idx]
         toks = member.generate(pad_prompts(prompts), max_new=max_new,
                                attn_mask=prompt_pad_mask(prompts))
         outs = [np.asarray(toks[i]) for i in range(len(prompts))]
-        return outs, member.cost_rate * len(prompts)
+        per_tok = member.cost_rate / REF_TOKENS_OUT
+        caps = (max_new_per_req if max_new_per_req is not None
+                else [max_new] * len(prompts))
+        costs = np.asarray(
+            [per_tok * (len(np.asarray(p)) + min(len(o), int(cap)))
+             for p, o, cap in zip(prompts, outs, caps)], np.float64)
+        return outs, costs
 
     def serve(self, texts: Sequence[str], prompts: jax.Array,
               max_new: int = 8) -> Dict:
@@ -239,7 +264,7 @@ class RoutedEngine:
                 mi, [prompts[i] for i in idx], max_new=max_new)
             for j, ii in enumerate(idx):
                 out_tokens[ii] = outs[j]
-            total_cost += cost
+            total_cost += float(np.sum(cost))
         return {
             "choices": choices,
             "outputs": out_tokens,

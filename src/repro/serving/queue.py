@@ -51,6 +51,10 @@ class Request:
     admitted_s: float = float("nan")
     service_start_s: float = float("nan")
     finish_s: float = float("nan")
+    # True accumulated queue time: the scheduler adds each leg's wait
+    # (arrival -> first service, then admitted -> service per re-leg) at
+    # service start. ``nan`` = never served by the scheduler.
+    queued_s: float = float("nan")
     cost: float = 0.0                  # $ of the LAST leg served
     output: Optional[np.ndarray] = None
     # Online-adaptation bookkeeping: the scoring-pass embedding (reused by
@@ -86,6 +90,17 @@ class Request:
 
     @property
     def queue_wait_s(self) -> float:
+        """Total time spent *queued*, summed across legs.
+
+        The scheduler accumulates each leg's wait into ``queued_s`` at
+        service start; earlier legs' generation time never counts as
+        queueing (it used to: arrival -> final-leg service start folded
+        every prior leg's service into "queue wait"). Requests that never
+        went through the scheduler (hand-built telemetry inputs) fall
+        back to the single-leg definition.
+        """
+        if not np.isnan(self.queued_s):
+            return self.queued_s
         return self.service_start_s - self.arrival_s
 
     @property
@@ -169,22 +184,41 @@ class AdmissionQueue:
                                       or str(req.forced_member)})
 
     def expire(self, now: float) -> List[Request]:
-        """Drop queued requests whose deadline has passed."""
+        """Drop queued requests whose deadline has passed.
+
+        Rescue-aware: a request holding a best-so-far answer
+        (``best_output``, mid-cascade) is *rescued*, not expired — the
+        scheduler will finalize it with the answer in hand. It leaves the
+        queue through the same returned list but keeps ``PENDING`` status,
+        emits a ``rescued`` instant (not ``expire``), and never touches
+        the ``expired`` counter — so traces and counters agree with the
+        request's actual fate instead of flip-flopping through an expiry
+        the scheduler immediately rewrites.
+        """
         survivors: Deque[Request] = deque()
         dropped: List[Request] = []
         for req in self._items:
             if req.deadline_s is not None and req.deadline_s < now:
-                req.status = EXPIRED
                 req.finish_s = now
                 dropped.append(req)
-                if self.tracer is not None:
-                    self.tracer.instant("expire", "queue", now,
-                                        key=self.tracer.ensure_key(req),
-                                        args={"deadline_s": req.deadline_s})
+                if req.best_output is not None:
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "rescued", "queue", now,
+                            key=self.tracer.ensure_key(req),
+                            args={"leg": req.leg,
+                                  "deadline_s": req.deadline_s})
+                else:
+                    req.status = EXPIRED
+                    self.expired += 1
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "expire", "queue", now,
+                            key=self.tracer.ensure_key(req),
+                            args={"deadline_s": req.deadline_s})
             else:
                 survivors.append(req)
         self._items = survivors
-        self.expired += len(dropped)
         return dropped
 
     def pop(self, n: int) -> List[Request]:

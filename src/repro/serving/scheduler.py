@@ -22,6 +22,7 @@ can be overridden with a model for fully deterministic tests.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 import time
 from collections import deque
@@ -90,7 +91,7 @@ class MicroBatchScheduler:
                  service_time: Optional[Callable[[str, int, float], float]]
                  = None,
                  adapter=None, cascade=None, tracer=None, slo=None,
-                 flusher=None):
+                 flusher=None, semcache=None):
         self.engine = engine
         self.config = config or SchedulerConfig()
         self.queue = queue or AdmissionQueue(self.config.queue_capacity)
@@ -139,6 +140,28 @@ class MicroBatchScheduler:
         # completed legs into stop-vs-escalate decisions; escalated
         # requests are re-admitted at the queue head instead of finalized.
         self.cascade = cascade
+        # Semantic answer cache (repro.serving.semcache.SemanticCache):
+        # rung 0 of the cascade ladder, consulted on the scoring pass's
+        # shared q_emb before any scoring/generation. With a cascade
+        # installed the cache borrows its policy (stop-vs-escalate on the
+        # same reward math) and, when the adapter owns a drift detector,
+        # registers its invalidation on that detector's alarm hooks.
+        self.semcache = semcache
+        if semcache is not None:
+            if cascade is not None and semcache.policy is None:
+                semcache.policy = cascade.policy
+            adrift = getattr(adapter, "drift", None)
+            if (adrift is not None and semcache.drift is None
+                    and semcache.on_drift_alarm not in adrift.alarm_hooks):
+                adrift.alarm_hooks.append(semcache.on_drift_alarm)
+        # Engines that predate per-request cost accounting (test/bench
+        # stubs) return one scalar $ per generate call and take no
+        # ``max_new_per_req``; detect once and split evenly for them.
+        try:
+            sig = inspect.signature(engine.generate_member)
+            self._gen_per_req = "max_new_per_req" in sig.parameters
+        except (TypeError, ValueError):
+            self._gen_per_req = False
 
     # -- one scheduling round -----------------------------------------------
 
@@ -193,6 +216,137 @@ class MicroBatchScheduler:
             self._ctr_depth = depth
             self.tracer.counter("queue_depth", self.clock.now, depth)
 
+    def _cache_rung(self, batch, q_emb, lam, outcomes):
+        """Cascade rung 0: serve eligible requests from the semantic cache.
+
+        Consulted on the shared embedding pass before any scoring or
+        generation. A *stop* verdict serves the cached answer at zero
+        marginal cost and finalizes the request on the spot; a
+        *fallthrough* (the policy expects a real rung to beat the cached
+        answer) carries the cached answer as best-so-far into the ladder
+        — keep-best semantics, escalating can only add cost, never lose
+        the answer in hand. Returns (remaining batch, their q_emb rows,
+        cache-served requests); cache-served outcome snapshots (charged
+        the entry's ORIGINAL generation cost, so the adapter's cost head
+        keeps training on real economics) are appended to ``outcomes``.
+        """
+        now = self.clock.now
+        tracer = self.tracer
+        cache = self.semcache
+        # Cache-owned drift detector watches the full arrival stream
+        # (no-op when invalidation rides the adapter's detector).
+        cache.observe_queries(q_emb, now)
+        for r, e in zip(batch, q_emb):
+            r.q_emb = e
+        names = [m.name for m in self.engine.pool]
+        headroom = (self.cascade.headroom(now) if self.cascade is not None
+                    else 1.0)
+        eligible = [i for i, r in enumerate(batch)
+                    if r.leg == 0 and r.forced_member < 0]
+        hits = cache.match(q_emb[eligible]) if eligible else []
+        hit_of = dict(zip(eligible, hits))
+        keep, cache_served = [], []
+        record_cache = self.telemetry.record_cache
+        for i, r in enumerate(batch):
+            if i not in hit_of:
+                keep.append(i)
+                continue
+            if hit_of[i] is None:  # miss fast path: no verdict object
+                cache.note_miss()
+                record_cache("miss")
+                keep.append(i)
+                continue
+            v = cache.decide(hit_of[i], lam, headroom=headroom)
+            if not v.serve:
+                if v.reason == "stale":
+                    self.telemetry.record_cache("stale")
+                    if tracer is not None:
+                        tracer.instant(
+                            "cache_stale", "cache", now, key=r.trace_key,
+                            args={"dist": v.dist,
+                                  "member": v.entry.member_name})
+                else:
+                    self.telemetry.record_cache("miss")
+                if v.reason == "fallthrough" and self.cascade is not None:
+                    mi = (names.index(v.entry.member_name)
+                          if v.entry.member_name in names else -1)
+                    if mi >= 0:
+                        r.best_q = v.entry.quality
+                        r.best_q_std = v.sigma
+                        r.best_member = mi
+                        r.best_observed = False
+                        r.best_output = np.asarray(
+                            v.entry.output)[: r.max_new]
+                keep.append(i)
+                continue
+            entry = v.entry
+            mi = (names.index(entry.member_name)
+                  if entry.member_name in names else -1)
+            r.service_start_s = now
+            r.queued_s = now - r.arrival_s
+            r.finish_s = now
+            r.status = DONE
+            r.member = mi
+            r.output = np.asarray(entry.output)[: r.max_new]
+            r.cost = 0.0
+            r.best_q = entry.quality
+            r.best_q_std = v.sigma
+            r.best_member = mi
+            r.best_observed = False
+            r.best_output = r.output
+            self.telemetry.finalize_request(r)
+            self.telemetry.record_cache("hit")
+            if tracer is not None:
+                tracer.span("queue_wait", "queue", r.admitted_s, now,
+                            key=r.trace_key, args={"leg": 0})
+                tracer.instant(
+                    "cache_hit", "cache", now, key=r.trace_key,
+                    args={"dist": v.dist, "member": entry.member_name,
+                          "q": entry.quality})
+                tracer.span(
+                    "request", "request", r.arrival_s, r.finish_s,
+                    key=r.trace_key,
+                    args={"status": "done", "legs": 0, "cached": True,
+                          "member": entry.member_name,
+                          "cum_cost": r.cum_cost})
+            if self.slo is not None:
+                self._observe_slo(r, missed=False)
+            if self.cascade is not None:
+                self.cascade.on_cache_served(r)
+            if self.adapter is not None and mi >= 0:
+                snap = r.snapshot_leg()
+                snap.member = mi
+                snap.cost = entry.cost
+                outcomes.append(snap)
+            cache_served.append(r)
+        return [batch[i] for i in keep], q_emb[keep], cache_served
+
+    def _cache_admit(self, r: Request) -> None:
+        """Offer a finalized outcome to the semantic cache."""
+        if (self.semcache is None or r.q_emb is None
+                or not 0 <= r.member < len(self.engine.pool)):
+            return
+        quality = r.best_q
+        if math.isnan(quality):
+            if r.leg_quality:
+                quality = r.leg_quality[-1]
+            elif r.s_pred is not None:
+                quality = float(r.s_pred[r.member])
+            else:
+                return
+        # $ the delivered answer cost to produce: its own leg's charge
+        # (future hits replay this on the adapter's cost axis).
+        cost = r.cost
+        if r.member in r.tried and r.leg_costs:
+            i = len(r.tried) - 1 - r.tried[::-1].index(r.member)
+            if i < len(r.leg_costs):
+                cost = r.leg_costs[i]
+        self.semcache.admit(
+            r.q_emb, output=r.output,
+            member_name=self.engine.pool[r.member].name,
+            quality=float(quality), cost=float(cost), s_pred=r.s_pred,
+            s_std_pred=r.s_std_pred, c_pred=r.c_pred)
+
     def _observe_slo(self, r: Request, *, missed: bool) -> None:
         quality = None
         if not math.isnan(r.best_q):
@@ -219,20 +373,28 @@ class MicroBatchScheduler:
             if r.best_output is not None:
                 # Deadline hit mid-cascade: the request already holds a
                 # served answer — deliver best-so-far instead of expiring
-                # work that was paid for.
-                self.queue.expired -= 1
+                # work that was paid for. The queue already classified it
+                # as rescued (no expire instant, no expired count).
                 r.status = DONE
                 r.output = r.best_output
                 r.member = r.best_member
+                # Close out queued time: the request sat in queue from its
+                # last (re)admission until the deadline fired.
+                wait_from = r.arrival_s if r.leg == 0 else r.admitted_s
+                r.queued_s = ((0.0 if math.isnan(r.queued_s) else r.queued_s)
+                              + (r.finish_s - wait_from))
                 self.telemetry.finalize_request(r)
                 if self.cascade is not None:
                     self.cascade.on_rescued(r)
                 if tracer is not None:
+                    args = {"status": "done", "legs": r.leg,
+                            "rescued": True, "cum_cost": r.cum_cost}
+                    if r.leg == 0:
+                        # Zero-leg rescue: the best-so-far answer came
+                        # from a cache fallthrough, not a served leg.
+                        args["cached"] = True
                     tracer.span("request", "request", r.arrival_s,
-                                r.finish_s, key=r.trace_key,
-                                args={"status": "done", "legs": r.leg,
-                                      "rescued": True,
-                                      "cum_cost": r.cum_cost})
+                                r.finish_s, key=r.trace_key, args=args)
                 if self.slo is not None:
                     self._observe_slo(r, missed=True)
                 served.append(r)
@@ -265,12 +427,32 @@ class MicroBatchScheduler:
             tracer.counter("budget_lam", self.clock.now, lam)
         self.telemetry.record_lambda(self.clock.now, lam)
 
+        outcomes: List[Request] = []   # per-leg outcomes for the adapter
         t_score0 = self.clock.now
         t0 = time.perf_counter()
-        if self.adapter is not None or self.cascade is not None:
-            # One embedding pass shared between scoring and the outcome
-            # loop (replay / drift want the same q_emb the router saw).
+        q_emb = None
+        if (self.semcache is not None or self.adapter is not None
+                or self.cascade is not None):
+            # One embedding pass shared between the cache rung, scoring,
+            # and the outcome loop (replay / drift want the same q_emb
+            # the router saw).
             q_emb = np.asarray(self.engine.embed([r.text for r in batch]))
+        if self.semcache is not None:
+            # Cascade rung 0: the semantic cache short-circuits eligible
+            # requests *before* any scoring or generation.
+            batch, q_emb, cache_served = self._cache_rung(
+                batch, q_emb, lam, outcomes)
+            served.extend(cache_served)
+            if not batch:
+                if self.adapter is not None:
+                    if outcomes:
+                        self.adapter.observe(outcomes, self.clock.now)
+                    else:
+                        self.adapter.tick(self.clock.now)
+                if self.slo is not None:
+                    self.slo.check(self.clock.now)
+                return served
+        if q_emb is not None:
             if self.cascade is not None:
                 s_hat, s_std, c_hat = self.engine.score_emb_uncertainty(q_emb)
                 self.cascade.note_scores(batch, s_hat, s_std, c_hat)
@@ -287,22 +469,26 @@ class MicroBatchScheduler:
         else:
             s_hat, c_hat = self.engine.score_texts([r.text for r in batch])
             choices = self.engine.choose(s_hat, c_hat, lam)
+        if self.semcache is not None and self.cascade is None:
+            # Pin the belief rows cache admissions fall back on for entry
+            # quality when there is no cascade to pin them (note_scores).
+            for r, s, c in zip(batch, s_hat, c_hat):
+                if r.s_pred is None:
+                    r.s_pred = np.asarray(s)
+                    r.c_pred = np.asarray(c)
         choices = np.asarray(choices)
         names = [m.name for m in self.engine.pool]
         for i, r in enumerate(batch):
             if r.forced_member >= 0:
                 # Escalated leg: the cascade policy already picked the
                 # ladder rung; the argmax/exploration choice is overridden.
-                # The rung is resolved by member NAME when recorded (hot
-                # pool mutations shift indices — a positional lookup
-                # would silently dispatch a different member); a rung
-                # that no longer exists falls back to free routing — the
-                # request must not be lost.
-                if r.forced_member_name:
-                    if r.forced_member_name in names:
-                        choices[i] = names.index(r.forced_member_name)
-                elif r.forced_member < len(self.engine.pool):
-                    choices[i] = r.forced_member
+                # The rung is resolved by member NAME only (hot pool
+                # mutations shift indices — a positional lookup would
+                # silently dispatch a different member); a rung whose name
+                # is gone falls back to free routing — the request must
+                # not be lost, and must not run an arbitrary member.
+                if r.forced_member_name and r.forced_member_name in names:
+                    choices[i] = names.index(r.forced_member_name)
                 r.forced_member = -1
                 r.forced_member_name = ""
         score_wall = time.perf_counter() - t0
@@ -316,12 +502,17 @@ class MicroBatchScheduler:
                         args={"n": len(batch), "router_version": version})
         for r in batch:
             r.service_start_s = self.clock.now
+            # True queued time accumulates per leg: arrival -> first
+            # service, then admitted -> service for every re-admitted leg
+            # — earlier legs' *generation* time never counts as queueing.
+            wait_from = r.arrival_s if r.leg == 0 else r.admitted_s
+            r.queued_s = ((0.0 if math.isnan(r.queued_s) else r.queued_s)
+                          + (self.clock.now - wait_from))
             if tracer is not None:
                 tracer.span("queue_wait", "queue", r.admitted_s,
                             self.clock.now, key=r.trace_key,
                             args={"leg": r.leg + 1})
 
-        outcomes: List[Request] = []   # per-leg outcomes for the adapter
         for mi in range(len(self.engine.pool)):
             idx = [i for i, c in enumerate(choices) if int(c) == mi]
             for lo in range(0, len(idx), self.config.max_batch):
@@ -329,11 +520,26 @@ class MicroBatchScheduler:
                 max_new = max(r.max_new for r in chunk)
                 t_gen0 = self.clock.now
                 t0 = time.perf_counter()
-                outs, cost = self.engine.generate_member(
-                    mi, [r.prompt for r in chunk], max_new=max_new)
+                if self._gen_per_req:
+                    outs, cost = self.engine.generate_member(
+                        mi, [r.prompt for r in chunk], max_new=max_new,
+                        max_new_per_req=[r.max_new for r in chunk])
+                else:
+                    outs, cost = self.engine.generate_member(
+                        mi, [r.prompt for r in chunk], max_new=max_new)
                 gen_wall = time.perf_counter() - t0
                 self.clock.advance(
                     self._virtual_dt("generate", len(chunk), gen_wall))
+                # Per-request $ charges: engines price delivered work per
+                # request (prefill + each request's own new tokens); legacy
+                # scalar-cost engines (test/bench stubs) split evenly.
+                cost_arr = np.asarray(cost, np.float64)
+                if cost_arr.ndim == 0:
+                    per_req = np.full(len(chunk),
+                                      float(cost_arr) / len(chunk))
+                else:
+                    per_req = cost_arr
+                cost = float(per_req.sum())
                 if self.governor is not None:
                     self.governor.record(cost, self.clock.now)
                 delivered = sum(min(len(o), r.max_new)
@@ -349,8 +555,8 @@ class MicroBatchScheduler:
                                 args={"member": self.engine.pool[mi].name,
                                       "n": len(chunk), "cost": cost,
                                       "gen": gen_id})
-                per_req_cost = cost / len(chunk)
-                for r, o in zip(chunk, outs):
+                for r, o, per_req_cost in zip(chunk, outs, per_req):
+                    per_req_cost = float(per_req_cost)
                     r.member = mi
                     r.output = np.asarray(o)[: r.max_new]
                     r.cost = per_req_cost
@@ -368,6 +574,7 @@ class MicroBatchScheduler:
                                   "cost": per_req_cost, "gen": gen_id})
                     if self.cascade is None:
                         r.status = DONE
+                        self._cache_admit(r)
                         self.telemetry.finalize_request(r)
                         if tracer is not None:
                             tracer.span(
@@ -405,6 +612,7 @@ class MicroBatchScheduler:
                         # answer; cum_cost still charges every leg.
                         r.output = r.best_output
                         r.member = r.best_member
+                    self._cache_admit(r)
                     self.telemetry.finalize_request(r)
                     if tracer is not None:
                         name = (self.engine.pool[r.member].name

@@ -147,7 +147,9 @@ class Telemetry:
         self.rejected = 0
         self.expired = 0
         self.routing_latency = Histogram()    # wall s per score batch
-        self.queue_wait = Histogram()         # virtual s, arrival -> service
+        self.queue_wait = Histogram()         # virtual s, true queued time
+        #                                       (sum of per-leg waits, never
+        #                                       earlier legs' service time)
         self.e2e_latency = Histogram()        # virtual s, arrival -> finish
         self.batch_size_sum = 0               # generate micro-batch sizes
         self.max_queue_depth = 0
@@ -162,6 +164,13 @@ class Telemetry:
         self.escalations = 0
         self.finalized_by_leg: list = []      # requests finalized after leg n
         self.double_finalize_blocked = 0      # idempotence guard trips
+        # Semantic cache (cascade rung 0) counters: hits served at zero
+        # marginal cost, misses (no entry in radius OR policy fell
+        # through to the ladder), and stale hits (drift-invalidated
+        # entries that were NOT served).
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_stale = 0
         # Bounded whole-run time series: effective lambda per dispatch
         # round and queue depth per loop tick. Deterministically thinned,
         # never ring-truncated — the start of the run stays inspectable.
@@ -227,6 +236,9 @@ class Telemetry:
         self.depth_samples += other.depth_samples
         self.escalations += other.escalations
         self.double_finalize_blocked += other.double_finalize_blocked
+        self.cache_hits += other.cache_hits
+        self.cache_misses += other.cache_misses
+        self.cache_stale += other.cache_stale
         self._grow_legs(len(other.leg_served))
         for i in range(len(other.leg_served)):
             self.leg_served[i] += other.leg_served[i]
@@ -264,6 +276,15 @@ class Telemetry:
         self.member_counts[member] += n_requests
         self.member_tokens[member] += tokens
         self.member_spend[member] += cost
+
+    def record_cache(self, outcome: str) -> None:
+        """Count one semantic-cache lookup outcome: hit | miss | stale."""
+        if outcome == "hit":
+            self.cache_hits += 1
+        elif outcome == "stale":
+            self.cache_stale += 1
+        else:
+            self.cache_misses += 1
 
     def record_completion(self, queue_wait_s: float, e2e_s: float) -> None:
         self.completed += 1
@@ -365,6 +386,12 @@ class Telemetry:
             out["escalation_rate"] = (self.escalations / self.completed
                                       if self.completed else 0.0)
             out["double_finalize_blocked"] = self.double_finalize_blocked
+        lookups = self.cache_hits + self.cache_misses + self.cache_stale
+        if lookups:
+            out["cache_hits"] = self.cache_hits
+            out["cache_misses"] = self.cache_misses
+            out["cache_stale"] = self.cache_stale
+            out["cache_hit_rate"] = self.cache_hits / lookups
         if duration_s:
             out["duration_s"] = duration_s
             out["requests_per_s"] = self.completed / duration_s

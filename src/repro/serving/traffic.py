@@ -12,6 +12,9 @@ the RouterBench texts model *what* they ask. Scenarios:
   drift     Poisson arrivals whose *content* shifts over the trace from one
             benchmark mixture to another (e.g. commonsense -> math+code) —
             domain shift that moves the router's quality estimates.
+  neardup   Poisson arrivals where most queries repeat a small hot set of
+            texts (Zipf-weighted) — the millions-of-users regime where
+            near-duplicate queries make a semantic answer cache pay.
 
 Prompt lengths are heavy-tailed (Pareto, truncated) — the long-prompt tail
 is what makes naive fixed-batch serving stall, and what micro-batching is
@@ -27,7 +30,7 @@ import numpy as np
 
 from repro.serving.queue import Request
 
-TRACE_KINDS = ("poisson", "bursty", "drift")
+TRACE_KINDS = ("poisson", "bursty", "drift", "neardup")
 
 
 @dataclasses.dataclass
@@ -44,6 +47,9 @@ class TraceConfig:
     prompt_len_min: int = 8
     prompt_len_max: int = 96
     pareto_alpha: float = 1.3
+    # neardup (hot-set repetition) shape
+    hot_set: int = 32              # number of hot texts arrivals repeat
+    dup_frac: float = 0.7          # P(arrival repeats a hot text)
     # request shape
     max_new: int = 4
     deadline_s: Optional[float] = None  # relative to arrival; None = none
@@ -52,7 +58,7 @@ class TraceConfig:
 
 def _arrival_times(cfg: TraceConfig, rng: np.random.Generator) -> np.ndarray:
     n = cfg.n_requests
-    if cfg.kind in ("poisson", "drift"):
+    if cfg.kind in ("poisson", "drift", "neardup"):
         return np.cumsum(rng.exponential(1.0 / cfg.rate, size=n))
     if cfg.kind == "bursty":
         times, t, on = [], 0.0, True
@@ -98,6 +104,23 @@ def _drift_order(benchmarks: Sequence[str],
     return out
 
 
+def _neardup_picks(cfg: TraceConfig, rng: np.random.Generator,
+                   n_texts: int) -> np.ndarray:
+    """Hot-set repetition: with probability ``dup_frac`` an arrival repeats
+    one of ``hot_set`` hot texts (Zipf-weighted, so a few queries dominate
+    — the shape real duplicate traffic has), else samples uniformly."""
+    hot = rng.choice(n_texts, size=min(cfg.hot_set, n_texts), replace=False)
+    w = 1.0 / np.arange(1, len(hot) + 1)          # Zipf s=1 over the hot set
+    w /= w.sum()
+    out = np.empty(cfg.n_requests, np.int64)
+    for i in range(cfg.n_requests):
+        if rng.random() < cfg.dup_frac:
+            out[i] = hot[rng.choice(len(hot), p=w)]
+        else:
+            out[i] = rng.integers(n_texts)
+    return out
+
+
 def make_trace(cfg: TraceConfig, texts: Sequence[str],
                benchmarks: Optional[Sequence[str]] = None) -> List[Request]:
     """Build an open-loop request trace over the given prompt corpus.
@@ -113,6 +136,8 @@ def make_trace(cfg: TraceConfig, texts: Sequence[str],
         if benchmarks is None:
             raise ValueError("drift trace needs per-text benchmark labels")
         picks = _drift_order(benchmarks, rng, cfg.n_requests)
+    elif cfg.kind == "neardup":
+        picks = _neardup_picks(cfg, rng, len(texts))
     else:
         picks = rng.integers(0, len(texts), size=cfg.n_requests)
     reqs = []

@@ -267,6 +267,8 @@ def req(text="q", arrival=0.0, deadline=None, forced=-1):
     r = Request(text=text, prompt=np.zeros(4, np.int32), max_new=2,
                 arrival_s=arrival, deadline_s=deadline)
     r.forced_member = forced
+    if forced >= 0:
+        r.forced_member_name = f"m{forced}"   # members resolve by NAME
     return r
 
 

@@ -1,0 +1,368 @@
+"""Semantic cache (cascade rung 0): admission/eviction/radius properties,
+drift invalidation semantics, the per-request cost and queue-wait
+accounting pins the cache rung depends on, and byte-identical obs replay
+of a cached cascade run.
+
+Property tests run through the ``_hypothesis_compat`` shim: real
+hypothesis when installed, a bounded deterministic example grid otherwise.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.cascade import CascadeConfig, CascadeCoordinator, CascadePolicy
+from repro.obs import ObsFlusher, TraceRecorder
+from repro.online import DriftDetector
+from repro.serving import (
+    DONE,
+    MicroBatchScheduler,
+    PoolMember,
+    REF_TOKENS_OUT,
+    Request,
+    RoutedEngine,
+    SchedulerConfig,
+    SemanticCache,
+    calibrate_radius,
+)
+
+COSTS = (0.1, 1.0, 5.0)
+QUAL = (0.4, 0.7, 0.95)
+STD = (0.05, 0.05, 0.05)
+D = 8
+
+
+def emb_at(x: float, d: int = D) -> np.ndarray:
+    e = np.zeros(d, np.float32)
+    e[0] = x
+    return e
+
+
+def admit(cache, x, quality=1.0, cost=1.0, **kw):
+    return cache.admit(emb_at(x), output=np.arange(4, dtype=np.int32),
+                       member_name="m0", quality=quality, cost=cost, **kw)
+
+
+def make_policy(reward="R2", **cfg):
+    return CascadePolicy([0, 1, 2], CascadeConfig(**cfg), reward=reward)
+
+
+# ---------------------------------------------------------------------------
+# Admission / eviction / radius properties
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionEviction:
+    def test_quality_floor_rejects(self):
+        c = SemanticCache(0.5, cap=4, quality_floor=0.25)
+        assert not admit(c, 0.0, quality=0.1)
+        assert not admit(c, 0.0, quality=float("nan"))
+        assert len(c) == 0
+        assert admit(c, 0.0, quality=0.3)
+        assert len(c) == 1
+
+    def test_within_radius_refreshes_not_appends(self):
+        c = SemanticCache(0.5, cap=4)
+        admit(c, 0.0, quality=0.5)
+        admit(c, 0.1, quality=0.9)           # within radius: refresh in place
+        assert len(c) == 1
+        assert c.stats["refreshed"] == 1
+        hit = c.match(emb_at(0.05))[0]
+        assert hit is not None
+        assert c._entries[hit[0]].quality == 0.9
+
+    def test_lru_evicts_least_recently_used(self):
+        c = SemanticCache(0.4, cap=2)
+        admit(c, 0.0)
+        admit(c, 10.0)
+        # Touch entry 0 (a served hit bumps its LRU tick)...
+        v = c.decide(c.match(emb_at(0.0))[0], lam=10.0)
+        assert v.serve
+        # ...so a third admission evicts the *untouched* entry at 10.0.
+        admit(c, 20.0)
+        assert len(c) == 2 and c.stats["evicted"] == 1
+        assert c.match(emb_at(0.0))[0] is not None
+        assert c.match(emb_at(10.0))[0] is None
+        assert c.match(emb_at(20.0))[0] is not None
+
+    @settings(max_examples=32, deadline=None)
+    @given(st.integers(1, 8), st.integers(1, 40))
+    def test_cap_never_exceeded(self, cap, n):
+        c = SemanticCache(1e-3, cap=cap)   # tiny radius: no refreshes
+        for i in range(n):
+            admit(c, float(i))
+            assert len(c) <= cap
+        assert c.stats["admitted"] == n
+        assert c.stats["evicted"] == max(0, n - cap)
+
+    @settings(max_examples=32, deadline=None)
+    @given(st.floats(0.05, 1.0), st.floats(1.05, 3.0), st.floats(0.0, 3.0))
+    def test_radius_serve_monotone(self, r1, scale, x):
+        """A query served at radius r is served at any radius r' > r
+        (no policy installed: the rung degrades to the radius threshold)."""
+        small = SemanticCache(r1, cap=4)
+        big = SemanticCache(r1 * scale, cap=4)
+        admit(small, 0.0)
+        admit(big, 0.0)
+        v_small = small.decide(small.match(emb_at(x))[0], lam=10.0)
+        v_big = big.decide(big.match(emb_at(x))[0], lam=10.0)
+        if v_small.serve:
+            assert v_big.serve
+        assert v_small.serve == (x <= r1 + 1e-6)
+
+    @settings(max_examples=32, deadline=None)
+    @given(st.floats(0.0, 0.5), st.floats(0.0, 1.5), st.floats(2.0, 50.0))
+    def test_rung0_escalation_monotone_in_sigma(self, s1, ds, lam):
+        """decide_rung0 never flips escalate -> stop as the cache
+        confidence spread widens: the stop value only degrades with
+        sigma while escalation candidates are untouched."""
+        p = make_policy("R2")
+        kw = dict(q_cache=0.8, s_hat=np.asarray(QUAL),
+                  s_std=np.asarray(STD), c_hat=np.asarray(COSTS), lam=lam)
+        d1 = p.decide_rung0(sigma_cache=s1, **kw)
+        d2 = p.decide_rung0(sigma_cache=s1 + ds, **kw)
+        if d1.escalate:
+            assert d2.escalate
+
+    def test_calibrate_radius_on_clustered_corpus(self):
+        rng = np.random.default_rng(0)
+        emb = rng.standard_normal((200, D)).astype(np.float32)
+        r = calibrate_radius(emb)
+        assert r > 0
+        # The radius is a low quantile of NN distances: most points'
+        # nearest neighbors sit at or beyond it.
+        d2 = ((emb[None] - emb[:, None]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        nn = np.sqrt(d2.min(axis=1))
+        assert np.mean(nn >= r) > 0.8
+
+
+class TestDriftInvalidation:
+    def test_probe_marks_stale_and_fresh_admission_rearms(self):
+        c = SemanticCache(0.5, cap=4, invalidate="probe")
+        admit(c, 0.0, quality=0.9)
+        c.on_drift_alarm()
+        v = c.decide(c.match(emb_at(0.0))[0], lam=10.0)
+        assert not v.serve and v.reason == "stale"
+        assert c.stats["stale_hits"] == 1
+        # A fresh outcome inside the region refreshes the entry in place
+        # and clears the stale mark.
+        admit(c, 0.1, quality=0.8)
+        v2 = c.decide(c.match(emb_at(0.0))[0], lam=10.0)
+        assert v2.serve and v2.entry.quality == 0.8
+
+    def test_flush_drops_everything(self):
+        c = SemanticCache(0.5, cap=4, invalidate="flush")
+        admit(c, 0.0)
+        admit(c, 10.0)
+        c.on_drift_alarm()
+        assert len(c) == 0 and c.stats["flushes"] == 1
+        assert c.match(emb_at(0.0))[0] is None
+
+    def test_cache_owned_detector_fires_hook(self):
+        rng = np.random.default_rng(0)
+        ref = rng.standard_normal((128, D)).astype(np.float32)
+        det = DriftDetector(window=16, patience=1).fit(ref)
+        c = SemanticCache(0.5, cap=4, drift=det)
+        admit(c, 0.0)
+        shifted = ref[:32] + 25.0
+        c.observe_queries(shifted, now=1.0)
+        assert c.stats["invalidations"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite pins: delivered-work pricing and true queue-wait accounting
+# ---------------------------------------------------------------------------
+
+
+class FakeMember:
+    def __init__(self, name, cost_rate):
+        self.name, self.cost_rate = name, cost_rate
+
+    def generate(self, prompts, max_new=8, attn_mask=None):
+        return np.zeros((len(prompts), max_new), np.int32)
+
+
+class TestDeliveredWorkPricing:
+    def test_chunk_mates_with_different_caps_pay_different_dollars(self):
+        """Pinned (token-blind cost bug): two requests in one micro-batch
+        with different ``max_new`` caps must be charged different $ —
+        prefill plus each request's OWN delivered tokens, never an even
+        split of a flat per-request price."""
+        eng = RoutedEngine(router=None, pool=[FakeMember("m0", 2.0)])
+        prompts = [np.zeros(3, np.int32), np.zeros(5, np.int32)]
+        outs, costs = eng.generate_member(0, prompts, max_new=8,
+                                          max_new_per_req=[2, 8])
+        per_tok = 2.0 / REF_TOKENS_OUT
+        assert costs.shape == (2,)
+        assert costs[0] == pytest.approx(per_tok * (3 + 2))
+        assert costs[1] == pytest.approx(per_tok * (5 + 8))
+        assert costs[0] != costs[1]
+
+    def test_scheduler_threads_per_request_costs(self):
+        eng = RoutedEngine(router=None, pool=[FakeMember("m0", 2.0)])
+        eng.lam = 10.0
+        eng.score_texts = lambda texts: (
+            np.ones((len(texts), 1)), np.ones((len(texts), 1)))
+        eng.choose = lambda s, c, lam=None: np.zeros(len(s), np.int64)
+        sched = MicroBatchScheduler(
+            eng, SchedulerConfig(score_batch=4, max_batch=4),
+            service_time=lambda kind, n, wall: 1e-3)
+        short = Request(text="a", prompt=np.zeros(3, np.int32), max_new=2,
+                        arrival_s=0.0)
+        long = Request(text="b", prompt=np.zeros(3, np.int32), max_new=8,
+                       arrival_s=0.0)
+        sched.queue.offer(short, 0.0)
+        sched.queue.offer(long, 0.0)
+        served = sched.dispatch()
+        assert {r.status for r in served} == {DONE}
+        per_tok = 2.0 / REF_TOKENS_OUT
+        assert short.cost == pytest.approx(per_tok * (3 + 2))
+        assert long.cost == pytest.approx(per_tok * (3 + 8))
+        assert short.cost < long.cost
+        # Telemetry sums the real per-request charges, not n * flat.
+        assert float(np.sum(sched.telemetry.member_spend)) == pytest.approx(
+            short.cost + long.cost)
+
+
+class FakeCascadeEngine:
+    """Cascade scoring surface with per-text belief tables (test stub)."""
+
+    def __init__(self, quality_of=None, lam=10.0):
+        self.pool = [FakeMember(f"m{i}", c) for i, c in enumerate(COSTS)]
+        self.lam = lam
+        self.quality_of = quality_of or {}
+
+    def embed(self, texts):
+        self._last_texts = list(texts)
+        return np.zeros((len(texts), 4), np.float32)
+
+    def score_emb_uncertainty(self, q_emb):
+        b = len(q_emb)
+        s = np.stack([
+            np.asarray(self.quality_of.get(t, QUAL), np.float64)
+            for t in self._last_texts[:b]])
+        return s, np.tile(STD, (b, 1)), np.tile(COSTS, (b, 1))
+
+    def score_emb(self, q_emb):
+        s, _, c = self.score_emb_uncertainty(q_emb)
+        return s, c
+
+    def score_texts(self, texts):
+        self.embed(texts)
+        return self.score_emb(np.zeros((len(texts), 4), np.float32))
+
+    def choose(self, s_hat, c_hat, lam=None):
+        lam = self.lam if lam is None else lam
+        return np.argmax(s_hat * np.exp(-c_hat / lam), axis=-1)
+
+    def generate_member(self, mi, prompts, max_new=8):
+        outs = [np.full(max_new, mi, np.int32) for _ in prompts]
+        return outs, self.pool[mi].cost_rate * len(prompts)
+
+
+class TestQueueWaitAccounting:
+    def test_cascade_wait_excludes_earlier_legs_service(self):
+        """Pinned (queue-wait pollution bug): an escalated request's
+        queued_s is the SUM of its per-leg waits — earlier legs'
+        generation time must never be booked as queueing."""
+        eng = FakeCascadeEngine(lam=10.0)
+        coord = CascadeCoordinator(make_policy("R2"))
+        sched = MicroBatchScheduler(
+            eng, SchedulerConfig(score_batch=16, max_batch=16),
+            cascade=coord, service_time=lambda kind, n, wall: 1e-3)
+        r = Request(text="q", prompt=np.zeros(4, np.int32), max_new=2,
+                    arrival_s=0.0)
+        r.forced_member = 0
+        r.forced_member_name = "m0"
+        sched.queue.offer(r, 0.0)
+        while not r.finalized:
+            sched.dispatch()
+        assert r.leg >= 2                      # it escalated
+        e2e = r.finish_s - r.arrival_s
+        gen_time = r.leg * 1e-3                # one generate advance per leg
+        # True wait: arrival->service for leg 1, readmit->service after.
+        # Each leg adds exactly the 1e-3 scoring advance of its dispatch.
+        assert r.queued_s == pytest.approx(r.leg * 1e-3)
+        # The old bug booked leg-1 generation into the last leg's wait:
+        # queued_s would be finish-side, violating wait + service <= e2e.
+        assert r.queued_s <= e2e - gen_time + 1e-9
+        assert r.queued_s < e2e
+
+
+# ---------------------------------------------------------------------------
+# Byte-identical obs replay of a cached cascade run
+# ---------------------------------------------------------------------------
+
+
+class SemCacheReplayEngine(FakeCascadeEngine):
+    """Deterministic embeddings per text; recovers texts from q_emb rows so
+    scoring stays correct for the post-cache-rung SUBSET of a batch."""
+
+    def __init__(self, emb_of, **kw):
+        super().__init__(**kw)
+        self.emb_of = {t: np.asarray(e, np.float32)
+                       for t, e in emb_of.items()}
+        self._text_of = {e.tobytes(): t for t, e in self.emb_of.items()}
+
+    def embed(self, texts):
+        return np.stack([self.emb_of[t] for t in texts])
+
+    def score_emb_uncertainty(self, q_emb):
+        texts = [self._text_of[np.asarray(r, np.float32).tobytes()]
+                 for r in q_emb]
+        s = np.stack([
+            np.asarray(self.quality_of.get(t, QUAL), np.float64)
+            for t in texts])
+        b = len(texts)
+        return s, np.tile(STD, (b, 1)), np.tile(COSTS, (b, 1))
+
+
+def _cached_cascade_run(out_dir: str) -> str:
+    rng = np.random.default_rng(7)
+    centers = rng.standard_normal((4, D)).astype(np.float32)
+    texts, emb_of = [], {}
+    for j in range(4):
+        for k in range(6):
+            t = f"c{j}.v{k}"
+            texts.append(t)
+            emb_of[t] = (centers[j]
+                         + 0.03 * rng.standard_normal(D).astype(np.float32))
+    eng = SemCacheReplayEngine(emb_of, lam=25.0)
+    policy = make_policy("R2", max_legs=3)
+    coord = CascadeCoordinator(policy)
+    det = DriftDetector(window=16, patience=1).fit(
+        np.stack([emb_of[t] for t in texts]), centers)
+    cache = SemanticCache(1.0, cap=16, policy=policy, drift=det)
+    recorder = TraceRecorder(label="semcache-replay")
+    flusher = ObsFlusher(out_dir, recorder=recorder, scrape_every_s=5e-3,
+                         label="semcache-replay")
+    sched = MicroBatchScheduler(
+        eng, SchedulerConfig(score_batch=8, max_batch=8),
+        cascade=coord, semcache=cache, tracer=recorder.scoped(0),
+        flusher=flusher, service_time=lambda kind, n, wall: 1e-3)
+    reqs = [Request(text=texts[i % len(texts)],
+                    prompt=np.zeros(4, np.int32), max_new=2,
+                    arrival_s=i * 1e-3)
+            for i in range(48)]
+    summary = sched.run_trace(reqs)
+    flusher.finalize(sched.clock.now)
+    assert summary["completed"] == 48
+    assert cache.stats["served"] > 0           # the rung actually fired
+    return recorder.to_json()
+
+
+class TestCachedRunReplay:
+    def test_obs_dir_byte_identical_across_replays(self, tmp_path):
+        d1, d2 = str(tmp_path / "run1"), str(tmp_path / "run2")
+        t1 = _cached_cascade_run(d1)
+        t2 = _cached_cascade_run(d2)
+        assert t1 == t2
+        names1, names2 = sorted(os.listdir(d1)), sorted(os.listdir(d2))
+        assert names1 == names2 and names1
+        for n in names1:
+            with open(os.path.join(d1, n), "rb") as f1, \
+                    open(os.path.join(d2, n), "rb") as f2:
+                assert f1.read() == f2.read(), n

@@ -117,6 +117,7 @@ def run_trace():
         # Canonical cascade: every request starts at the cheapest rung and
         # buys stronger opinions only when the answer in hand is weak.
         r.forced_member = int(ladder[0])
+        r.forced_member_name = engine.pool[int(ladder[0])].name
         reqs.append(r)
         embs.append(e)
     emb_of = {r.text: e for r, e in zip(reqs, embs)}

@@ -142,6 +142,7 @@ def run_traced(stream_dir=None):
         r = Request(text=text, prompt=np.zeros(2, np.int32),
                     max_new=2, arrival_s=i * 1e-3)
         r.forced_member = int(ladder[0])
+        r.forced_member_name = engine.pool[int(ladder[0])].name
         reqs.append(r)
         embs.append(e)
     emb_of = {r.text: e for r, e in zip(reqs, embs)}
@@ -174,6 +175,47 @@ def run_traced(stream_dir=None):
     return trace_json, registry.to_json(deterministic=True), summary, recorder
 
 
+def run_rescue():
+    """Deadline-pressure variant: requests whose deadlines fire mid-cascade
+    while they hold a best-so-far answer are *rescued* (finalized done with
+    the answer in hand), requests that expire empty-handed stay expired —
+    and the trace must tell the same story as the queue counters: a rescued
+    tree carries a ``rescued`` instant and a done root, never an ``expire``
+    instant, and the ``expire`` instants in the trace match ``queue.expired``
+    exactly."""
+    rng = np.random.default_rng(SEED)
+    engine = build_engine(rng)
+    easy = region_emb(rng, N_REQ // 2, +1.0)
+    hard = region_emb(rng, N_REQ // 2, -1.0)
+    truth = {}
+    ladder = cost_ladder(engine.router)
+    reqs, embs = [], []
+    for i in range(N_REQ):
+        is_hard = i % 2 == 1
+        e = hard[i // 2] if is_hard else easy[i // 2]
+        text = f"{'hard' if is_hard else 'easy'}-{i}"
+        truth[text] = QUAL_HARD if is_hard else QUAL_EASY
+        r = Request(text=text, prompt=np.zeros(2, np.int32),
+                    max_new=2, arrival_s=i * 1e-3,
+                    deadline_s=i * 1e-3 + 4e-3)
+        r.forced_member = int(ladder[0])
+        r.forced_member_name = engine.pool[int(ladder[0])].name
+        reqs.append(r)
+        embs.append(e)
+    emb_of = {r.text: e for r, e in zip(reqs, embs)}
+    engine.embed = lambda texts: np.stack([emb_of[t] for t in texts])
+    recorder = TraceRecorder(label="obs-smoke-rescue")
+    coordinator = CascadeCoordinator(
+        CascadePolicy(ladder, CascadeConfig(max_legs=3, beta=1.0)),
+        observed_quality=lambda r: float(truth[r.text][r.member]))
+    sched = MicroBatchScheduler(
+        engine, SchedulerConfig(score_batch=16, max_batch=16),
+        cascade=coordinator, service_time=lambda kind, n, wall: 1e-3,
+        tracer=recorder.scoped(0))
+    summary = sched.run_trace(reqs)
+    return recorder.to_json(), summary, sched
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--out-dir", default="reports/obs_smoke",
@@ -198,6 +240,28 @@ def main() -> int:
         for t in trees.values())
     legs = [e for t in trees.values() for e in t["legs"]]
     linked = legs and all("gen" in (e.get("args") or {}) for e in legs)
+
+    # Deadline-rescue mode: the span tree must agree with the queue
+    # counters about who was rescued (done, answer in hand) vs expired.
+    r_trace, r_sum, r_sched = run_rescue()
+    rdoc = json.loads(r_trace)
+    r_tree_errors = validate_span_tree(rdoc)
+    r_trees = request_trees(rdoc)
+    n_rescued = n_expire_inst = 0
+    rescue_consistent = True
+    for t in r_trees.values():
+        names = [e["name"] for e in t["events"]]
+        root_args = ((t["root"] or {}).get("args") or {})
+        n_rescued += names.count("rescued")
+        n_expire_inst += names.count("expire")
+        if "rescued" in names:
+            # A rescued request finalizes done on its best-so-far answer;
+            # an expire instant in the same tree would contradict it.
+            rescue_consistent &= ("expire" not in names
+                                  and root_args.get("status") == "done"
+                                  and root_args.get("rescued") is True)
+        elif "expire" in names:
+            rescue_consistent &= root_args.get("status") == "expired"
 
     # Streaming mode: same seeded scenario through sampling + cap +
     # rotating flushes, twice, into sibling segment dirs.
@@ -236,6 +300,9 @@ def main() -> int:
         "cascade decisions traced":
             summ["by_name"].get("cascade_decision", 0) >= N_REQ,
         "legs link their generate micro-batch span": bool(linked),
+        "rescue trees consistent (rescued != expired)":
+            n_rescued >= 1 and rescue_consistent and not r_tree_errors
+            and n_expire_inst == r_sched.queue.expired,
         "replay bit-identity (trace)": trace1 == trace2,
         "replay bit-identity (metrics)": metrics1 == metrics2,
         "streaming concat schema+tree valid": not (s_schema or s_tree),
