@@ -88,6 +88,32 @@ class CascadePolicy:
         self.reward = reward
         self._rank = {m: i for i, m in enumerate(self.ladder)}
 
+    def refresh(self, router) -> bool:
+        """Re-derive the ladder after a hot pool mutation.
+
+        ``add_member`` / ``remove_member`` change the pool's member-index
+        space while the policy's ladder still ranks the *old* members —
+        a freshly added member could never be escalated to, and a removed
+        member's stale rung could be selected. Called by the scheduler
+        every dispatch round (next to the telemetry member re-sync); a
+        no-op unless the router's member count disagrees with the ladder
+        length, so unmutated pools pay one integer compare. Routers
+        without a per-member cost scaler (hand-built stubs) are left
+        alone. Returns True when the ladder was rebuilt.
+        """
+        scaler = getattr(router, "cost_scaler", None)
+        if scaler is None or np.ndim(scaler.get("mu")) != 1:
+            return False
+        if len(scaler["mu"]) == len(self.ladder):
+            return False
+        try:
+            ladder = cost_ladder(router)
+        except ValueError:
+            return False
+        self.ladder = [int(m) for m in ladder]
+        self._rank = {m: i for i, m in enumerate(self.ladder)}
+        return True
+
     def _reward(self, s: float, c: float, lam: float) -> float:
         return float(REWARDS[self.reward](np.float64(s), np.float64(c), lam))
 

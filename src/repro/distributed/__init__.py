@@ -1,29 +1,55 @@
 """Multi-worker serving plane: the serve->learn loop across N workers.
 
 Converts every in-process singleton of the single-worker online loop into
-an explicitly synchronized, worker-replicated component:
+an explicitly synchronized, worker-replicated component, communicating
+through typed messages over a pluggable transport:
 
+  * :mod:`messages` — the typed, versioned message vocabulary and the
+    lossless binary codec for the socket wire;
+  * :mod:`transport` — :class:`Transport` with
+    :class:`LocalTransport` (deterministic in-process loopback,
+    by-reference delivery), :class:`SocketTransport` (length-prefixed
+    TCP between real OS processes), and :class:`FaultyTransport`
+    (seeded drop/dup/reorder fault injection for tests);
   * :mod:`worker` — :class:`WorkerNode`: engine replica + scheduler +
-    local replay, with crash/rejoin semantics;
+    local replay, a transport endpoint with crash/rejoin semantics;
   * :mod:`coordinator` — :class:`Coordinator`: seeded deterministic replay
     merge onto the leader, bounded leader updates, versioned router
     broadcast with stale-publish rejection, lowest-id leader election;
   * :mod:`ledger` — :class:`SharedBudgetLedger`: one global $/window
-    budget across all workers' governors;
+    budget across all workers' governors; :class:`LedgerClient`: the
+    remote-process facade for it;
   * :mod:`plane` — :class:`ServingPlane`: the deterministic multi-clock
     event loop, round-robin request assignment, scenario (crash/rejoin)
-    events, and per-worker telemetry rollup.
+    events, and per-worker telemetry rollup;
+  * :mod:`shard` — pool-member ownership across workers and the
+    scheduler-side dispatcher that routes generate legs to the owner;
+  * :mod:`host` — the follower process entry point
+    (``python -m repro.distributed.host``) and the controller-side
+    :class:`RemoteWorkerProxy`.
 
-Driver: ``python -m repro.launch.serve --workers N`` (see README
-"Multi-worker serving"); parity benchmark:
-``benchmarks/distributed_bench.py``.
+Driver: ``python -m repro.launch.serve --workers N --transport
+{local,socket}`` (see README "Multi-host serving"); parity benchmark:
+``benchmarks/distributed_bench.py``; socket smoke:
+``tools/distributed_smoke.py``.
 """
 from repro.distributed.coordinator import Coordinator, SyncConfig
-from repro.distributed.ledger import SharedBudgetLedger
+from repro.distributed.ledger import LedgerClient, SharedBudgetLedger
+from repro.distributed.messages import Message, decode, encode
 from repro.distributed.plane import PlaneEvent, ServingPlane
+from repro.distributed.shard import PoolDispatcher, owner_of
+from repro.distributed.transport import (
+    FaultyTransport,
+    LocalTransport,
+    SocketTransport,
+    Transport,
+    TransportError,
+)
 from repro.distributed.worker import WorkerNode
 
 __all__ = [
-    "Coordinator", "PlaneEvent", "ServingPlane", "SharedBudgetLedger",
-    "SyncConfig", "WorkerNode",
+    "Coordinator", "FaultyTransport", "LedgerClient", "LocalTransport",
+    "Message", "PlaneEvent", "PoolDispatcher", "ServingPlane",
+    "SharedBudgetLedger", "SocketTransport", "SyncConfig", "Transport",
+    "TransportError", "WorkerNode", "decode", "encode", "owner_of",
 ]

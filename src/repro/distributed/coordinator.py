@@ -22,15 +22,36 @@ requires each to become an explicitly synchronized component:
     current by the broadcasts) anchors a fresh updater; Adam moments reset,
     exactly like the hot-membership warm-start path.
 
+Since the message-passing refactor, every worker interaction above is a
+:class:`~repro.distributed.messages.Message` over a
+:class:`~repro.distributed.transport.Transport` — ``SYNC_STATUS`` /
+``REPLAY_SAMPLE`` / ``ROUTER_BCAST`` / ``CLEAR_BURST`` / ``CACHE_INVAL``
+— so the same coordinator drives in-process workers (LocalTransport,
+by-reference, bit-identical to the pre-refactor plane) and real remote
+processes (SocketTransport). The one deliberate exception: the
+coordinator is **co-located with the leader** — the updater reads
+``leader.engine`` / ``leader.adapter`` directly (gathering gradients over
+a wire buys nothing when the update runs on exactly one node), which in
+socket mode pins the controller process to worker 0.
+
+An unreachable worker (socket partition) is skipped for the round and
+counted in ``stats["unreachable"]``; version fencing makes the eventual
+``converge()`` catch-up safe regardless of what it missed.
+
 Follower drift alarms don't burst locally (that would fork router
 lineages); they raise ``pending_burst``, and the next sync round runs one
-concentrated burst on the leader instead.
+concentrated burst on the leader instead — and, since the burst signals
+the query distribution moved, broadcasts a ``CACHE_INVAL`` so every
+worker's semantic cache invalidates together instead of drifting apart.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
+from repro.distributed import messages as M
+from repro.distributed.messages import Message
+from repro.distributed.transport import LocalTransport, TransportError
 from repro.online.replay import ReplayBuffer
 from repro.online.updater import IncrementalUpdater, OnlineUpdateConfig
 
@@ -49,9 +70,15 @@ class SyncConfig:
 
 
 class Coordinator:
-    def __init__(self, workers: List, config: Optional[SyncConfig] = None):
+    def __init__(self, workers: List, config: Optional[SyncConfig] = None,
+                 *, transport=None):
         self.workers = list(workers)
         self.config = config or SyncConfig()
+        self.transport = transport if transport is not None \
+            else LocalTransport()
+        for w in self.workers:
+            if hasattr(w, "bind") and getattr(w, "transport", None) is None:
+                w.bind(self.transport)
         self.merge_replay = ReplayBuffer(self.config.merge_capacity,
                                          seed=self.config.seed)
         self._updater: Optional[IncrementalUpdater] = None
@@ -64,8 +91,29 @@ class Coordinator:
         self.stats = {
             "syncs": 0, "merged": 0, "updates": 0, "update_steps": 0,
             "bursts": 0, "broadcasts": 0, "stale_rejected": 0,
-            "leader_changes": 0,
+            "leader_changes": 0, "unreachable": 0, "cache_invals": 0,
         }
+
+    # -- transport helpers ---------------------------------------------------
+
+    def _request(self, wid: int, kind: str,
+                 payload: Optional[dict] = None) -> Optional[dict]:
+        """One RPC to a worker endpoint; None = unreachable this round."""
+        try:
+            rep = self.transport.request(
+                Message(kind=kind, dst=wid, payload=payload or {}))
+        except TransportError:
+            self.stats["unreachable"] += 1
+            return None
+        return rep.payload
+
+    def _send(self, wid: int, kind: str,
+              payload: Optional[dict] = None) -> None:
+        try:
+            self.transport.send(
+                Message(kind=kind, dst=wid, payload=payload or {}))
+        except TransportError:
+            self.stats["unreachable"] += 1
 
     # -- membership ----------------------------------------------------------
 
@@ -98,11 +146,10 @@ class Coordinator:
         ascending worker-id order (deterministic merge order)."""
         n = 0
         for w in self.alive:
-            if w.adapter is None:
-                continue
-            batch = w.adapter.replay.sample(
-                self.config.merge_per_worker,
-                recent_frac=self.config.merge_recent_frac)
+            rep = self._request(w.wid, M.REPLAY_SAMPLE, {
+                "n": self.config.merge_per_worker,
+                "recent_frac": self.config.merge_recent_frac})
+            batch = None if rep is None else rep.get("batch")
             if batch is None:
                 continue
             for q, m, s, c, t in zip(batch["q_emb"], batch["member"],
@@ -111,6 +158,16 @@ class Coordinator:
                 n += 1
         self.stats["merged"] += n
         return n
+
+    def _statuses(self) -> Dict[int, dict]:
+        """SYNC_STATUS from every alive worker (ascending wid); workers
+        unreachable this round are simply absent from the map."""
+        out: Dict[int, dict] = {}
+        for w in self.alive:
+            st = self._request(w.wid, M.SYNC_STATUS)
+            if st is not None:
+                out[w.wid] = st
+        return out
 
     def sync_round(self, now: float):
         """One leader/follower cycle: merge -> bounded update -> broadcast.
@@ -124,33 +181,37 @@ class Coordinator:
         updater = self._ensure_updater(leader)
         self.stats["syncs"] += 1
 
+        statuses = self._statuses()
         # Read (don't clear) escalated follower bursts: if this round can't
         # run steps yet (empty merge buffer), the flags must survive to the
         # round that can — the drift detector already re-anchored, so a
         # dropped flag would mean the burst never happens at all.
-        burst = any(w.adapter is not None and w.adapter.pending_burst
-                    for w in self.alive)
+        burst = any(st["has_adapter"] and st["pending_burst"]
+                    for st in statuses.values())
         # Idle guard: if no worker observed anything since the last round
         # (long traffic gaps fire many sync boundaries), don't re-gather
         # and re-train on the same stale samples. Compared per worker id
         # (not as a sum): a crash removes a worker's count and a rejoin
         # resets it, either of which could make an aggregate alias.
-        snap = {w.wid: w.adapter.replay.added for w in self.alive
-                if w.adapter is not None}
+        snap = {wid: st["added"] for wid, st in statuses.items()
+                if st["has_adapter"]}
         if snap == self._last_outcome_snap and not burst:
             return None
         self._last_outcome_snap = snap
         # Like the solo adapter's min_buffer, counted over DISTINCT held
         # outcomes — the merge buffer itself is inflated by with-replacement
         # sampling, so its length would pass on a near-empty fleet.
-        distinct = sum(len(w.adapter.replay) for w in self.alive
-                       if w.adapter is not None)
+        distinct = sum(st["distinct"] for st in statuses.values()
+                       if st["has_adapter"])
         if distinct < self.config.min_buffer:
             return None
         self.merge_round(now)
         if len(self.merge_replay) < self.config.min_buffer:
             return None
         steps = self.config.burst_steps if burst else self.config.steps_per_sync
+        # Leader co-location: the update runs against the leader's live
+        # engine/adapter in this process — the one shared-object access
+        # the transport abstraction deliberately keeps.
         model_emb = (leader.adapter.membership.model_emb
                      if leader.adapter is not None
                      else leader.engine.router.model_emb)
@@ -159,9 +220,17 @@ class Coordinator:
             return None
         if burst:
             for w in self.alive:
-                if w.adapter is not None:
-                    w.adapter.pending_burst = False
+                st = statuses.get(w.wid)
+                if st is not None and st["has_adapter"]:
+                    self._send(w.wid, M.CLEAR_BURST)
             self.stats["bursts"] += 1
+            # The burst means the query distribution moved: invalidate
+            # every worker's semantic cache in the same round, so no
+            # worker keeps serving answers its peers already dropped.
+            for w in self.alive:
+                self._send(w.wid, M.CACHE_INVAL,
+                           {"mode": "probe", "now": now})
+                self.stats["cache_invals"] += 1
         new_router = updater.publish(leader.engine, model_emb)
         leader.swaps_accepted += 1
         self.stats["updates"] += 1
@@ -182,7 +251,10 @@ class Coordinator:
             if w is exclude:
                 continue
             self.stats["broadcasts"] += 1
-            if w.publish(router):
+            rep = self._request(w.wid, M.ROUTER_BCAST, {"router": router})
+            if rep is None:
+                continue            # partitioned: converge() repairs later
+            if rep["accepted"]:
                 ok += 1
             else:
                 self.stats["stale_rejected"] += 1
@@ -194,8 +266,11 @@ class Coordinator:
         if leader is None or worker is leader:
             return
         router = leader.engine.router
-        if router.version > worker.engine.router.version:
-            worker.publish(router)
+        st = self._request(worker.wid, M.SYNC_STATUS)
+        if st is None:
+            return
+        if router.version > st["version"]:
+            self._request(worker.wid, M.ROUTER_BCAST, {"router": router})
 
     def converge(self) -> None:
         """Ensure every alive worker holds the leader's router version."""
@@ -207,11 +282,13 @@ class Coordinator:
     def report(self) -> str:
         s = self.stats
         leader = self.leader
+        unreachable = (f"  unreachable {s['unreachable']}"
+                       if s["unreachable"] else "")
         return (
             f"coordinator: leader w{leader.wid if leader else '-'}  "
             f"syncs {s['syncs']}  merged {s['merged']} outcomes  "
             f"updates {s['updates']} ({s['update_steps']} steps, "
             f"{s['bursts']} bursts)  broadcasts {s['broadcasts']} "
             f"(stale rejected {s['stale_rejected']})  "
-            f"leader changes {s['leader_changes']}"
+            f"leader changes {s['leader_changes']}{unreachable}"
         )

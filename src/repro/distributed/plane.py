@@ -1,23 +1,34 @@
 """Multi-worker serving plane: N micro-batching workers, one leader.
 
-Simulates a sharded deployment over local state: requests are assigned
-round-robin across workers (a front-door load balancer), every worker runs
-the continuous micro-batching loop from :mod:`repro.serving.scheduler`
-against the shared pool on its own virtual clock, and the
+Requests are assigned round-robin across workers (a front-door load
+balancer), every worker runs the continuous micro-batching loop from
+:mod:`repro.serving.scheduler` on its own virtual clock, and the
 :class:`~repro.distributed.coordinator.Coordinator` periodically runs the
 replay-merge -> leader-update -> broadcast cycle.
+
+Since the message-passing refactor the plane drives workers exclusively
+through :class:`~repro.distributed.messages.Message` traffic on the
+coordinator's :class:`~repro.distributed.transport.Transport` —
+``ASSIGN`` / ``NEXT_ACTION`` / ``STEP`` / ``CRASH`` / ``REJOIN`` /
+``TICK`` / ``FINALIZE``. Over
+:class:`~repro.distributed.transport.LocalTransport` the messages are
+delivered by reference to in-process :class:`WorkerNode` endpoints —
+the event sequence (and therefore every seeded replay) is bit-identical
+to the pre-refactor shared-object plane. Over
+:class:`~repro.distributed.transport.SocketTransport` the same loop
+drives real OS processes (see :mod:`repro.distributed.host`); the
+``workers`` list then holds :class:`~repro.distributed.host.
+RemoteWorkerProxy` mirrors that satisfy the reporting surface
+(``telemetry``, ``router_version``, ``clock``) by RPC.
 
 The event loop is deterministic: it always advances the worker with the
 earliest next-action time (ties by worker id), fires sync rounds at fixed
 virtual-time boundaries, and applies crash/rejoin scenario events in
 timestamp order. A crashed worker's queued and future requests are
 reassigned to the survivors; a rejoining worker comes back with empty
-online state and catch-up swaps to the current router version.
-
-Wall-clock parallelism is simulated, not real: workers advance independent
-virtual clocks, which models N hosts serving concurrently while keeping
-the whole plane single-process, seeded, and bit-reproducible (the property
-every test and benchmark in this repo is built on).
+online state and catch-up swaps to the current router version. A worker
+whose transport endpoint is unreachable (socket partition) is treated as
+unable to act until the crash/rejoin machinery reconciles it.
 """
 from __future__ import annotations
 
@@ -25,6 +36,9 @@ import dataclasses
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
+from repro.distributed import messages as M
+from repro.distributed.messages import Message
+from repro.distributed.transport import TransportError
 from repro.serving.telemetry import Telemetry
 
 
@@ -43,6 +57,7 @@ class ServingPlane:
                  flusher=None):
         self.workers = {w.wid: w for w in workers}
         self.coordinator = coordinator
+        self.transport = coordinator.transport
         self.sync_every_s = (coordinator.config.sync_every_s
                              if sync_every_s is None else sync_every_s)
         self.events = sorted(
@@ -55,7 +70,8 @@ class ServingPlane:
         # coordinator stamps its events with the leader's wid, and
         # scenario events land here. One recorder means a request that
         # migrates between workers (crash reassignment) keeps one span
-        # tree across pids.
+        # tree across pids. (Socket mode has per-process recorders
+        # instead, merged by the driver at end of run.)
         self.tracer = tracer
         if tracer is not None and getattr(coordinator, "tracer", None) \
                 is None:
@@ -65,6 +81,17 @@ class ServingPlane:
         # high-water virtual time — flush boundaries are a pure function
         # of the seeded schedule, so segment contents replay bit-identical.
         self.flusher = flusher
+
+    # -- transport helpers ---------------------------------------------------
+
+    def _request(self, wid: int, kind: str,
+                 payload: Optional[dict] = None) -> Optional[dict]:
+        try:
+            rep = self.transport.request(
+                Message(kind=kind, dst=wid, payload=payload or {}))
+        except TransportError:
+            return None
+        return rep.payload
 
     # -- request assignment --------------------------------------------------
 
@@ -84,9 +111,10 @@ class ServingPlane:
             buckets[w.wid].append(r)
         for w in alive:
             if buckets[w.wid]:
-                merged = sorted(list(w.arrivals) + buckets[w.wid],
-                                key=lambda r: (r.arrival_s, r.rid))
-                w.arrivals = deque(merged)
+                rep = self._request(w.wid, M.ASSIGN,
+                                    {"reqs": buckets[w.wid]})
+                if rep is None:     # unreachable: hold for a rejoin
+                    self._stash.extend(buckets[w.wid])
 
     # -- scenario events -----------------------------------------------------
 
@@ -96,13 +124,20 @@ class ServingPlane:
             self.tracer.instant("plane_event", "plane", e.t, wid=e.wid,
                                 args={"kind": e.kind})
         if e.kind == "crash" and w.alive:
-            orphans = w.crash(e.t)
+            rep = self._request(e.wid, M.CRASH, {"t": e.t})
+            orphans = rep["orphans"] if rep is not None else []
+            w.alive = False
             self.reassigned += len(orphans)
             self._assign(orphans)
         elif e.kind == "rejoin" and not w.alive:
             leader = self.coordinator.leader
             router = leader.engine.router if leader is not None else None
-            w.rejoin(e.t, router)
+            rep = self._request(e.wid, M.REJOIN,
+                                {"t": e.t, "router": router,
+                                 "replay_seed": None})
+            if rep is None:
+                return              # still unreachable: stays down
+            w.alive = True
             if self._stash:
                 stash, self._stash = self._stash, []
                 self._assign(stash)
@@ -117,6 +152,10 @@ class ServingPlane:
 
     # -- the deterministic event loop ----------------------------------------
 
+    def _next_action(self, w) -> float:
+        rep = self._request(w.wid, M.NEXT_ACTION)
+        return float("inf") if rep is None else float(rep["t"])
+
     def run_trace(self, trace: Sequence) -> Dict:
         """Serve an open-loop trace across the worker fleet to completion."""
         self._assign(list(trace))
@@ -126,7 +165,7 @@ class ServingPlane:
         next_sync = t_start + self.sync_every_s
         t_hi = t_start                  # fleet high-water virtual time
         while True:
-            acts = [(w.next_action_s(), w.wid) for w in self._alive()]
+            acts = [(self._next_action(w), w.wid) for w in self._alive()]
             acts = [a for a in acts if a[0] != float("inf")]
             t_next, wid = min(acts) if acts else (float("inf"), -1)
             t_ev = ev[0].t if ev else float("inf")
@@ -145,27 +184,36 @@ class ServingPlane:
                 if self.flusher is not None:
                     self.flusher.maybe_flush(t_hi)
                 continue
-            self.workers[wid].step(t_next)
+            rep = self._request(wid, M.STEP, {"t": t_next})
+            w = self.workers[wid]
+            if rep is not None and hasattr(w, "observe_step"):
+                w.observe_step(rep)     # proxy mirrors clock/served counts
             t_hi = max(t_hi, t_next)
             if self.flusher is not None:
                 self.flusher.maybe_flush(t_hi)
 
         t_end = max(w.clock.now for w in self.workers.values())
         for w in self._alive():
-            if w.adapter is not None:
-                w.adapter.tick(t_end)     # final staged-feedback flush
+            self._request(w.wid, M.TICK, {"t": t_end})
         self.coordinator.sync_round(t_end)
         self.coordinator.converge()
-        # Forced end-of-run SLO evaluation (the fleet shares one tracker):
-        # a run shorter than the check throttle must still surface alerts.
-        slos = {id(w.scheduler.slo): w.scheduler.slo
-                for w in self.workers.values()
-                if w.scheduler.slo is not None}
-        for slo in slos.values():
-            slo.check(t_end, force=True)
+        # Forced end-of-run SLO evaluation. In-process workers may SHARE
+        # one tracker (the fleet-wide SLO view) — dedup by object id so a
+        # run shorter than the check throttle still surfaces each alert
+        # exactly once; remote proxies own per-process trackers and always
+        # check.
+        seen_slos: set = set()
         for w in self.workers.values():
-            w.telemetry.rejected = w.queue.rejected
-            w.telemetry.expired = w.queue.expired
+            check_slo = True
+            sched = getattr(w, "scheduler", None)
+            if sched is not None:
+                slo = getattr(sched, "slo", None)
+                if slo is None or id(slo) in seen_slos:
+                    check_slo = False
+                else:
+                    seen_slos.add(id(slo))
+            self._request(w.wid, M.FINALIZE,
+                          {"t": t_end, "check_slo": check_slo})
         return self.summary(t_end - t_start)
 
     # -- reporting -----------------------------------------------------------

@@ -6,8 +6,18 @@ are per-worker and atomic), its own admission queue / micro-batching
 scheduler / virtual clock (workers run concurrently in real deployments —
 their virtual clocks advance independently), and — in online mode — a
 follower :class:`~repro.online.loop.OnlineAdapter` whose replay buffer is
-the worker's local outcome log. Pool member *parameters* are shared across
-workers (one copy of the weights per host in the simulated deployment).
+the worker's local outcome log.
+
+Since the message-passing refactor the worker is also a **transport
+endpoint**: :meth:`bind` registers :meth:`handle` on a
+:class:`~repro.distributed.transport.Transport`, and every protocol
+interaction (sync status, replay gather, router broadcast, plane step,
+crash/rejoin, sharded generate, ledger ops, telemetry/trace dumps)
+arrives as a :class:`~repro.distributed.messages.Message`. The plain
+methods below remain the implementation the handlers dispatch to — and
+stay directly callable, which is what the in-process tests and benches
+do through :class:`~repro.distributed.transport.LocalTransport`'s
+by-reference delivery.
 
 Crash/rejoin models a worker process dying: queued and future requests must
 be reassigned by the plane, and the in-memory online state (replay, staged
@@ -16,9 +26,12 @@ catches up to the current router version from the leader.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from collections import deque
+
+from repro.distributed import messages as M
+from repro.distributed.messages import Message
 
 
 class WorkerNode:
@@ -33,6 +46,150 @@ class WorkerNode:
         self.swaps_accepted = 0
         self.swaps_rejected = 0
         self.crashes = 0
+        self.transport = None
+        # Socket mode: the controller-side worker fronts the real shared
+        # budget ledger for follower LEDGER_OP messages. None = the
+        # scheduler's own governor answers them.
+        self.ledger = None
+        # Socket mode: the follower's process-local TraceRecorder, dumped
+        # to the controller at end of run (local mode shares one recorder
+        # through the scheduler's scoped tracer instead).
+        self.recorder = None
+
+    # -- transport endpoint --------------------------------------------------
+
+    def bind(self, transport) -> None:
+        self.transport = transport
+        transport.bind(self.wid, self.handle)
+
+    def handle(self, msg: Message) -> Optional[dict]:
+        """Service one protocol message; returns the reply payload."""
+        p = msg.payload
+        kind = msg.kind
+        if kind == M.SYNC_STATUS:
+            return self.sync_status()
+        if kind == M.REPLAY_SAMPLE:
+            if self.adapter is None:
+                return {"batch": None}
+            return {"batch": self.adapter.replay.sample(
+                int(p["n"]), recent_frac=float(p["recent_frac"]))}
+        if kind == M.ROUTER_BCAST:
+            return {"accepted": self.publish(p["router"]),
+                    "version": self.router_version}
+        if kind == M.CLEAR_BURST:
+            if self.adapter is not None:
+                self.adapter.pending_burst = False
+            return None
+        if kind == M.CACHE_INVAL:
+            semcache = getattr(self.scheduler, "semcache", None)
+            if semcache is not None:
+                semcache.on_drift_alarm(float(p.get("now", 0.0)))
+            return None
+        if kind == M.ASSIGN:
+            self.assign(p["reqs"])
+            return {"n": len(p["reqs"])}
+        if kind == M.NEXT_ACTION:
+            return {"t": self.next_action_s()}
+        if kind == M.STEP:
+            served = self.step(float(p["t"]))
+            return {"n_served": len(served), "now": self.clock.now}
+        if kind == M.CRASH:
+            return {"orphans": self.crash(float(p["t"]))}
+        if kind == M.REJOIN:
+            self.rejoin(float(p["t"]), p.get("router"),
+                        p.get("replay_seed"))
+            return {"version": self.router_version}
+        if kind == M.TICK:
+            if self.adapter is not None:
+                self.adapter.tick(float(p["t"]))
+            return None
+        if kind == M.FINALIZE:
+            return self.finalize(float(p["t"]),
+                                 check_slo=bool(p.get("check_slo", True)))
+        if kind == M.GENERATE:
+            per_req = p.get("max_new_per_req")
+            if per_req is not None:
+                outs, costs = self.engine.generate_member(
+                    int(p["member"]), p["prompts"],
+                    max_new=int(p["max_new"]), max_new_per_req=per_req)
+            else:
+                outs, costs = self.engine.generate_member(
+                    int(p["member"]), p["prompts"],
+                    max_new=int(p["max_new"]))
+            return {"outs": list(outs), "costs": costs}
+        if kind == M.LEDGER_OP:
+            return self.ledger_op(str(p["op"]), list(p.get("args", ())))
+        if kind == M.TELEMETRY_REQ:
+            return {"telemetry": self.telemetry,
+                    "completed": self.telemetry.completed,
+                    "served": len(self.served),
+                    "swaps_accepted": self.swaps_accepted,
+                    "swaps_rejected": self.swaps_rejected,
+                    "crashes": self.crashes,
+                    "version": self.router_version,
+                    "now": self.clock.now}
+        if kind == M.TRACE_REQ:
+            rec = self.recorder
+            if rec is None:
+                return {"events": [], "next_key": 0}
+            return {"events": list(rec.events), "next_key": rec._next_key}
+        if kind == M.HELLO:
+            return {"wid": self.wid}
+        raise ValueError(f"worker {self.wid}: unknown message kind {kind!r}")
+
+    # -- handler implementations ---------------------------------------------
+
+    def sync_status(self) -> Dict:
+        has_adapter = self.adapter is not None
+        return {
+            "wid": self.wid,
+            "alive": self.alive,
+            "version": self.router_version,
+            "has_adapter": has_adapter,
+            "pending_burst": bool(self.adapter.pending_burst)
+            if has_adapter else False,
+            "added": self.adapter.replay.added if has_adapter else 0,
+            "distinct": len(self.adapter.replay) if has_adapter else 0,
+            "now": self.clock.now,
+        }
+
+    def assign(self, reqs) -> None:
+        """Merge newly assigned requests into the arrival backlog."""
+        merged = sorted(list(self.arrivals) + list(reqs),
+                        key=lambda r: (r.arrival_s, r.rid))
+        self.arrivals = deque(merged)
+
+    def finalize(self, t_end: float, *, check_slo: bool = True) -> Dict:
+        """End-of-run bookkeeping: forced SLO evaluation + queue-level
+        reject/expire counts folded into the telemetry snapshot."""
+        slo = getattr(self.scheduler, "slo", None)
+        if check_slo and slo is not None:
+            slo.check(t_end, force=True)
+        self.telemetry.rejected = self.queue.rejected
+        self.telemetry.expired = self.queue.expired
+        return {"completed": self.telemetry.completed}
+
+    def ledger_op(self, op: str, args: List) -> Dict:
+        """Apply one budget-ledger operation for a remote scheduler.
+
+        In socket mode the real :class:`SharedBudgetLedger` lives in the
+        controller process (``self.ledger``); followers' ``LedgerClient``
+        governors forward their update/record/read calls here so the
+        $/window budget stays global.
+        """
+        gov = self.ledger if self.ledger is not None \
+            else self.scheduler.governor
+        if gov is None:
+            raise ValueError(f"worker {self.wid}: no ledger to apply "
+                             f"{op!r} to")
+        allowed = {"update", "record", "utilization", "headroom",
+                   "window_spend", "summary"}
+        if op not in allowed:
+            raise ValueError(f"unknown ledger op {op!r}")
+        result = getattr(gov, op)(*args)
+        return {"result": result, "lam": gov.lam,
+                "last_action": getattr(gov, "last_action", None),
+                "last_utilization": getattr(gov, "last_utilization", None)}
 
     # -- convenience ---------------------------------------------------------
 

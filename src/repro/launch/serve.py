@@ -7,6 +7,8 @@
         --workers 4 --online --crash-at 0.1 --rejoin-at 0.3
     PYTHONPATH=src python -m repro.launch.serve --trace poisson --requests 200 \
         --cascade --max-legs 3 --budget 0.02
+    PYTHONPATH=src python -m repro.launch.serve --trace drift --requests 200 \
+        --workers 2 --online --transport socket
 
 ``--cascade`` trains the deep-ensemble quality head and runs multi-leg
 escalation (repro.cascade): answers that look inadequate against the next
@@ -27,23 +29,37 @@ drift) through the admission queue + continuous micro-batching scheduler,
 reporting per-member counts, spend vs. budget, and latency percentiles.
 
 ``--workers N`` (N > 1) runs the multi-worker serving plane instead of the
-single scheduler: N workers (simulated multi-host over local state, each
-with its own engine replica, queue, and virtual clock) share the pool and —
-with ``--budget`` — one global SharedBudgetLedger; with ``--online`` the
-workers run follower adapters and the coordinator periodically merges their
-replay buffers onto the leader, runs the bounded update steps there, and
-broadcasts the versioned router to every worker. ``--crash-at``/
-``--rejoin-at`` inject a worker crash-and-rejoin scenario;
-``--feedback-delay`` routes quality feedback through the staged
-delayed-outcome path.
+single scheduler: N workers (each with its own engine replica, queue, and
+virtual clock) share the pool and — with ``--budget`` — one global
+SharedBudgetLedger; with ``--online`` the workers run follower adapters
+and the coordinator periodically merges their replay buffers onto the
+leader, runs the bounded update steps there, and broadcasts the versioned
+router to every worker. ``--crash-at``/``--rejoin-at`` inject a worker
+crash-and-rejoin scenario; ``--feedback-delay`` routes quality feedback
+through the staged delayed-outcome path.
+
+``--transport`` picks how the plane's message protocol is carried:
+``local`` (default) delivers by reference in-process and replays
+bit-identically; ``socket`` launches workers 1..N-1 as real OS processes
+(``repro.distributed.host``) speaking length-prefixed TCP to this
+controller process (worker 0, which is also the lowest-id leader), with
+the LM pool sharded by ownership across the processes — each generate
+leg runs on the member's owning worker. ``--metrics-port`` serves the
+live metrics registry over localhost HTTP (``/metrics`` Prometheus text,
+``/metrics.json`` canonical JSON) for the run's duration.
 
 Every random path — pool init, synthetic traffic, router training, the
 trace arrival/content sampling, and the prompt token RNG — derives from
-``--seed``, so runs are reproducible end to end.
+``--seed``, so runs are reproducible end to end; socket-mode follower
+processes rebuild identical engine/corpus/truth state by re-parsing the
+controller's forwarded argv.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+import types
 
 import jax
 import numpy as np
@@ -149,6 +165,158 @@ def build_routed_engine(names, *, seed: int = 0, epochs: int = 120,
     return engine, data, te
 
 
+def build_context(args):
+    """Everything a serving process derives deterministically from argv.
+
+    The controller and every socket-mode follower call this with the SAME
+    parsed argv: the pool init, predictor training, corpus split, truth
+    lookup, and the per-scheduler component factories are all seeded by
+    ``--seed``, so each process reconstructs bitwise-identical router and
+    pool state without shipping parameters over the wire.
+    """
+    names = args.pool.split(",")
+    engine, data, te = build_routed_engine(
+        names, seed=args.seed, epochs=args.epochs, lam=args.lam,
+        use_pallas=args.pallas,
+        quality_kind="attn-ens" if args.cascade else "attn",
+        restore_router=args.restore_router)
+
+    # Quality truth lookup (--online feedback and --cascade per-leg
+    # observed quality), built once and shared by every consumer.
+    qual_of_text = None
+    if args.online or args.cascade:
+        quality = data.quality[:, pool_quality_columns(engine.pool, data)]
+        qual_of_text = {data.texts[i]: quality[i]
+                        for i in range(len(data.texts))}
+
+    def truth(req):
+        return float(qual_of_text[req.text][req.member])
+
+    def make_cascade(governor):
+        """Fresh cascade coordinator bound to one scheduler's governor."""
+        if not args.cascade:
+            return None
+        from repro.cascade import (
+            CascadeConfig, CascadeCoordinator, CascadePolicy, cost_ladder,
+        )
+
+        policy = CascadePolicy(
+            cost_ladder(engine.router),
+            CascadeConfig(max_legs=args.max_legs, beta=args.cascade_beta,
+                          margin=args.cascade_margin,
+                          min_headroom=args.cascade_min_headroom),
+            reward=engine.router.reward)
+        # Observed leg quality: the synthetic RouterBench truth stands in
+        # for the deployment's response evaluator.
+        return CascadeCoordinator(policy, observed_quality=truth,
+                                  governor=governor)
+
+    def make_semcache():
+        """Fresh rung-0 semantic cache (policy/drift hooks are wired by the
+        scheduler from the cascade policy and the adapter's detector)."""
+        if not args.semcache:
+            return None
+        radius = args.cache_radius
+        if radius is None:
+            tr, _, _ = data.split(seed=args.seed)
+            radius = calibrate_radius(data.emb[tr])
+            print(f"semcache radius calibrated to {radius:.4f} "
+                  f"(training-split NN-distance quantile)")
+        return SemanticCache(radius, cap=args.cache_cap)
+
+    def make_feedback(seed):
+        """(quality_feedback, feedback_source, stage) for one adapter."""
+        if args.feedback_delay > 0:
+            from repro.online import DelayedFeedback, OutcomeStage
+            fb = DelayedFeedback(truth, args.feedback_delay,
+                                 jitter_s=args.feedback_delay * 0.5,
+                                 seed=seed)
+            # Bound how long unresolved outcomes are held: well past the
+            # worst-case delivery delay, but never forever.
+            stage = OutcomeStage(timeout_s=20.0 * args.feedback_delay)
+            return fb, fb, stage
+        return truth, None, None
+
+    return types.SimpleNamespace(
+        names=names, engine=engine, data=data, te=te, truth=truth,
+        make_cascade=make_cascade, make_semcache=make_semcache,
+        make_feedback=make_feedback)
+
+
+def build_drift_proto(args, ctx):
+    """Fitted per-worker drift-detector prototype (None without --online).
+
+    Per-worker detectors watch each worker's 1/N traffic share: smaller
+    windows, alarms escalate to a leader burst. The bootstrap calibration
+    is identical for every worker, so fit ONCE and deep-copy the fitted
+    detector instead of paying N calibration passes (socket-mode followers
+    refit from the same seeded inputs and land on the same state).
+    """
+    if not args.online:
+        return None
+    from repro.online import DriftDetector
+
+    tr, _, _ = ctx.data.split(seed=args.seed)
+    return DriftDetector(window=max(16, 48 // args.workers)).fit(
+        ctx.data.emb[tr], ctx.engine.router.centroids)
+
+
+def build_plane_worker(args, ctx, wid, governor, drift_proto, recorder, slo):
+    """One plane worker node, identical whichever process builds it.
+
+    ``governor`` is the shared ledger in-process, or a
+    :class:`~repro.distributed.ledger.LedgerClient` in a socket-mode
+    follower; ``recorder`` is the shared TraceRecorder in-process, or the
+    follower's own per-process recorder.
+    """
+    from repro.distributed import WorkerNode
+    from repro.serving.scheduler import SimClock
+
+    weng = RoutedEngine(router=ctx.engine.router, pool=ctx.engine.pool,
+                        lam=args.lam, use_pallas=args.pallas)
+    adapter = None
+    if args.online:
+        import copy
+
+        from repro.online import (
+            ExplorationConfig, OnlineAdapter, OnlineUpdateConfig,
+        )
+
+        wseed = args.seed + 101 * wid + 1
+        quality_feedback, feedback_source, stage = ctx.make_feedback(wseed)
+        membership = None
+        if args.refresh_established:
+            from repro.online import MembershipTracker
+
+            membership = MembershipTracker(
+                weng, refresh_established=True)
+        adapter = OnlineAdapter(
+            weng, quality_feedback, governor=governor,
+            config=OnlineUpdateConfig(
+                update_every=args.online_update_every),
+            exploration=ExplorationConfig(epsilon=args.epsilon,
+                                          seed=wseed),
+            drift=copy.deepcopy(drift_proto),
+            feedback_source=feedback_source, stage=stage,
+            membership=membership,
+            defer_updates=True, seed=wseed,
+        )
+    sched = MicroBatchScheduler(
+        weng,
+        SchedulerConfig(score_batch=args.score_batch,
+                        max_batch=args.max_batch,
+                        max_wait_s=args.max_wait,
+                        queue_capacity=args.queue_capacity),
+        governor=governor, clock=SimClock(),
+        service_time=None if args.wall_time else default_service_model(),
+        adapter=adapter, cascade=ctx.make_cascade(governor),
+        semcache=ctx.make_semcache(),
+        tracer=recorder.scoped(wid) if recorder is not None else None,
+        slo=slo,
+    )
+    return WorkerNode(wid, weng, sched, adapter)
+
+
 def _streaming_requested(args) -> bool:
     return (args.scrape_every is not None or args.trace_sample is not None
             or args.trace_cap is not None or args.obs_dir is not None)
@@ -164,6 +332,8 @@ def _setup_obs(args):
     ``--scrape-every`` the flusher still applies sampling, in one
     final-only flush. ``--trace-profile`` additionally installs the
     kernel-dispatch profiler globally (removed again by :func:`_save_obs`).
+    ``--metrics-port`` forces the registry on so the HTTP endpoint has
+    something to scrape.
     """
     recorder = registry = profiler = flusher = None
     streaming = _streaming_requested(args)
@@ -178,7 +348,7 @@ def _setup_obs(args):
         recorder = TraceRecorder(
             label=label, sampler=sampler,
             max_buffered_per_worker=args.trace_cap)
-    if args.metrics_out or streaming:
+    if args.metrics_out or args.metrics_port is not None or streaming:
         from repro.obs import MetricsRegistry
 
         registry = MetricsRegistry()
@@ -273,7 +443,10 @@ def _print_slo(slo, now: float) -> None:
           + "  ".join(f"{k}={v}" for k, v in burns.items()))
 
 
-def main(argv=None):
+def make_parser() -> argparse.ArgumentParser:
+    """The serve argv schema — shared with ``repro.distributed.host``,
+    which re-parses the controller's forwarded argv to rebuild identical
+    serving state in each follower process."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--pool", default="qwen3-0.6b,granite-moe-1b-a400m,granite-3-8b")
     ap.add_argument("--requests", type=int, default=200)
@@ -354,6 +527,13 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=1,
                     help="N>1 runs the multi-worker serving plane "
                          "(repro.distributed) with leader/follower sync")
+    ap.add_argument("--transport", default="local",
+                    choices=["local", "socket"],
+                    help="plane message transport: local = in-process "
+                         "by-reference delivery (bit-identical seeded "
+                         "replays); socket = workers 1..N-1 as real OS "
+                         "processes over length-prefixed TCP, with the LM "
+                         "pool sharded by ownership across the processes")
     ap.add_argument("--sync-every", type=float, default=0.05,
                     help="virtual seconds between replay-merge/broadcast "
                          "sync rounds (multi-worker only)")
@@ -372,6 +552,11 @@ def main(argv=None):
                     help="write a metrics snapshot at end of run "
                          "(.prom/.txt -> Prometheus text exposition, "
                          "else canonical JSON)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the live metrics registry over localhost "
+                         "HTTP for the run's duration (/metrics Prometheus "
+                         "text, /metrics.json canonical JSON; 0 picks an "
+                         "ephemeral port)")
     ap.add_argument("--trace-profile", action="store_true",
                     help="profile kernel dispatches (wall clock) and "
                          "include the wall-clock spans/metrics in the "
@@ -410,98 +595,71 @@ def main(argv=None):
                     help="SLO compliance window, virtual seconds (the "
                          "burn-rate alert pairs it with a window/12 short "
                          "window)")
+    return ap
+
+
+def main(argv=None):
+    ap = make_parser()
     args = ap.parse_args(argv)
+    # Socket mode forwards the raw argv to follower processes, which
+    # re-parse it to rebuild identical seeded state.
+    raw_argv = list(sys.argv[1:]) if argv is None else list(argv)
     if (args.crash_at is not None and args.rejoin_at is not None
             and args.rejoin_at <= args.crash_at):
         ap.error(f"--rejoin-at ({args.rejoin_at}) must be after "
                  f"--crash-at ({args.crash_at})")
+    if args.transport == "socket":
+        if args.workers < 2:
+            ap.error("--transport socket needs --workers >= 2")
+        if args.crash_at is not None and args.crash_worker == 0:
+            ap.error("--transport socket pins the controller (and leader) "
+                     "to worker 0; crash a follower instead")
 
-    names = args.pool.split(",")
-    engine, data, te = build_routed_engine(
-        names, seed=args.seed, epochs=args.epochs, lam=args.lam,
-        use_pallas=args.pallas,
-        quality_kind="attn-ens" if args.cascade else "attn",
-        restore_router=args.restore_router)
+    ctx = build_context(args)
     if args.save_router:
         from repro.checkpoint import save_router
 
-        save_router(args.save_router, engine.router, pool_names=names)
+        save_router(args.save_router, ctx.engine.router,
+                    pool_names=ctx.names)
         print(f"router checkpoint saved to {args.save_router} "
-              f"(v{engine.router.version}, "
-              f"{engine.router.quality_kind}/{engine.router.cost_kind})")
+              f"(v{ctx.engine.router.version}, "
+              f"{ctx.engine.router.quality_kind}/"
+              f"{ctx.engine.router.cost_kind})")
 
     trace = make_trace(
         TraceConfig(
             kind=args.trace, n_requests=args.requests, rate=args.rate,
             seed=args.seed, max_new=args.max_new, deadline_s=args.deadline,
             prompt_len_max=48,
-            vocab=min(m.cfg.vocab_size for m in engine.pool),
+            vocab=min(m.cfg.vocab_size for m in ctx.engine.pool),
         ),
-        texts=[data.texts[i] for i in te],
-        benchmarks=[data.benchmark[i] for i in te],
+        texts=[ctx.data.texts[i] for i in ctx.te],
+        benchmarks=[ctx.data.benchmark[i] for i in ctx.te],
     )
 
-    # Quality truth lookup (--online feedback and --cascade per-leg
-    # observed quality), built once and shared by every consumer.
-    qual_of_text = None
-    if args.online or args.cascade:
-        quality = data.quality[:, pool_quality_columns(engine.pool, data)]
-        qual_of_text = {data.texts[i]: quality[i]
-                        for i in range(len(data.texts))}
-
-    def truth(req):
-        return float(qual_of_text[req.text][req.member])
-
-    def make_cascade(governor):
-        """Fresh cascade coordinator bound to one scheduler's governor."""
-        if not args.cascade:
-            return None
-        from repro.cascade import (
-            CascadeConfig, CascadeCoordinator, CascadePolicy, cost_ladder,
-        )
-
-        policy = CascadePolicy(
-            cost_ladder(engine.router),
-            CascadeConfig(max_legs=args.max_legs, beta=args.cascade_beta,
-                          margin=args.cascade_margin,
-                          min_headroom=args.cascade_min_headroom),
-            reward=engine.router.reward)
-        # Observed leg quality: the synthetic RouterBench truth stands in
-        # for the deployment's response evaluator.
-        return CascadeCoordinator(policy, observed_quality=truth,
-                                  governor=governor)
-
-    def make_semcache():
-        """Fresh rung-0 semantic cache (policy/drift hooks are wired by the
-        scheduler from the cascade policy and the adapter's detector)."""
-        if not args.semcache:
-            return None
-        radius = args.cache_radius
-        if radius is None:
-            tr, _, _ = data.split(seed=args.seed)
-            radius = calibrate_radius(data.emb[tr])
-            print(f"semcache radius calibrated to {radius:.4f} "
-                  f"(training-split NN-distance quantile)")
-        return SemanticCache(radius, cap=args.cache_cap)
-
-    def make_feedback(seed):
-        """(quality_feedback, feedback_source, stage) for one adapter."""
-        if args.feedback_delay > 0:
-            from repro.online import DelayedFeedback, OutcomeStage
-            fb = DelayedFeedback(truth, args.feedback_delay,
-                                 jitter_s=args.feedback_delay * 0.5,
-                                 seed=seed)
-            # Bound how long unresolved outcomes are held: well past the
-            # worst-case delivery delay, but never forever.
-            stage = OutcomeStage(timeout_s=20.0 * args.feedback_delay)
-            return fb, fb, stage
-        return truth, None, None
-
     obs = _setup_obs(args)
-    if args.workers > 1:
-        return _run_plane(args, engine, data, trace, make_feedback,
-                          make_cascade, obs, make_semcache)
+    mserver = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+
+        mserver = MetricsServer(obs[1], port=args.metrics_port)
+        print(f"metrics endpoint: http://127.0.0.1:{mserver.start()}"
+              f"/metrics")
+    try:
+        if args.workers > 1:
+            if args.transport == "socket":
+                return _run_plane_socket(args, ctx, trace, obs, raw_argv)
+            return _run_plane(args, ctx, trace, obs)
+        return _run_solo(args, ctx, trace, obs)
+    finally:
+        if mserver is not None:
+            mserver.stop()
+
+
+def _run_solo(args, ctx, trace, obs):
+    """Single-scheduler path (``--workers 1``)."""
     recorder, registry, profiler, flusher = obs
+    engine, data = ctx.engine, ctx.data
 
     governor = None
     if args.budget > 0:
@@ -518,7 +676,7 @@ def main(argv=None):
         # Quality feedback: the synthetic RouterBench truth stands in for
         # user ratings / auto-eval (the held-out split is what the trace
         # samples its texts from).
-        quality_feedback, feedback_source, stage = make_feedback(args.seed)
+        quality_feedback, feedback_source, stage = ctx.make_feedback(args.seed)
         tr, _, _ = data.split(seed=args.seed)
         drift = DriftDetector(window=48).fit(
             data.emb[tr], engine.router.centroids)
@@ -539,8 +697,8 @@ def main(argv=None):
             seed=args.seed,
         )
 
-    cascade = make_cascade(governor)
-    semcache = make_semcache()
+    cascade = ctx.make_cascade(governor)
+    semcache = ctx.make_semcache()
     slo = _make_slo(args, tracer=recorder)
     sched = MicroBatchScheduler(
         engine,
@@ -596,14 +754,12 @@ def main(argv=None):
     return summary
 
 
-def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
-               obs=(None, None, None, None), make_semcache=lambda: None):
-    """Multi-worker path: build N workers + coordinator, run the plane."""
+def _run_plane(args, ctx, trace, obs):
+    """Multi-worker path over LocalTransport: N in-process workers."""
     from repro.distributed import (
         Coordinator, PlaneEvent, ServingPlane, SharedBudgetLedger,
-        SyncConfig, WorkerNode,
+        SyncConfig,
     )
-    from repro.serving.scheduler import SimClock
 
     recorder, registry, profiler, flusher = obs
     # One fleet-level SLO tracker: every worker's finalized requests feed
@@ -614,63 +770,12 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
         governor = SharedBudgetLedger(args.budget, args.budget_window,
                                       lam0=args.lam)
 
-    drift_proto = None
-    if args.online:
-        from repro.online import DriftDetector
-
-        tr, _, _ = data.split(seed=args.seed)
-        # Per-worker detectors over each worker's 1/N traffic share:
-        # smaller windows, alarms escalate to a leader burst. The bootstrap
-        # calibration is identical for every worker, so fit ONCE and clone
-        # the fitted detector instead of paying N calibration passes.
-        drift_proto = DriftDetector(window=max(16, 48 // args.workers)).fit(
-            data.emb[tr], engine.router.centroids)
-
-    workers = []
-    for wid in range(args.workers):
-        weng = RoutedEngine(router=engine.router, pool=engine.pool,
-                            lam=args.lam, use_pallas=args.pallas)
-        adapter = None
-        if args.online:
-            import copy
-
-            from repro.online import (
-                ExplorationConfig, OnlineAdapter, OnlineUpdateConfig,
-            )
-
-            wseed = args.seed + 101 * wid + 1
-            quality_feedback, feedback_source, stage = make_feedback(wseed)
-            membership = None
-            if args.refresh_established:
-                from repro.online import MembershipTracker
-
-                membership = MembershipTracker(
-                    weng, refresh_established=True)
-            adapter = OnlineAdapter(
-                weng, quality_feedback, governor=governor,
-                config=OnlineUpdateConfig(
-                    update_every=args.online_update_every),
-                exploration=ExplorationConfig(epsilon=args.epsilon,
-                                              seed=wseed),
-                drift=copy.deepcopy(drift_proto),
-                feedback_source=feedback_source, stage=stage,
-                membership=membership,
-                defer_updates=True, seed=wseed,
-            )
-        sched = MicroBatchScheduler(
-            weng,
-            SchedulerConfig(score_batch=args.score_batch,
-                            max_batch=args.max_batch,
-                            max_wait_s=args.max_wait,
-                            queue_capacity=args.queue_capacity),
-            governor=governor, clock=SimClock(),
-            service_time=None if args.wall_time else default_service_model(),
-            adapter=adapter, cascade=make_cascade(governor),
-            semcache=make_semcache(),
-            tracer=recorder.scoped(wid) if recorder is not None else None,
-            slo=slo,
-        )
-        workers.append(WorkerNode(wid, weng, sched, adapter))
+    drift_proto = build_drift_proto(args, ctx)
+    workers = [
+        build_plane_worker(args, ctx, wid, governor, drift_proto,
+                           recorder, slo)
+        for wid in range(args.workers)
+    ]
 
     from repro.online import OnlineUpdateConfig
     coord = Coordinator(workers, SyncConfig(
@@ -726,6 +831,180 @@ def _run_plane(args, engine, data, trace, make_feedback, make_cascade,
     _print_slo(slo, t_end)
     _save_obs(args, recorder, registry, profiler, flusher, now=t_end)
     return summary
+
+
+def _run_plane_socket(args, ctx, trace, obs, raw_argv):
+    """Multi-worker path over SocketTransport: real OS processes.
+
+    This process is worker 0 AND the controller AND (by lowest-id
+    election) the leader — the coordinator's updater reads the leader's
+    engine directly, so leader/controller co-location is what lets socket
+    mode run leader updates without shipping optimizer state over the
+    wire. Workers 1..N-1 are ``repro.distributed.host`` subprocesses:
+    each rebuilds identical seeded serving state from the forwarded argv,
+    claims its pool shard (mesh-sharded parameters for owned members,
+    evicted otherwise), and services protocol messages over
+    length-prefixed TCP. Generate legs for a member the executing worker
+    does not own hop to the owner as ``GENERATE`` messages; follower
+    budget ops flow to the controller's shared ledger as ``LEDGER_OP``.
+    """
+    import json
+    import os
+    import subprocess
+
+    from repro.distributed import (
+        Coordinator, PlaneEvent, PoolDispatcher, ServingPlane,
+        SharedBudgetLedger, SocketTransport, SyncConfig, TransportError,
+        owner_of,
+    )
+    from repro.distributed import messages as M
+    from repro.distributed.host import RemoteWorkerProxy
+    from repro.distributed.messages import Message
+    from repro.distributed.shard import shard_pool
+
+    recorder, registry, profiler, flusher = obs
+    slo = _make_slo(args, tracer=recorder)
+    governor = None
+    if args.budget > 0:
+        governor = SharedBudgetLedger(args.budget, args.budget_window,
+                                      lam0=args.lam)
+
+    # Long conn timeout: follower processes connect BEFORE building their
+    # engines, so frames queue in TCP buffers while training runs — the
+    # first real exchange can lag the connect by minutes on a cold CPU.
+    transport = SocketTransport(0, timeout=600.0)
+    port = transport.listen()
+    # Followers must import repro the same way this process did, even when
+    # the driver was launched by path (no PYTHONPATH in the environment).
+    import repro
+
+    env = dict(os.environ)
+    # __path__ (not __file__): repro is a plain src-layout package dir and
+    # may be imported as a namespace package, where __file__ is None.
+    src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src_root)
+    procs = [
+        subprocess.Popen([sys.executable, "-m", "repro.distributed.host",
+                          "--wid", str(wid), "--port", str(port),
+                          "--serve-argv", json.dumps(raw_argv)],
+                         env=env)
+        for wid in range(1, args.workers)
+    ]
+    try:
+        hellos = transport.accept(args.workers - 1, timeout=120.0)
+        drift_proto = build_drift_proto(args, ctx)
+        w0 = build_plane_worker(args, ctx, 0, governor, drift_proto,
+                                recorder, slo)
+        w0.ledger = governor        # follower LEDGER_OP messages land here
+        shard_pool(w0.engine.pool, 0, args.workers)
+        w0.scheduler.dispatcher = PoolDispatcher(0, args.workers,
+                                                 w0.engine, transport)
+        w0.bind(transport)
+        names = [m.name for m in ctx.engine.pool]
+        proxies = [
+            RemoteWorkerProxy(wid, transport, member_names=names,
+                              pid=int(hellos[wid].get("pid", -1)))
+            for wid in range(1, args.workers)
+        ]
+        workers = [w0] + proxies
+        pids = {0: os.getpid()}
+        pids.update({p.wid: p.pid for p in proxies})
+        print(f"socket plane: controller pid {pids[0]} port {port}  "
+              + "  ".join(f"w{p.wid}:pid{p.pid}" for p in proxies))
+        print("pool ownership: " + "  ".join(
+            f"{names[mi]}->w{owner_of(mi, args.workers)}"
+            for mi in range(len(names))))
+
+        from repro.online import OnlineUpdateConfig
+        coord = Coordinator(workers, SyncConfig(
+            sync_every_s=args.sync_every, seed=args.seed,
+            update=OnlineUpdateConfig(
+                update_every=args.online_update_every)),
+            transport=transport)
+        events = []
+        if args.crash_at is not None:
+            events.append(
+                PlaneEvent(args.crash_at, "crash", args.crash_worker))
+            if args.rejoin_at is not None:
+                events.append(
+                    PlaneEvent(args.rejoin_at, "rejoin", args.crash_worker))
+        plane = ServingPlane(workers, coord, events=events, tracer=recorder,
+                             flusher=flusher)
+        if registry is not None:
+            from repro.obs import (
+                register_plane_metrics, register_slo_metrics,
+                register_stream_metrics,
+            )
+
+            register_plane_metrics(registry, plane)
+            if slo is not None:
+                register_slo_metrics(
+                    registry, slo,
+                    lambda: max(w.clock.now
+                                for w in plane.workers.values()))
+            if flusher is not None:
+                register_stream_metrics(registry, flusher)
+        summary = plane.run_trace(trace)
+        summary["transport"] = "socket"
+        summary["pids"] = pids
+        summary["pool_owner"] = {
+            names[mi]: owner_of(mi, args.workers)
+            for mi in range(len(names))}
+
+        # Fold the followers' per-process recorders into the controller's
+        # (request keys re-based by merge) so --trace-out covers the fleet.
+        if recorder is not None:
+            for p in proxies:
+                try:
+                    rep = transport.request(
+                        Message(kind=M.TRACE_REQ, dst=p.wid))
+                except TransportError:
+                    continue
+                recorder.merge(types.SimpleNamespace(
+                    events=[tuple(e) for e in rep.payload["events"]],
+                    _next_key=int(rep.payload["next_key"])))
+
+        print(f"trace={args.trace} requests={args.requests} "
+              f"seed={args.seed} workers={args.workers} transport=socket")
+        print(plane.report(summary.get("duration_s")))
+        # Only w0's serving components live in this process; each follower
+        # prints its own cascade/semcache/adapter lines at shutdown.
+        if args.cascade and w0.scheduler.cascade is not None:
+            print(f"w0 {w0.scheduler.cascade.report()}")
+        if args.semcache and w0.scheduler.semcache is not None:
+            rep = w0.scheduler.semcache.report()
+            print(f"w0 semcache: {rep['served']}/{rep['lookups']} "
+                  f"served (hit rate {rep['hit_rate']:.2f})  "
+                  f"{rep['entries']} entries")
+        if args.online and w0.adapter is not None:
+            print(f"w0 {w0.adapter.report()}")
+        if governor is not None:
+            now = max(w.clock.now for w in workers)
+            g = governor.summary(now)
+            print(f"shared budget ${g['budget_per_window']:.4f}/"
+                  f"{args.budget_window}s window  "
+                  f"spend ${g['total_spend']:.6f}  "
+                  f"final lambda {g['lam']:.3g} (nominal {g['lam0']:.3g})  "
+                  f"tightened x{int(g['tightened'])} "
+                  f"relaxed x{int(g['relaxed'])} "
+                  f"throttled x{governor.throttled}")
+        t_end = max(w.clock.now for w in workers)
+        _print_slo(slo, t_end)
+        _save_obs(args, recorder, registry, profiler, flusher, now=t_end)
+        for p in proxies:
+            try:
+                transport.send(Message(kind=M.SHUTDOWN, dst=p.wid))
+            except TransportError:
+                pass
+        return summary
+    finally:
+        transport.close()
+        for pr in procs:
+            try:
+                pr.wait(timeout=60)
+            except Exception:
+                pr.kill()
 
 
 if __name__ == "__main__":

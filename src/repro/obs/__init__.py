@@ -13,6 +13,8 @@ Pillars over the serving fleet:
     sampling with an always-keep anomaly lane and a hard buffered cap;
   * :mod:`repro.obs.slo` — SLO monitors with multi-window burn-rate
     alerting on the virtual clock;
+  * :mod:`repro.obs.scrape` — a localhost HTTP endpoint serving the live
+    registry (``/metrics`` Prometheus text, ``/metrics.json``);
   * :mod:`repro.obs.profiling` — wall-clock (+ optional jax profiler)
     timing hooks around the Pallas kernel entry points.
 
@@ -31,6 +33,7 @@ from repro.obs.metrics import (
 )
 from repro.obs.profiling import KernelProfiler
 from repro.obs.sampling import TraceSampler, is_anomaly_event
+from repro.obs.scrape import MetricsServer
 from repro.obs.slo import (
     BurnRateSLO,
     RollingWindow,
@@ -64,6 +67,7 @@ __all__ = [
     "HistogramMetric",
     "KernelProfiler",
     "MetricsRegistry",
+    "MetricsServer",
     "MultiGauge",
     "ObsFlusher",
     "RollingWindow",

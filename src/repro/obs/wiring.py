@@ -215,7 +215,12 @@ def register_plane_metrics(reg: MetricsRegistry, plane) -> None:
     ledger = None
     for w in workers:
         labels = (("worker", w.wid),)
-        register_scheduler_metrics(reg, w.scheduler, labels=labels)
+        # Remote-process workers (socket transport) are represented by
+        # proxies without a local scheduler; their liveness/swap counters
+        # are still mirrored and registered below.
+        sched = getattr(w, "scheduler", None)
+        if sched is not None:
+            register_scheduler_metrics(reg, sched, labels=labels)
         reg.gauge("worker_alive", "1 = serving, 0 = crashed", labels=labels,
                   fn=lambda w=w: float(w.alive))
         reg.counter("worker_crashes_total", "crash events", labels=labels,
@@ -224,8 +229,8 @@ def register_plane_metrics(reg: MetricsRegistry, plane) -> None:
                     labels=labels, fn=lambda w=w: w.swaps_accepted)
         reg.counter("router_swaps_rejected_total", "stale publishes rejected",
                     labels=labels, fn=lambda w=w: w.swaps_rejected)
-        if w.scheduler.governor is not None:
-            ledger = w.scheduler.governor
+        if sched is not None and sched.governor is not None:
+            ledger = sched.governor
 
     if ledger is not None:
         # Shared ledger: evaluate the rolling window at the fleet's newest

@@ -91,7 +91,7 @@ class MicroBatchScheduler:
                  service_time: Optional[Callable[[str, int, float], float]]
                  = None,
                  adapter=None, cascade=None, tracer=None, slo=None,
-                 flusher=None, semcache=None):
+                 flusher=None, semcache=None, dispatcher=None):
         self.engine = engine
         self.config = config or SchedulerConfig()
         self.queue = queue or AdmissionQueue(self.config.queue_capacity)
@@ -154,11 +154,19 @@ class MicroBatchScheduler:
             if (adrift is not None and semcache.drift is None
                     and semcache.on_drift_alarm not in adrift.alarm_hooks):
                 adrift.alarm_hooks.append(semcache.on_drift_alarm)
+        # Sharded-pool dispatch (repro.distributed.shard.PoolDispatcher):
+        # when set, generate micro-batches go through ``dispatcher.
+        # generate_member`` — members this worker owns run on the local
+        # engine, any other member's batch is routed to its owning worker
+        # over the plane's transport. None = every member is local.
+        self.dispatcher = dispatcher
         # Engines that predate per-request cost accounting (test/bench
         # stubs) return one scalar $ per generate call and take no
         # ``max_new_per_req``; detect once and split evenly for them.
+        gen = (engine.generate_member if dispatcher is None
+               else dispatcher.generate_member)
         try:
-            sig = inspect.signature(engine.generate_member)
+            sig = inspect.signature(gen)
             self._gen_per_req = "max_new_per_req" in sig.parameters
         except (TypeError, ValueError):
             self._gen_per_req = False
@@ -405,8 +413,15 @@ class MicroBatchScheduler:
                                 args={"status": "expired", "legs": r.leg})
                 if self.slo is not None:
                     self._observe_slo(r, missed=True)
-        # Hot pool membership can mutate the pool between rounds.
+        # Hot pool membership can mutate the pool between rounds: re-sync
+        # the telemetry member axis and re-derive the cascade's cost
+        # ladder (a stale ladder can't escalate to a new member and may
+        # still rank a removed one).
         self.telemetry.sync_members([m.name for m in self.engine.pool])
+        if self.cascade is not None:
+            router = getattr(self.engine, "router", None)
+            if router is not None:
+                self.cascade.policy.refresh(router)
         batch = self.queue.pop(self.config.score_batch)
         if not batch:
             if self.slo is not None:
@@ -520,12 +535,15 @@ class MicroBatchScheduler:
                 max_new = max(r.max_new for r in chunk)
                 t_gen0 = self.clock.now
                 t0 = time.perf_counter()
+                gen = (self.engine.generate_member
+                       if self.dispatcher is None
+                       else self.dispatcher.generate_member)
                 if self._gen_per_req:
-                    outs, cost = self.engine.generate_member(
+                    outs, cost = gen(
                         mi, [r.prompt for r in chunk], max_new=max_new,
                         max_new_per_req=[r.max_new for r in chunk])
                 else:
-                    outs, cost = self.engine.generate_member(
+                    outs, cost = gen(
                         mi, [r.prompt for r in chunk], max_new=max_new)
                 gen_wall = time.perf_counter() - t0
                 self.clock.advance(

@@ -142,6 +142,67 @@ class TestCostLadder:
             cost_ladder(router)
 
 
+class TestLadderRefresh:
+    """Hot pool mutation must re-derive the escalation ladder.
+
+    Regression for the stale-ladder bug: after ``add_member`` the policy's
+    ladder still ranked the old members, so the new member could never be
+    escalated to (and after ``remove_member`` a dead rung stayed
+    selectable)."""
+
+    def _router(self, mu):
+        k, dq = len(mu), 4
+        params = {"w": np.zeros((dq, k), np.float32),
+                  "b": np.zeros(k, np.float32)}
+        return PredictiveRouter(
+            "reg", "reg", params, dict(params),
+            np.zeros((k, 2), np.float32),
+            cost_scaler={"mu": np.asarray(mu, np.float64),
+                         "sd": np.ones(k)})
+
+    def test_refresh_noop_when_pool_unchanged(self):
+        router = self._router([5.0, 0.1, 1.0])
+        policy = CascadePolicy(cost_ladder(router))
+        assert policy.refresh(router) is False
+        assert policy.ladder == [1, 2, 0]
+
+    def test_added_member_becomes_escalatable(self):
+        router = self._router([0.1, 1.0])
+        policy = CascadePolicy(cost_ladder(router))
+        assert policy.ladder == [0, 1]
+        grown = router.add_member()       # new member's mu = mean = 0.55
+        # Stale ladder: the new member (index 2) is not a rung at all.
+        assert 2 not in policy.candidates([0])
+        assert policy.refresh(grown) is True
+        assert policy.ladder == [0, 2, 1]
+        assert 2 in policy.candidates([0])
+        # And the decision rule can now actually pick it: a poor cheap leg
+        # with a strong-looking new member escalates onto the new rung.
+        d = policy.decide(
+            s_cur=0.1, s_std_cur=0.0,
+            s_hat=np.asarray([0.3, 0.5, 0.95]),
+            s_std=np.asarray([0.05, 0.05, 0.05]),
+            c_hat=np.asarray([0.1, 1.0, 0.55]),
+            cum_cost=0.1, tried=[0], lam=100.0, observed=True)
+        assert d.escalate and d.next_member == 2
+
+    def test_removed_member_drops_its_rung(self):
+        router = self._router([5.0, 0.1, 1.0])
+        policy = CascadePolicy(cost_ladder(router))
+        shrunk = router.remove_member(0)  # members above shift down
+        assert policy.refresh(shrunk) is True
+        assert policy.ladder == [0, 1]
+        assert all(m in (0, 1) for m in policy.candidates([]))
+
+    def test_stub_routers_left_alone(self):
+        policy = CascadePolicy([0, 1, 2])
+        router = PredictiveRouter(
+            "reg", "reg", {}, {}, np.zeros((2, 2), np.float32),
+            cost_scaler=None)
+        assert policy.refresh(router) is False
+        assert policy.ladder == [0, 1, 2]
+
+
 class TestEnsemblePredictor:
     def test_heads_disagree_and_mean_matches(self):
         rng = np.random.default_rng(0)

@@ -16,6 +16,7 @@ from repro.kernels import ops as kops
 from repro.obs import (
     KernelProfiler,
     MetricsRegistry,
+    MetricsServer,
     TraceRecorder,
     WALL_CATS,
     register_scheduler_metrics,
@@ -388,3 +389,61 @@ class TestKernelProfiler:
         assert snap['kernel_elements_total{op="router_xattn_pool"}'][
             "value"] == 64
         assert reg.snapshot(deterministic=True) == {}
+
+
+class TestMetricsServer:
+    """HTTP scrape endpoint over a live registry (ephemeral port)."""
+
+    def _registry(self):
+        reg = MetricsRegistry()
+        reg.counter("reqs_total", "requests").inc(5)
+        state = {"depth": 2}
+        reg.gauge("queue_depth", "live depth", fn=lambda: state["depth"])
+        return reg, state
+
+    def _get(self, url):
+        import urllib.request
+
+        with urllib.request.urlopen(url, timeout=10.0) as resp:
+            return resp.status, resp.headers.get("Content-Type"), \
+                resp.read().decode()
+
+    def test_prometheus_and_json_endpoints(self):
+        reg, state = self._registry()
+        with MetricsServer(reg) as srv:
+            assert srv.port != 0          # ephemeral port was bound
+            status, ctype, body = self._get(srv.url)
+            assert status == 200 and ctype.startswith("text/plain")
+            assert "# TYPE reqs_total counter" in body
+            assert "reqs_total 5" in body
+            # Gauges read their callbacks at scrape time.
+            state["depth"] = 9
+            _, _, body = self._get(srv.url)
+            assert "queue_depth 9" in body
+            status, ctype, body = self._get(
+                f"http://127.0.0.1:{srv.port}/metrics.json")
+            assert status == 200 and ctype == "application/json"
+            assert json.loads(body)["reqs_total"]["value"] == 5.0
+            assert srv.scrapes == 3
+
+    def test_unknown_path_404(self):
+        import urllib.error
+        import urllib.request
+
+        reg, _ = self._registry()
+        with MetricsServer(reg) as srv:
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}/nope", timeout=10.0)
+            assert ei.value.code == 404
+            assert srv.scrapes == 0
+
+    def test_requires_registry_and_stop_idempotent(self):
+        with pytest.raises(ValueError):
+            MetricsServer(None)
+        reg, _ = self._registry()
+        srv = MetricsServer(reg)
+        port = srv.start()
+        assert srv.start() == port        # second start is a no-op
+        srv.stop()
+        srv.stop()                        # idempotent

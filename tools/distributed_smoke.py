@@ -1,0 +1,143 @@
+"""Distributed serving smoke: the socket transport against real processes.
+
+Runs the seeded serve driver twice on the SAME argv — once on the
+in-process ``LocalTransport`` plane, once on ``--transport socket``
+(controller + N-1 follower OS processes, mesh-sharded pool, shared
+ledger over ``LEDGER_OP``) — and asserts the message-passing refactor's
+core contract:
+
+  * **parity** — both planes converge to the same final router version
+    on every worker and produce matching deterministic telemetry rollups
+    (completed / spend / per-member counts / sync + merge + update
+    counters). Only wall-measured latency percentiles may differ.
+  * **real processes** — the socket run reports >= ``--workers`` distinct
+    OS pids (the controller plus one per follower), proving the legs
+    crossed process boundaries rather than a loopback.
+  * **sharded pool** — the socket summary's member->owner layout covers
+    every pool member, each owned by a valid worker.
+  * **artifacts** — both summaries plus the controller's merged fleet
+    trace (followers folded in via ``TRACE_REQ``) land in ``--out-dir``
+    for CI upload.
+
+    PYTHONPATH=src python tools/distributed_smoke.py --transport socket \
+        [--workers 2] [--requests 40] [--out-dir reports/distributed_smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.launch import serve  # noqa: E402
+
+# Rollup keys that must match exactly across transports. Latency
+# percentiles are excluded on purpose: routing time is wall-measured.
+PARITY_KEYS = (
+    "completed", "rejected", "expired", "per_member_counts",
+    "per_member_spend", "total_spend", "generate_calls",
+    "n_workers", "alive_workers", "reassigned", "router_versions",
+    "per_worker_completed",
+)
+COORD_KEYS = ("syncs", "merged", "updates", "update_steps", "bursts",
+              "stale_rejected", "leader_changes")
+
+
+def run_serve(argv, label):
+    t0 = time.time()
+    print(f"--- {label}: serve {' '.join(argv)}", flush=True)
+    summary = serve.main(argv)
+    print(f"--- {label} done in {time.time() - t0:.1f}s", flush=True)
+    return summary
+
+
+def check(cond, what):
+    if not cond:
+        print(f"FAIL: {what}", flush=True)
+        sys.exit(1)
+    print(f"ok: {what}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--transport", choices=["local", "socket"],
+                    default="socket",
+                    help="socket also runs the local plane for the "
+                         "parity check")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default="reports/distributed_smoke")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    base = [
+        "--trace", "poisson", "--requests", str(args.requests),
+        "--epochs", "4", "--seed", str(args.seed),
+        "--workers", str(args.workers), "--online", "--cascade",
+        "--sync-every", "0.02", "--budget", "0.02",
+    ]
+
+    local = run_serve(
+        base + ["--trace-out",
+                os.path.join(args.out_dir, "trace-local.json")],
+        "local plane")
+    check(local["completed"] == args.requests,
+          f"local plane completed all {args.requests} requests")
+    if args.transport == "local":
+        with open(os.path.join(args.out_dir, "summary-local.json"),
+                  "w") as f:
+            json.dump(local, f, indent=2, default=str)
+        print("distributed smoke (local only): PASS", flush=True)
+        return
+
+    sock = run_serve(
+        base + ["--transport", "socket",
+                "--trace-out",
+                os.path.join(args.out_dir, "trace-socket.json")],
+        "socket plane")
+
+    # Real OS processes: controller + one per follower, all distinct.
+    pids = sock.get("pids", {})
+    check(len(set(pids.values())) >= args.workers
+          and len(pids) == args.workers,
+          f"socket run spanned {len(set(pids.values()))} distinct OS "
+          f"processes {sorted(pids.values())}")
+    check(pids.get(0) == os.getpid() or pids.get("0") == os.getpid(),
+          "controller is this process (wid 0)")
+
+    # Sharded pool layout covers every member with a valid owner.
+    owners = sock.get("pool_owner", {})
+    check(owners and all(0 <= int(o) < args.workers
+                         for o in owners.values()),
+          f"pool shard layout {owners}")
+
+    # Transport parity: identical deterministic rollups.
+    for key in PARITY_KEYS:
+        lv, sv = local.get(key), sock.get(key)
+        check(lv == sv, f"parity on {key!r}: local={lv} socket={sv}")
+    for key in COORD_KEYS:
+        lv = local["coordinator"].get(key)
+        sv = sock["coordinator"].get(key)
+        check(lv == sv,
+              f"coordinator parity on {key!r}: local={lv} socket={sv}")
+    versions = set(sock["router_versions"].values())
+    check(len(versions) == 1,
+          f"all workers converged to one router version {versions}")
+
+    for name, summary in (("local", local), ("socket", sock)):
+        with open(os.path.join(args.out_dir, f"summary-{name}.json"),
+                  "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+    for artifact in ("trace-local.json", "trace-socket.json"):
+        check(os.path.exists(os.path.join(args.out_dir, artifact)),
+              f"trace artifact {artifact} written")
+    print("distributed smoke: PASS", flush=True)
+
+
+if __name__ == "__main__":
+    main()
