@@ -8,9 +8,11 @@ measured under open-loop load instead of a single offline batch.
 
 Also runs the observability overhead gates: the same trace served with the
 trace recorder installed must keep its p50 per-dispatch wall latency
-within 5% of the tracing-off run — and again with the full streaming
+within 5% of the tracing-off run — again with the full streaming
 stack on (deterministic sampling + per-worker cap + periodic segment
-flushes to disk). The gate runs on a *stub* scoring/generation engine so
+flushes to disk), and again for RPC tracing: remote GENERATE dispatch
+over a LocalTransport with the trace-context/span/RpcStats stack on must
+stay within 5% of the same topology bare. The gate runs on a *stub* scoring/generation engine so
 a dispatch is pure scheduler+tracer code (~100s of us): against the real
 pool, LM compute is seconds per dispatch with multi-percent variance,
 which drowns the tuple-appends the gate is actually about. Best-of-N reps
@@ -88,7 +90,7 @@ class _StubEngine:
         lam = self.lam if lam is None else lam
         return np.argmax(s_hat * np.exp(-c_hat / lam), axis=-1)
 
-    def generate_member(self, mi, prompts, max_new=8):
+    def generate_member(self, mi, prompts, max_new=8, max_new_per_req=None):
         self._burn()
         outs = [np.zeros(max_new, np.int32) for _ in prompts]
         return outs, self.pool[mi].cost_rate * len(prompts)
@@ -129,7 +131,12 @@ def _dispatch_p50_us(engine, data, te, *, mode: str,
 
     ``mode``: "off" = no tracer; "on" = plain recorder (PR-6 tracing);
     "stream" = the full streaming stack — sampling (rate 0.25), a
-    per-worker cap, and periodic segment flushes to ``obs_dir``.
+    per-worker cap, and periodic segment flushes to ``obs_dir``;
+    "rpc-off"/"rpc" = remote-generate topology (a PoolDispatcher over a
+    LocalTransport where the always-chosen member lives on a bound peer,
+    so every generate micro-batch is one GENERATE request) without / with
+    the RPC tracing stack (trace-context stamping + client span + server
+    span + transport RpcStats latency accounting).
 
     Drives the run_trace event loop by hand so only the dispatch() calls
     (scoring + routing + generation bookkeeping — every traced code path)
@@ -141,9 +148,39 @@ def _dispatch_p50_us(engine, data, te, *, mode: str,
     the rep minimum. Micro-batches are smaller than the throughput suites'
     so one trace yields ~30 dispatch samples for a stable p50.
     """
-    tracer = flusher = semcache = None
+    tracer = flusher = semcache = dispatcher = None
     if mode == "on":
         tracer = TraceRecorder(label="overhead").scoped(0)
+    elif mode in ("rpc", "rpc-off"):
+        # lam=100 always routes to member 1 (owner_of(1, 2) == 1 != wid 0),
+        # so EVERY generate micro-batch ships as a GENERATE request to the
+        # bound peer. "rpc-off" times the bare topology; "rpc" layers the
+        # RPC tracing stack on top — the gate's paired ratio isolates the
+        # tracing cost from the transport cost.
+        from repro.distributed.shard import PoolDispatcher
+        from repro.distributed.transport import LocalTransport
+
+        transport = LocalTransport()
+        srv = None
+        if mode == "rpc":
+            rec = TraceRecorder(label="overhead")
+            tracer = rec.scoped(0)
+            srv = rec.scoped(1)
+            transport.tracer = rec
+
+        def _peer(msg):
+            p = msg.payload
+            t0 = time.perf_counter()
+            outs, costs = engine.generate_member(
+                p["member"], p["prompts"], max_new=p["max_new"])
+            if srv is not None:   # the worker-side rpc span (worker.handle)
+                srv.span("rpc", "rpc", t0, time.perf_counter(),
+                         args={"rpc": msg.seq, "kind": msg.kind,
+                               "side": "server", "peer": int(msg.src)})
+            return {"outs": outs, "costs": costs}
+
+        transport.bind(1, _peer)
+        dispatcher = PoolDispatcher(0, 2, engine, transport)
     elif mode == "stream":
         rec = TraceRecorder(label="overhead",
                             sampler=TraceSampler(0.25, seed=0),
@@ -159,7 +196,7 @@ def _dispatch_p50_us(engine, data, te, *, mode: str,
         semcache = SemanticCache(1e-6, cap=256, query_bucket=8)
     sched = MicroBatchScheduler(
         engine, SchedulerConfig(score_batch=8, max_batch=4), tracer=tracer,
-        flusher=flusher, semcache=semcache,
+        flusher=flusher, semcache=semcache, dispatcher=dispatcher,
         service_time=lambda kind, n_, wall: 1e-3)
     pending = deque(sorted(_make_bench_trace(data, te),
                            key=lambda r: r.arrival_s))
@@ -200,6 +237,7 @@ def overhead_gate(data, te) -> None:
     engine = _StubEngine()
     _dispatch_p50_us(engine, data, te, mode="on")   # cache/allocator warm-up
     _dispatch_p50_us(engine, data, te, mode="cache")  # jit-compile warm-up
+    _dispatch_p50_us(engine, data, te, mode="rpc")  # dispatcher warm-up
     # Interleave the modes rep by rep and compare each mode against an
     # "off" run measured IMMEDIATELY before it, then take the median
     # paired ratio. Block-ordered best-of-N reps let slow machine-load
@@ -210,7 +248,8 @@ def overhead_gate(data, te) -> None:
     # background tick lands in. The reported p50s stay best-of-reps for
     # absolute scale.
     offs, ons, caches, streams = [], [], [], []
-    c_ratios, o_ratios, s_ratios = [], [], []
+    rpc_offs, rpcs = [], []
+    c_ratios, o_ratios, s_ratios, r_ratios = [], [], [], []
     with tempfile.TemporaryDirectory() as tmp:
         for i in range(OVERHEAD_REPS):
             off_c = _dispatch_p50_us(engine, data, te, mode="off")
@@ -220,15 +259,24 @@ def overhead_gate(data, te) -> None:
             off_s = _dispatch_p50_us(engine, data, te, mode="off")
             streams.append(_dispatch_p50_us(engine, data, te, mode="stream",
                                             obs_dir=f"{tmp}/rep{i}"))
+            # The rpc pair baselines against "rpc-off" (same remote-generate
+            # topology, tracing absent), so the ratio is the RPC tracing
+            # stack's marginal cost — not the transport's.
+            off_r = _dispatch_p50_us(engine, data, te, mode="rpc-off")
+            rpc_offs.append(off_r)
+            rpcs.append(_dispatch_p50_us(engine, data, te, mode="rpc"))
             offs.extend((off_c, off_o, off_s))
             c_ratios.append(caches[-1] / off_c)
             o_ratios.append(ons[-1] / off_o)
             s_ratios.append(streams[-1] / off_s)
+            r_ratios.append(rpcs[-1] / off_r)
     p50_off, p50_on = min(offs), min(ons)
     p50_cache, p50_stream = min(caches), min(streams)
+    p50_rpc_off, p50_rpc = min(rpc_offs), min(rpcs)
     ratio = float(np.median(o_ratios))
     s_ratio = float(np.median(s_ratios))
     c_ratio = float(np.median(c_ratios))
+    r_ratio = float(np.median(r_ratios))
     emit("serving/trace_overhead/p50_off", p50_off, f"us={p50_off:.1f}")
     emit("serving/trace_overhead/p50_on", p50_on, f"us={p50_on:.1f}")
     emit("serving/trace_overhead/p50_stream", p50_stream,
@@ -253,6 +301,16 @@ def overhead_gate(data, te) -> None:
          f"p50 cache {p50_cache:.1f}us / off {p50_off:.1f}us, median "
          f"paired ratio {c_ratio:.4f} (budget {OVERHEAD_BUDGET}, all-miss worst case: "
          f"every dispatch pays lookup + admission)")
+    emit("serving/trace_overhead/p50_rpc_off", p50_rpc_off,
+         f"us={p50_rpc_off:.1f}")
+    emit("serving/trace_overhead/p50_rpc", p50_rpc, f"us={p50_rpc:.1f}")
+    emit("serving/trace_overhead/rpc_ratio", p50_rpc,
+         f"ratio={r_ratio:.4f}")
+    gate("serving/rpc_overhead_p50", r_ratio <= OVERHEAD_BUDGET,
+         f"p50 rpc-traced {p50_rpc:.1f}us / rpc-bare {p50_rpc_off:.1f}us, "
+         f"median paired ratio {r_ratio:.4f} (budget {OVERHEAD_BUDGET}; every "
+         f"generate is a remote GENERATE with client+server spans + "
+         f"RpcStats)")
 
 
 # ---------------------------------------------------------------------------

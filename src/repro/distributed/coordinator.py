@@ -178,6 +178,7 @@ class Coordinator:
         leader = self.leader
         if leader is None:
             return None
+        self.transport.now = now   # virtual timestamp for rpc spans
         updater = self._ensure_updater(leader)
         self.stats["syncs"] += 1
 

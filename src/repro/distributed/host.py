@@ -149,9 +149,12 @@ def run_follower(wid: int, port: int, serve_argv: list,
         if args.trace_sample is not None:
             sampler = TraceSampler(args.trace_sample, seed=args.seed,
                                    head=args.trace_head)
+        # key_base partitions the trace-key space per process so the
+        # controller can absorb drained follower events verbatim.
         recorder = TraceRecorder(
             label=f"serve-{args.trace}-seed{args.seed}-w{wid}",
-            sampler=sampler, max_buffered_per_worker=args.trace_cap)
+            sampler=sampler, max_buffered_per_worker=args.trace_cap,
+            key_base=wid * 1_000_000)
     governor = None
     if args.budget > 0:
         governor = LedgerClient(transport, dst=0)
@@ -164,6 +167,31 @@ def run_follower(wid: int, port: int, serve_argv: list,
     worker.scheduler.dispatcher = PoolDispatcher(
         wid, args.workers, worker.engine, transport)
     worker.bind(transport)
+    # Fleet RPC observability: this follower's outbound RPCs (GENERATE
+    # hops to shard owners, ledger ops) emit client-side rpc spans into
+    # the local recorder, timestamped on the worker's virtual clock.
+    if recorder is not None:
+        transport.tracer = recorder
+        transport.trace_wid = wid
+    transport.now_fn = lambda: worker.clock.now
+    # Federated metrics: a process-local registry (series labelled with
+    # this wid) the controller scrapes via METRICS_REQ and merges into
+    # its /metrics. The shared budget ledger is NOT registered here — it
+    # lives in the controller's registry exactly once.
+    if args.metrics_out or args.metrics_port is not None \
+            or serve._streaming_requested(args):
+        from repro.obs import (MetricsRegistry, register_scheduler_metrics,
+                               register_slo_metrics,
+                               register_transport_metrics)
+
+        registry = MetricsRegistry()
+        labels = (("worker", wid),)
+        register_scheduler_metrics(registry, worker.scheduler, labels=labels)
+        if slo is not None:
+            register_slo_metrics(registry, slo,
+                                 lambda: worker.clock.now, labels=labels)
+        register_transport_metrics(registry, transport, labels=labels)
+        worker.registry = registry
     print(f"[w{wid}] ready: router v{worker.router_version}, owns pool "
           f"members {owned}", flush=True)
 

@@ -27,6 +27,12 @@ Two delivery regimes share the type:
 The frame starts with ``MAGIC`` + ``PROTOCOL_VERSION``; a receiver on a
 different protocol version rejects the frame outright instead of
 misparsing it.
+
+Version 2 added the optional trace context ``(trace_key, parent_span)``
+to every frame (fleet-wide RPC tracing) and the ``METRICS_REQ`` kind
+(federated metrics scrape). Both ride the same field dict the codec has
+always encoded, so a v2 decoder accepts frames with or without them;
+v1 decoders reject v2 frames at the version byte.
 """
 from __future__ import annotations
 
@@ -37,7 +43,7 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 MAGIC = b"RMSG"
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2
 
 # -- message kinds -----------------------------------------------------------
 # Session / control
@@ -65,10 +71,22 @@ GENERATE = "generate"            # {member, prompts, max_new,
 #                                   max_new_per_req} -> {outs, costs}
 LEDGER_OP = "ledger_op"          # {op, args} -> {result, lam, ...}
 TELEMETRY_REQ = "telemetry_req"  # -> {telemetry, served, queue}
-TRACE_REQ = "trace_req"          # -> {events, ...} recorder state dump
+TRACE_REQ = "trace_req"          # -> {events, next_key} recorder drain
+METRICS_REQ = "metrics_req"      # -> {prom}: follower registry scrape
 
 KINDS = frozenset(v for k, v in list(globals().items())
                   if k.isupper() and isinstance(v, str))
+
+# Kinds that emit client/server ``rpc`` trace spans. Deliberately
+# excluded: NEXT_ACTION (per-iteration polling noise), session control
+# (HELLO/ACK/ERROR/SHUTDOWN), one-way broadcasts (CLEAR_BURST /
+# CACHE_INVAL — loss-tolerant, a client span would imply a handled
+# request), and the obs drain traffic itself (TELEMETRY_REQ / TRACE_REQ /
+# METRICS_REQ — wall-driven, must not perturb deterministic traces).
+RPC_SPAN_KINDS = frozenset({
+    SYNC_STATUS, REPLAY_SAMPLE, ROUTER_BCAST, ASSIGN, STEP, CRASH,
+    REJOIN, TICK, FINALIZE, GENERATE, LEDGER_OP,
+})
 
 
 @dataclasses.dataclass
@@ -80,6 +98,11 @@ class Message:
     reply_to: Optional[int] = None
     expect_reply: bool = False
     payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Trace context (protocol v2): the request-tree key and parent span
+    # link id this frame does work for, so the receiving worker's spans
+    # join the sender's causal chain across process boundaries.
+    trace_key: Optional[int] = None
+    parent_span: Optional[int] = None
 
 
 # -- domain-object adapters --------------------------------------------------
@@ -138,7 +161,8 @@ def telemetry_from_state(state: Dict[str, Any]):
 
 def _histogram_to_state(h) -> Dict[str, Any]:
     return {"edges": h.edges, "counts": h.counts, "count": h.count,
-            "total": h.total, "min": h.min, "max": h.max}
+            "total": h.total, "min": h.min, "max": h.max,
+            "exemplars": {k: tuple(v) for k, v in h.exemplars.items()}}
 
 
 def _histogram_from_state(state: Dict[str, Any]):
@@ -150,6 +174,9 @@ def _histogram_from_state(state: Dict[str, Any]):
     h.total = float(state["total"])
     h.min = float(state["min"])
     h.max = float(state["max"])
+    # Pre-exemplar peers omit the field; tolerate its absence.
+    h.exemplars = {int(k): tuple(v)
+                   for k, v in state.get("exemplars", {}).items()}
     return h
 
 
@@ -323,7 +350,8 @@ def encode(msg: Message) -> bytes:
     _enc({
         "kind": msg.kind, "dst": msg.dst, "src": msg.src, "seq": msg.seq,
         "reply_to": msg.reply_to, "expect_reply": msg.expect_reply,
-        "payload": msg.payload,
+        "payload": msg.payload, "trace_key": msg.trace_key,
+        "parent_span": msg.parent_span,
     }, out)
     return b"".join(out)
 
@@ -339,4 +367,6 @@ def decode(buf: bytes) -> Message:
     return Message(kind=fields["kind"], dst=fields["dst"], src=fields["src"],
                    seq=fields["seq"], reply_to=fields["reply_to"],
                    expect_reply=fields["expect_reply"],
-                   payload=fields["payload"])
+                   payload=fields["payload"],
+                   trace_key=fields.get("trace_key"),
+                   parent_span=fields.get("parent_span"))

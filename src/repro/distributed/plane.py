@@ -54,7 +54,7 @@ class ServingPlane:
     def __init__(self, workers: List, coordinator, *,
                  sync_every_s: Optional[float] = None,
                  events: Sequence[PlaneEvent] = (), tracer=None,
-                 flusher=None):
+                 flusher=None, fleet_drain=None):
         self.workers = {w.wid: w for w in workers}
         self.coordinator = coordinator
         self.transport = coordinator.transport
@@ -76,6 +76,17 @@ class ServingPlane:
         if tracer is not None and getattr(coordinator, "tracer", None) \
                 is None:
             coordinator.tracer = tracer
+        # RPC tracing: the transport emits client-side `rpc` spans for the
+        # plane/coordinator protocol traffic. The event loop stamps
+        # `transport.now` with the fleet's virtual time at every decision
+        # point, so span timestamps are a pure function of the seeded
+        # schedule (wall latency goes to `transport.stats`, not the trace).
+        if tracer is not None and self.transport.tracer is None:
+            self.transport.tracer = tracer
+        # Socket mode: called at every sync boundary with the fleet
+        # high-water virtual time — drains follower trace segments and
+        # refreshes the federated /metrics snapshot between rounds.
+        self.fleet_drain = fleet_drain
         # Streaming flusher (repro.obs.stream.ObsFlusher): ticked at the
         # event loop's deterministic decision points on the fleet's
         # high-water virtual time — flush boundaries are a pure function
@@ -120,6 +131,7 @@ class ServingPlane:
 
     def _apply_event(self, e: PlaneEvent) -> None:
         w = self.workers[e.wid]
+        self.transport.now = e.t
         if self.tracer is not None:
             self.tracer.instant("plane_event", "plane", e.t, wid=e.wid,
                                 args={"kind": e.kind})
@@ -158,10 +170,11 @@ class ServingPlane:
 
     def run_trace(self, trace: Sequence) -> Dict:
         """Serve an open-loop trace across the worker fleet to completion."""
-        self._assign(list(trace))
         ev = deque(self.events)
         t_start = min((w.clock.now for w in self.workers.values()),
                       default=0.0)
+        self.transport.now = t_start
+        self._assign(list(trace))
         next_sync = t_start + self.sync_every_s
         t_hi = t_start                  # fleet high-water virtual time
         while True:
@@ -181,9 +194,12 @@ class ServingPlane:
                 self.coordinator.sync_round(next_sync)
                 t_hi = max(t_hi, next_sync)
                 next_sync += self.sync_every_s
+                if self.fleet_drain is not None:
+                    self.fleet_drain(t_hi)
                 if self.flusher is not None:
                     self.flusher.maybe_flush(t_hi)
                 continue
+            self.transport.now = t_next
             rep = self._request(wid, M.STEP, {"t": t_next})
             w = self.workers[wid]
             if rep is not None and hasattr(w, "observe_step"):
@@ -193,6 +209,7 @@ class ServingPlane:
                 self.flusher.maybe_flush(t_hi)
 
         t_end = max(w.clock.now for w in self.workers.values())
+        self.transport.now = t_end
         for w in self._alive():
             self._request(w.wid, M.TICK, {"t": t_end})
         self.coordinator.sync_round(t_end)

@@ -91,6 +91,15 @@ class PoolDispatcher:
         self.engine = engine
         self.transport = transport
         self.stats = {"local": 0, "remote": 0}
+        # Trace context for the NEXT generate (set by the scheduler per
+        # micro-batch): stamped onto the GENERATE frame so the owner's
+        # server span joins the requesting request's causal chain.
+        self.trace_key = None
+        self.parent_span = None
+        # After each call: the remote GENERATE's rpc link id (the request
+        # seq, echoed as the reply's reply_to) — None for a local run. The
+        # scheduler attaches it to the leg/generate spans as the `rpc` arg.
+        self.last_rpc = None
 
     def owns(self, member_idx: int) -> bool:
         return owner_of(member_idx, self.n_workers) == self.wid
@@ -100,6 +109,7 @@ class PoolDispatcher:
                         max_new_per_req: Optional[List[int]] = None):
         if self.owns(member_idx):
             self.stats["local"] += 1
+            self.last_rpc = None
             return self.engine.generate_member(
                 member_idx, prompts, max_new=max_new,
                 max_new_per_req=max_new_per_req)
@@ -107,12 +117,14 @@ class PoolDispatcher:
         owner = owner_of(member_idx, self.n_workers)
         rep = self.transport.request(Message(
             kind=M.GENERATE, dst=owner,
+            trace_key=self.trace_key, parent_span=self.parent_span,
             payload={"member": int(member_idx),
                      "prompts": [np.asarray(p) for p in prompts],
                      "max_new": int(max_new),
                      "max_new_per_req": (None if max_new_per_req is None
                                          else [int(m)
                                                for m in max_new_per_req])}))
+        self.last_rpc = rep.reply_to
         outs = [np.asarray(o) for o in rep.payload["outs"]]
         costs = np.asarray(rep.payload["costs"], np.float64)
         return outs, costs

@@ -54,7 +54,88 @@ class TransportError(RuntimeError):
 Handler = Callable[[Message], Optional[dict]]
 
 
+class RpcStats:
+    """RPC accounting for one transport endpoint.
+
+    Request counters and byte totals are deterministic for a seeded
+    ``LocalTransport`` run (the message sequence IS the replay contract);
+    the per-kind latency histograms are wall-measured and must be
+    registered as wall metrics, excluded from deterministic snapshots
+    (see :func:`repro.obs.wiring.register_transport_metrics`).
+    """
+
+    def __init__(self):
+        self.requests: Dict[str, int] = {}       # kind -> completed RPCs
+        self.peer_requests: Dict[int, int] = {}  # peer wid -> completed RPCs
+        self.bytes_out: Dict[int, int] = {}      # peer wid -> frame bytes
+        self.bytes_in: Dict[int, int] = {}
+        self.latency: Dict[str, object] = {}     # kind -> wall-s Histogram
+        self.retries = 0        # connect() re-dials
+        self.timeouts = 0
+        self.unreachable = 0
+        self.errors = 0         # remote handler failures (ERROR replies)
+        self.in_flight = 0
+
+    def note_request(self, peer: int, kind: str, wall_s: float) -> None:
+        self.requests[kind] = self.requests.get(kind, 0) + 1
+        peer = int(peer)
+        self.peer_requests[peer] = self.peer_requests.get(peer, 0) + 1
+        h = self.latency.get(kind)
+        if h is None:
+            from repro.serving.telemetry import Histogram
+
+            h = self.latency[kind] = Histogram()
+        h.record(wall_s)
+
+    def note_io(self, peer: int, *, out: int = 0, inb: int = 0) -> None:
+        peer = int(peer)
+        if out:
+            self.bytes_out[peer] = self.bytes_out.get(peer, 0) + out
+        if inb:
+            self.bytes_in[peer] = self.bytes_in.get(peer, 0) + inb
+
+    def note_failure(self, exc: Exception) -> None:
+        s = str(exc)
+        if "timed out" in s:
+            self.timeouts += 1
+        elif "remote handler failed" in s:
+            self.errors += 1
+        else:
+            self.unreachable += 1
+
+    def merged_latency(self):
+        """One histogram folding every kind's wall latency (for export)."""
+        from repro.serving.telemetry import Histogram
+
+        out = Histogram()
+        for h in self.latency.values():
+            out.merge(h)
+        return out
+
+
 class Transport:
+    # Fleet observability hooks — attached by the driver / follower host;
+    # all default off, so a bare transport does zero extra work.
+    tracer = None        # TraceRecorder: client ``rpc`` spans when set
+    trace_wid = 0        # pid the client spans render under
+    now = 0.0            # virtual clock, stamped by the driving loop
+    now_fn = None        # live virtual-clock read (follower worker clock)
+    stats: Optional[RpcStats] = None
+
+    def _tnow(self) -> float:
+        fn = self.now_fn
+        return self.now if fn is None else float(fn())
+
+    def _trace_client(self, msg: Message, t0: float) -> None:
+        """Client-side ``rpc`` span, emitted after a successful reply (so
+        a client span's existence implies the server handled the call —
+        the span-tree validator relies on that pairing)."""
+        tr = self.tracer
+        if tr is not None and msg.kind in M.RPC_SPAN_KINDS:
+            tr.span("rpc", "rpc", t0, self._tnow(), wid=self.trace_wid,
+                    args={"rpc": msg.seq, "kind": msg.kind,
+                          "side": "client", "peer": int(msg.dst)})
+
     def bind(self, wid: int, handler: Handler) -> None:
         raise NotImplementedError
 
@@ -101,6 +182,7 @@ class LocalTransport(Transport):
     def __init__(self):
         self._handlers: Dict[int, Handler] = {}
         self._seq = 0
+        self.stats = RpcStats()
 
     def bind(self, wid: int, handler: Handler) -> None:
         self._handlers[int(wid)] = handler
@@ -124,7 +206,19 @@ class LocalTransport(Transport):
         self._seq += 1
         msg.seq = self._seq
         msg.expect_reply = True
-        return _check_reply(self._deliver(msg))
+        t0 = self._tnow()
+        wall0 = time.perf_counter()
+        s = self.stats
+        try:
+            rep = _check_reply(self._deliver(msg))
+        except TransportError as exc:
+            if s is not None:
+                s.note_failure(exc)
+            raise
+        if s is not None:
+            s.note_request(msg.dst, msg.kind, time.perf_counter() - wall0)
+        self._trace_client(msg, t0)
+        return rep
 
 
 class FaultyTransport(Transport):
@@ -244,6 +338,7 @@ class SocketTransport(Transport):
         self._seq = self.wid * 1_000_000  # per-endpoint disjoint seq space
         self._listener: Optional[socket.socket] = None
         self.is_controller = self.wid == 0
+        self.stats = RpcStats()
 
     # -- wiring --------------------------------------------------------------
 
@@ -295,6 +390,7 @@ class SocketTransport(Transport):
                 break
             except OSError as exc:
                 last = exc
+                self.stats.retries += 1
                 time.sleep(self.CONNECT_BACKOFF_S * min(attempt + 1, 8))
         else:
             raise TransportError(
@@ -322,7 +418,24 @@ class SocketTransport(Transport):
             return self._conns[0]      # follower: everything via controller
         raise TransportError(f"no route to wid {dst}")
 
+    def _peer_for(self, dst: int) -> int:
+        """The wid on the other end of the conn frames to ``dst`` ride."""
+        return int(dst) if dst in self._conns else 0
+
     # -- delivery ------------------------------------------------------------
+
+    def _send_msg(self, conn: socket.socket, msg: Message,
+                  peer: int) -> None:
+        body = M.encode(msg)
+        if self.stats is not None:
+            self.stats.note_io(peer, out=len(body) + 4)
+        _send_frame(conn, body)
+
+    def _recv_msg(self, conn: socket.socket, peer: int) -> Message:
+        buf = _recv_frame(conn)
+        if self.stats is not None:
+            self.stats.note_io(peer, inb=len(buf) + 4)
+        return M.decode(buf)
 
     def _service(self, msg: Message) -> None:
         """Handle an inbound request/one-way frame (possibly forwarding)."""
@@ -332,13 +445,13 @@ class SocketTransport(Transport):
                 if msg.expect_reply:
                     rep = self._roundtrip(self._conn_for(msg.dst), msg)
                 else:
-                    _send_frame(self._conn_for(msg.dst), M.encode(msg))
+                    self._send_msg(self._conn_for(msg.dst), msg, msg.dst)
                     return
             except TransportError as exc:
                 rep = Message(kind=M.ERROR, dst=msg.src, src=self.wid,
                               reply_to=msg.seq,
                               payload={"error": str(exc)})
-            _send_frame(self._conn_for(msg.src), M.encode(rep))
+            self._send_msg(self._conn_for(msg.src), rep, msg.src)
             return
         handler = self._handlers.get(msg.dst)
         if handler is None:
@@ -348,12 +461,14 @@ class SocketTransport(Transport):
         else:
             rep = _dispatch(handler, msg)
         if msg.expect_reply:
-            _send_frame(self._conn_for(msg.src), M.encode(rep))
+            self._send_msg(self._conn_for(msg.src), rep,
+                           self._peer_for(msg.src))
 
     def _roundtrip(self, conn: socket.socket, msg: Message) -> Message:
-        _send_frame(conn, M.encode(msg))
+        peer = self._peer_for(msg.dst)
+        self._send_msg(conn, msg, peer)
         while True:
-            rep = M.decode(_recv_frame(conn))
+            rep = self._recv_msg(conn, peer)
             if rep.reply_to == msg.seq:
                 return rep
             # Nested inbound call while we wait: service it inline.
@@ -364,23 +479,51 @@ class SocketTransport(Transport):
         if msg.dst in self._handlers:   # local endpoint: loop back
             _dispatch(self._handlers[msg.dst], msg)
             return
-        _send_frame(self._conn_for(msg.dst), M.encode(msg))
+        self._send_msg(self._conn_for(msg.dst), msg,
+                       self._peer_for(msg.dst))
 
     def request(self, msg: Message, timeout: Optional[float] = None
                 ) -> Message:
         msg.src = self.wid
         msg.seq = self._next_seq()
         msg.expect_reply = True
+        t0 = self._tnow()
+        wall0 = time.perf_counter()
+        s = self.stats
         if msg.dst in self._handlers:   # local endpoint: loop back
-            return _check_reply(_dispatch(self._handlers[msg.dst], msg))
-        conn = self._conn_for(msg.dst)
-        if timeout is not None:
-            conn.settimeout(timeout)
+            try:
+                rep = _check_reply(_dispatch(self._handlers[msg.dst], msg))
+            except TransportError as exc:
+                if s is not None:
+                    s.note_failure(exc)
+                raise
+            if s is not None:
+                s.note_request(msg.dst, msg.kind,
+                               time.perf_counter() - wall0)
+            self._trace_client(msg, t0)
+            return rep
+        if s is not None:
+            s.in_flight += 1
         try:
-            return _check_reply(self._roundtrip(conn, msg))
-        finally:
+            conn = self._conn_for(msg.dst)
             if timeout is not None:
-                conn.settimeout(self.timeout)
+                conn.settimeout(timeout)
+            try:
+                rep = _check_reply(self._roundtrip(conn, msg))
+            finally:
+                if timeout is not None:
+                    conn.settimeout(self.timeout)
+        except TransportError as exc:
+            if s is not None:
+                s.note_failure(exc)
+            raise
+        finally:
+            if s is not None:
+                s.in_flight -= 1
+        if s is not None:
+            s.note_request(msg.dst, msg.kind, time.perf_counter() - wall0)
+        self._trace_client(msg, t0)
+        return rep
 
     # -- follower serve loop -------------------------------------------------
 
@@ -394,7 +537,7 @@ class SocketTransport(Transport):
         conn = self._conns[0]
         conn.settimeout(None)           # idle between rounds is normal
         while True:
-            msg = M.decode(_recv_frame(conn))
+            msg = self._recv_msg(conn, 0)
             if msg.kind == M.SHUTDOWN:
                 if msg.expect_reply:
                     _send_frame(conn, M.encode(Message(

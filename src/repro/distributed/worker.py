@@ -51,10 +51,13 @@ class WorkerNode:
         # budget ledger for follower LEDGER_OP messages. None = the
         # scheduler's own governor answers them.
         self.ledger = None
-        # Socket mode: the follower's process-local TraceRecorder, dumped
-        # to the controller at end of run (local mode shares one recorder
-        # through the scheduler's scoped tracer instead).
+        # Socket mode: the follower's process-local TraceRecorder, drained
+        # to the controller incrementally via TRACE_REQ (local mode shares
+        # one recorder through the scheduler's scoped tracer instead).
         self.recorder = None
+        # Socket mode: the follower's process-local MetricsRegistry,
+        # scraped by the controller via METRICS_REQ (federated /metrics).
+        self.registry = None
 
     # -- transport endpoint --------------------------------------------------
 
@@ -63,7 +66,25 @@ class WorkerNode:
         transport.bind(self.wid, self.handle)
 
     def handle(self, msg: Message) -> Optional[dict]:
-        """Service one protocol message; returns the reply payload."""
+        """Service one protocol message; returns the reply payload.
+
+        Kinds in :data:`~repro.distributed.messages.RPC_SPAN_KINDS` emit a
+        server-side ``rpc`` span around the handler (virtual-clock
+        timestamps, so STEP spans carry their real virtual duration); the
+        span's ``rpc`` arg is the request's seq — the same link id the
+        transport stamps on the matching client span.
+        """
+        tracer = getattr(self.scheduler, "tracer", None)
+        if tracer is None or msg.kind not in M.RPC_SPAN_KINDS:
+            return self._handle(msg)
+        t0 = self.clock.now
+        out = self._handle(msg)
+        tracer.span("rpc", "rpc", t0, self.clock.now,
+                    args={"rpc": msg.seq, "kind": msg.kind,
+                          "side": "server", "peer": int(msg.src)})
+        return out
+
+    def _handle(self, msg: Message) -> Optional[dict]:
         p = msg.payload
         kind = msg.kind
         if kind == M.SYNC_STATUS:
@@ -129,10 +150,18 @@ class WorkerNode:
                     "version": self.router_version,
                     "now": self.clock.now}
         if kind == M.TRACE_REQ:
+            # Incremental drain: flushable events (runtime scope + closed,
+            # sampled request trees) leave this process now; ``force``
+            # (end of run) also drains open trees.
             rec = self.recorder
             if rec is None:
                 return {"events": [], "next_key": 0}
-            return {"events": list(rec.events), "next_key": rec._next_key}
+            return {"events": rec.drain(force=bool(p.get("force"))),
+                    "next_key": rec._next_key}
+        if kind == M.METRICS_REQ:
+            if self.registry is None:
+                return {"prom": ""}
+            return {"prom": self.registry.prometheus(deterministic=False)}
         if kind == M.HELLO:
             return {"wid": self.wid}
         raise ValueError(f"worker {self.wid}: unknown message kind {kind!r}")
@@ -167,6 +196,7 @@ class WorkerNode:
             slo.check(t_end, force=True)
         self.telemetry.rejected = self.queue.rejected
         self.telemetry.expired = self.queue.expired
+        self.telemetry.shed = self.queue.shed
         return {"completed": self.telemetry.completed}
 
     def ledger_op(self, op: str, args: List) -> Dict:

@@ -314,6 +314,7 @@ def build_plane_worker(args, ctx, wid, governor, drift_proto, recorder, slo):
         tracer=recorder.scoped(wid) if recorder is not None else None,
         slo=slo,
     )
+    sched.slo_enforce = args.slo_class > 0
     return WorkerNode(wid, weng, sched, adapter)
 
 
@@ -595,6 +596,13 @@ def make_parser() -> argparse.ArgumentParser:
                     help="SLO compliance window, virtual seconds (the "
                          "burn-rate alert pairs it with a window/12 short "
                          "window)")
+    ap.add_argument("--slo-class", type=int, default=0, metavar="K",
+                    help="SLO-class-aware admission enforcement: assign "
+                         "each trace request a class in [0, K) (round-"
+                         "robin over arrival order; higher = more "
+                         "important) and, while any --slo-* burn-rate "
+                         "alert fires, shed the queue's lowest class at "
+                         "dispatch time (0 disables)")
     return ap
 
 
@@ -636,6 +644,11 @@ def main(argv=None):
         texts=[ctx.data.texts[i] for i in ctx.te],
         benchmarks=[ctx.data.benchmark[i] for i in ctx.te],
     )
+    if args.slo_class > 0:
+        # Deterministic class assignment (arrival order) — followers see
+        # the classes via the ASSIGN codec, not by re-deriving them.
+        for i, r in enumerate(trace):
+            r.slo_class = i % args.slo_class
 
     obs = _setup_obs(args)
     mserver = None
@@ -648,7 +661,8 @@ def main(argv=None):
     try:
         if args.workers > 1:
             if args.transport == "socket":
-                return _run_plane_socket(args, ctx, trace, obs, raw_argv)
+                return _run_plane_socket(args, ctx, trace, obs, raw_argv,
+                                         mserver=mserver)
             return _run_plane(args, ctx, trace, obs)
         return _run_solo(args, ctx, trace, obs)
     finally:
@@ -712,6 +726,7 @@ def _run_solo(args, ctx, trace, obs):
         tracer=recorder.scoped(0) if recorder is not None else None,
         slo=slo, flusher=flusher,
     )
+    sched.slo_enforce = args.slo_class > 0
     if registry is not None:
         from repro.obs import (
             register_governor_metrics, register_scheduler_metrics,
@@ -833,7 +848,7 @@ def _run_plane(args, ctx, trace, obs):
     return summary
 
 
-def _run_plane_socket(args, ctx, trace, obs, raw_argv):
+def _run_plane_socket(args, ctx, trace, obs, raw_argv, mserver=None):
     """Multi-worker path over SocketTransport: real OS processes.
 
     This process is worker 0 AND the controller AND (by lowest-id
@@ -929,8 +944,41 @@ def _run_plane_socket(args, ctx, trace, obs, raw_argv):
             if args.rejoin_at is not None:
                 events.append(
                     PlaneEvent(args.rejoin_at, "rejoin", args.crash_worker))
+        # Fleet-wide obs drain, called by the plane at sync boundaries
+        # (and once more after the run): incremental follower trace
+        # segments are absorbed verbatim (keys pre-partitioned by the
+        # followers' key_base), and follower registries are scraped over
+        # METRICS_REQ so the live /metrics endpoint federates the fleet.
+        # RPCs happen HERE, on the plane loop — never on the HTTP scrape
+        # thread (the socket protocol is single-threaded lockstep).
+        fleet_prom = {}
+
+        def fleet_drain(now, force=False):
+            for p in proxies:
+                try:
+                    if recorder is not None:
+                        rep = transport.request(Message(
+                            kind=M.TRACE_REQ, dst=p.wid,
+                            payload={"force": bool(force)}))
+                        recorder.absorb(
+                            [tuple(e) for e in rep.payload["events"]])
+                    if registry is not None:
+                        rep = transport.request(Message(
+                            kind=M.METRICS_REQ, dst=p.wid))
+                        text = rep.payload.get("prom", "")
+                        if text:
+                            fleet_prom[p.wid] = text
+                            if mserver is not None:
+                                mserver.update_fleet(p.wid, text)
+                except TransportError:
+                    continue
+
         plane = ServingPlane(workers, coord, events=events, tracer=recorder,
-                             flusher=flusher)
+                             flusher=flusher,
+                             fleet_drain=(fleet_drain
+                                          if recorder is not None
+                                          or registry is not None
+                                          else None))
         if registry is not None:
             from repro.obs import (
                 register_plane_metrics, register_slo_metrics,
@@ -952,18 +1000,12 @@ def _run_plane_socket(args, ctx, trace, obs, raw_argv):
             names[mi]: owner_of(mi, args.workers)
             for mi in range(len(names))}
 
-        # Fold the followers' per-process recorders into the controller's
-        # (request keys re-based by merge) so --trace-out covers the fleet.
-        if recorder is not None:
-            for p in proxies:
-                try:
-                    rep = transport.request(
-                        Message(kind=M.TRACE_REQ, dst=p.wid))
-                except TransportError:
-                    continue
-                recorder.merge(types.SimpleNamespace(
-                    events=[tuple(e) for e in rep.payload["events"]],
-                    _next_key=int(rep.payload["next_key"])))
+        # Final force-drain: whatever the incremental sync-boundary drains
+        # have not collected yet (open trees, post-FINALIZE spans, the
+        # last metrics state) is absorbed now so --trace-out and the
+        # fleet exposition cover the whole run.
+        if recorder is not None or registry is not None:
+            fleet_drain(None, force=True)
 
         print(f"trace={args.trace} requests={args.requests} "
               f"seed={args.seed} workers={args.workers} transport=socket")
@@ -992,6 +1034,17 @@ def _run_plane_socket(args, ctx, trace, obs, raw_argv):
         t_end = max(w.clock.now for w in workers)
         _print_slo(slo, t_end)
         _save_obs(args, recorder, registry, profiler, flusher, now=t_end)
+        if args.metrics_out and registry is not None and fleet_prom:
+            from repro.obs import merge_prom_texts
+
+            fleet_path = args.metrics_out + ".fleet.prom"
+            own = registry.prometheus(
+                deterministic=not args.trace_profile)
+            with open(fleet_path, "w") as f:
+                f.write(merge_prom_texts(
+                    [own] + [fleet_prom[w] for w in sorted(fleet_prom)]))
+            print(f"fleet metrics exposition written to {fleet_path} "
+                  f"({1 + len(fleet_prom)} registries)")
         for p in proxies:
             try:
                 transport.send(Message(kind=M.SHUTDOWN, dst=p.wid))

@@ -33,7 +33,7 @@ from repro.obs.metrics import (
 )
 from repro.obs.profiling import KernelProfiler
 from repro.obs.sampling import TraceSampler, is_anomaly_event
-from repro.obs.scrape import MetricsServer
+from repro.obs.scrape import MetricsServer, merge_prom_texts
 from repro.obs.slo import (
     BurnRateSLO,
     RollingWindow,
@@ -58,6 +58,7 @@ from repro.obs.wiring import (
     register_scheduler_metrics,
     register_slo_metrics,
     register_stream_metrics,
+    register_transport_metrics,
 )
 
 __all__ = [
@@ -82,11 +83,13 @@ __all__ = [
     "concat_dir",
     "concat_segments",
     "is_anomaly_event",
+    "merge_prom_texts",
     "register_governor_metrics",
     "register_plane_metrics",
     "register_scheduler_metrics",
     "register_slo_metrics",
     "register_stream_metrics",
+    "register_transport_metrics",
     "request_trees",
     "trace_summary",
     "validate_chrome_trace",

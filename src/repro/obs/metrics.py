@@ -239,14 +239,27 @@ class MetricsRegistry:
                     lines.append(f"{m.name}{_label_str(labels)} {v:g}")
             elif isinstance(m, HistogramMetric):
                 h = m.resolve()
+                # OpenMetrics-style exemplars: the histogram keeps one
+                # deterministically min-hash-sampled trace key per raw
+                # bucket; bucket line j carries raw bucket j's exemplar
+                # and +Inf carries the overflow bucket's.
+                ex = getattr(h, "exemplars", None) or {}
                 cum = 0
                 for j, edge in enumerate(h.edges):
                     cum = int(h.counts[: j + 1].sum())
                     labels = m.labels + (("le", f"{edge:g}"),)
-                    lines.append(f"{m.name}_bucket{_label_str(labels)} {cum}")
+                    line = f"{m.name}_bucket{_label_str(labels)} {cum}"
+                    e = ex.get(j)
+                    if e is not None:
+                        line += f' # {{trace_key="{e[1]}"}} {e[2]:g}'
+                    lines.append(line)
                 labels = m.labels + (("le", "+Inf"),)
-                lines.append(f"{m.name}_bucket{_label_str(labels)} "
-                             f"{int(h.count)}")
+                line = (f"{m.name}_bucket{_label_str(labels)} "
+                        f"{int(h.count)}")
+                e = ex.get(len(h.edges))
+                if e is not None:
+                    line += f' # {{trace_key="{e[1]}"}} {e[2]:g}'
+                lines.append(line)
                 lines.append(f"{m.name}_sum{_label_str(m.labels)} "
                              f"{h.total:g}")
                 lines.append(f"{m.name}_count{_label_str(m.labels)} "

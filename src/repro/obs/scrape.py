@@ -29,6 +29,30 @@ from typing import Optional
 PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 
+def merge_prom_texts(texts) -> str:
+    """Concatenate Prometheus text expositions into one scrape body.
+
+    ``# HELP`` / ``# TYPE`` header lines are deduplicated by metric name
+    (first exposition wins) — a federated scrape merges the controller's
+    registry with follower registries that expose the same series under
+    different ``worker`` labels, and repeating the headers per process
+    would be invalid exposition.
+    """
+    lines = []
+    seen = set()
+    for text in texts:
+        for line in text.splitlines():
+            if line.startswith("# HELP ") or line.startswith("# TYPE "):
+                parts = line.split(" ", 3)
+                key = (parts[1], parts[2])
+                if key in seen:
+                    continue
+                seen.add(key)
+            if line:
+                lines.append(line)
+    return "\n".join(lines) + "\n"
+
+
 class MetricsServer:
     """Daemon-threaded HTTP server over one metrics registry.
 
@@ -47,8 +71,27 @@ class MetricsServer:
         self.port = int(port)
         self.deterministic = deterministic
         self.scrapes = 0
+        # Federated view: wid -> that follower's latest Prometheus text,
+        # refreshed by the serving loop at sync boundaries (the scrape
+        # thread only READS this cache — it must never issue transport
+        # RPCs itself, the socket protocol is single-threaded lockstep).
+        self.fleet = {}
         self._httpd: Optional[ThreadingHTTPServer] = None
         self._thread: Optional[threading.Thread] = None
+
+    def update_fleet(self, wid: int, prom_text: str) -> None:
+        """Cache one follower's scraped registry for /metrics merging."""
+        if prom_text:
+            self.fleet[int(wid)] = prom_text
+
+    def render(self) -> str:
+        """The merged exposition /metrics serves: own registry first,
+        then each cached follower exposition in ascending wid order."""
+        own = self.registry.prometheus(deterministic=self.deterministic)
+        if not self.fleet:
+            return own
+        return merge_prom_texts(
+            [own] + [self.fleet[w] for w in sorted(self.fleet)])
 
     def _handler_class(self):
         server = self
@@ -57,8 +100,7 @@ class MetricsServer:
             def do_GET(self):                          # noqa: N802
                 path = self.path.split("?", 1)[0]
                 if path in ("/metrics", "/"):
-                    body = server.registry.prometheus(
-                        deterministic=server.deterministic).encode()
+                    body = server.render().encode()
                     ctype = PROM_CONTENT_TYPE
                 elif path == "/metrics.json":
                     body = server.registry.to_json(

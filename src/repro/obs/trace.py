@@ -69,10 +69,15 @@ class TraceRecorder:
     """
 
     def __init__(self, label: str = "run", *, sampler=None,
-                 max_buffered_per_worker: Optional[int] = None):
+                 max_buffered_per_worker: Optional[int] = None,
+                 key_base: int = 0):
         self.label = label
         self.events: List[tuple] = []
-        self._next_key = 0
+        # ``key_base`` partitions the trace-key space across processes: a
+        # socket-mode follower starts at ``wid * 1_000_000`` so its keys
+        # never collide with the controller's when drained batches are
+        # absorbed verbatim (no re-keying, links stay valid).
+        self._next_key = int(key_base)
         self.sampler = sampler
         self.max_buffered_per_worker = max_buffered_per_worker
         # Streaming state: closed request trees awaiting drain, anomalous
@@ -120,8 +125,9 @@ class TraceRecorder:
                 self.stats["requests_shed"] += 1
                 self.stats["dropped_cap"] += 1
                 return
-            if name == "reject" or (name == "request" and ph == "X"):
-                # Tree complete: a rejection is a single-instant tree, a
+            if name in ("reject", "shed") or (name == "request"
+                                              and ph == "X"):
+                # Tree complete: a rejection/shed is a terminal instant, a
                 # root span is the finalize. Flushable at the next drain.
                 self._closed.add(key)
                 self.stats["requests_closed"] += 1
@@ -198,6 +204,25 @@ class TraceRecorder:
     @property
     def drop_stats(self) -> Dict[str, int]:
         return dict(self.stats)
+
+    def absorb(self, events: Sequence[tuple]) -> None:
+        """Fold a batch drained from a peer recorder with a *disjoint* key
+        space (a follower built with ``key_base``): events are appended
+        verbatim — keys, wids, and span-link args survive untouched — and
+        their keys are marked closed + anomalous so this recorder's next
+        drain flushes them unconditionally instead of re-sampling trees
+        the peer already sampled."""
+        for e in events:
+            e = tuple(e)
+            self.events.append(e)
+            self.stats["events"] += 1
+            key = e[_KEY]
+            if key is not None:
+                self._closed.add(key)
+                self._anomaly.add(key)
+            self._buffered[e[_WID]] = self._buffered.get(e[_WID], 0) + 1
+        if len(self.events) > self.peak_buffered:
+            self.peak_buffered = len(self.events)
 
     # -- rollup --------------------------------------------------------------
 
@@ -388,22 +413,47 @@ def validate_span_tree(doc, eps_us: float = 0.5) -> List[str]:
     ``generate`` micro-batch span on the same worker whose interval lies
     inside the leg's. Legs without the arg are skipped — hand-built traces
     and pre-link documents stay valid.
+
+    RPC flow links are validated fleet-wide: every client-side ``rpc``
+    span must have a matching server-side span (same ``rpc`` link id) —
+    a dangling client link is a validation error, since the transport
+    only emits the client span after a successful reply. Unmatched
+    *server* spans are fine (the reply can be lost in transit). Legs
+    carrying an ``rpc`` arg (remote GENERATE dispatch) must resolve to a
+    client span on the leg's own pid and a server span on the owning pid.
     """
     problems: List[str] = []
     gen_spans: Dict[Tuple[int, int], Dict] = {}
+    rpc_client: Dict[int, Dict] = {}
+    rpc_server: Dict[int, Dict] = {}
     for ev in doc.get("traceEvents", ()):
-        if (ev.get("ph") == "X" and ev.get("name") == "generate"
-                and ev.get("tid", 0) == 0):
+        if ev.get("ph") != "X" or ev.get("tid", 0) != 0:
+            continue
+        if ev.get("name") == "generate":
             gen = (ev.get("args") or {}).get("gen")
             if gen is not None:
                 gen_spans[(ev["pid"], gen)] = ev
+        elif ev.get("name") == "rpc":
+            args = ev.get("args") or {}
+            link = args.get("rpc")
+            if link is not None:
+                side = rpc_client if args.get("side") == "client" \
+                    else rpc_server
+                side[link] = ev
+    for link, ev in sorted(rpc_client.items()):
+        if link not in rpc_server:
+            problems.append(
+                f"rpc {link}: client span on worker {ev['pid']} "
+                f"(kind={((ev.get('args') or {}).get('kind'))!r}) has no "
+                "matching server span — dangling flow link")
     for tid, t in sorted(request_trees(doc).items()):
         root = t["root"]
         if root is None:
-            # Un-finalized request scope: only backpressure rejections are
-            # allowed to stay rootless (they never entered the runtime).
+            # Un-finalized request scope: only backpressure rejections and
+            # SLO-class load shedding are allowed to stay rootless (those
+            # requests never reached dispatch).
             names = {e["name"] for e in t["events"]}
-            if names - {"reject"}:
+            if names - {"reject"} and "shed" not in names:
                 problems.append(f"request {tid}: events {sorted(names)} "
                                 "without a 'request' root span")
             continue
@@ -457,6 +507,20 @@ def validate_span_tree(doc, eps_us: float = 0.5) -> List[str]:
             if lm is not None and gm is not None and lm != gm:
                 problems.append(f"request {tid}: leg member {lm!r} != "
                                 f"linked generate member {gm!r}")
+            rlink = (leg.get("args") or {}).get("rpc")
+            if rlink is None:
+                continue
+            cli = rpc_client.get(rlink)
+            if cli is None:
+                problems.append(f"request {tid}: leg links rpc={rlink} but "
+                                "no client rpc span")
+            elif cli["pid"] != leg["pid"]:
+                problems.append(
+                    f"request {tid}: rpc={rlink} client span on worker "
+                    f"{cli['pid']} != leg worker {leg['pid']}")
+            if rlink not in rpc_server:
+                problems.append(f"request {tid}: leg links rpc={rlink} but "
+                                "no server rpc span")
         n_waits = sum(e["name"] == "queue_wait" for e in t["events"])
         if t["legs"] and n_waits < len(t["legs"]):
             problems.append(f"request {tid}: {len(t['legs'])} legs but only "

@@ -60,6 +60,8 @@ def register_scheduler_metrics(reg: MetricsRegistry, sched,
                 fn=lambda: queue.expired)
     reg.counter("queue_readmitted_total", "cascade re-admissions",
                 labels=labels, fn=lambda: queue.readmitted)
+    reg.counter("queue_shed_total", "SLO-class load-shedding drops",
+                labels=labels, fn=lambda: queue.shed)
 
     reg.counter("requests_completed_total", "finalized requests",
                 labels=labels, fn=lambda: tel.completed)
@@ -162,6 +164,55 @@ def register_scheduler_metrics(reg: MetricsRegistry, sched,
                   fn=lambda: semcache.report()["hit_rate"])
 
 
+def register_transport_metrics(reg: MetricsRegistry, transport,
+                               labels=()) -> None:
+    """RPC telemetry of one transport endpoint.
+
+    Handles both stats shapes: an :class:`~repro.distributed.transport.
+    RpcStats` (LocalTransport / SocketTransport) registers the ``rpc_*``
+    series — per-kind/per-peer request counts, frame bytes, failure
+    counters, in-flight gauge, and the wall-measured round-trip latency
+    histogram; a plain fault-injection dict
+    (:class:`~repro.distributed.transport.FaultyTransport`) registers
+    each counter as ``transport_fault_<key>_total`` and recurses into the
+    wrapped inner transport.
+    """
+    from repro.distributed.transport import RpcStats
+
+    s = getattr(transport, "stats", None)
+    if isinstance(s, dict):
+        for k in sorted(s):
+            reg.counter(f"transport_fault_{k}_total",
+                        f"fault-injection events: {k}", labels=labels,
+                        fn=lambda k=k: transport.stats.get(k, 0))
+        inner = getattr(transport, "inner", None)
+        if inner is not None:
+            register_transport_metrics(reg, inner, labels=labels)
+        return
+    if not isinstance(s, RpcStats):
+        return
+    reg.multi_gauge("rpc_requests", "completed RPCs by message kind",
+                    "kind", labels=labels, fn=lambda: dict(s.requests))
+    reg.multi_gauge("rpc_peer_requests", "completed RPCs by peer wid",
+                    "peer", labels=labels, fn=lambda: dict(s.peer_requests))
+    reg.multi_gauge("rpc_bytes_out", "frame bytes sent by peer wid",
+                    "peer", labels=labels, fn=lambda: dict(s.bytes_out))
+    reg.multi_gauge("rpc_bytes_in", "frame bytes received by peer wid",
+                    "peer", labels=labels, fn=lambda: dict(s.bytes_in))
+    reg.counter("rpc_retries_total", "connect re-dials", labels=labels,
+                fn=lambda: s.retries)
+    reg.counter("rpc_timeouts_total", "request deadline misses",
+                labels=labels, fn=lambda: s.timeouts)
+    reg.counter("rpc_unreachable_total", "sends to unreachable peers",
+                labels=labels, fn=lambda: s.unreachable)
+    reg.counter("rpc_errors_total", "remote handler failures (ERROR replies)",
+                labels=labels, fn=lambda: s.errors)
+    reg.gauge("rpc_in_flight", "requests awaiting a reply", labels=labels,
+              fn=lambda: s.in_flight)
+    reg.histogram("rpc_latency_s", "RPC round-trip wall latency (all kinds)",
+                  labels=labels, wall=True, fn=s.merged_latency)
+
+
 def register_slo_metrics(reg: MetricsRegistry, tracker, clock_fn,
                          labels=()) -> None:
     """Burn-rate / firing-state series of an :class:`SLOTracker`.
@@ -249,5 +300,12 @@ def register_plane_metrics(reg: MetricsRegistry, plane) -> None:
                 fn=lambda: coord.stats["broadcasts"])
     reg.counter("sync_bursts_total", "escalated drift bursts",
                 fn=lambda: coord.stats["bursts"])
+    reg.counter("sync_unreachable_total",
+                "worker RPCs that found the peer unreachable",
+                fn=lambda: coord.stats["unreachable"])
+    reg.counter("sync_cache_invals_total",
+                "semantic-cache invalidation broadcasts",
+                fn=lambda: coord.stats["cache_invals"])
     reg.gauge("plane_alive_workers", "workers currently serving",
               fn=lambda: sum(w.alive for w in plane.workers.values()))
+    register_transport_metrics(reg, coord.transport)

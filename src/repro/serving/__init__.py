@@ -22,6 +22,7 @@ from repro.serving.queue import (
     EXPIRED,
     PENDING,
     REJECTED,
+    SHED,
     AdmissionQueue,
     Request,
 )
@@ -40,7 +41,8 @@ __all__ = [
     "arch_cost_per_token", "arch_cost_rate",
     "pad_prompts", "prompt_pad_mask",
     "AdmissionQueue", "Request", "PENDING", "DONE", "REJECTED",
-    "EXPIRED", "BudgetGovernor", "MicroBatchScheduler", "SchedulerConfig",
+    "EXPIRED", "SHED",
+    "BudgetGovernor", "MicroBatchScheduler", "SchedulerConfig",
     "SimClock", "default_service_model", "Histogram", "Telemetry",
     "SemanticCache", "calibrate_radius",
     "TRACE_KINDS", "TraceConfig", "make_trace",

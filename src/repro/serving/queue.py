@@ -27,6 +27,7 @@ PENDING = "pending"    # admitted, waiting in queue
 DONE = "done"          # served; ``output`` holds the generated tokens
 REJECTED = "rejected"  # backpressure: queue was full at arrival
 EXPIRED = "expired"    # deadline passed before service started
+SHED = "shed"          # dropped by SLO-class load shedding
 
 
 @dataclasses.dataclass
@@ -44,6 +45,10 @@ class Request:
     # process-global counter shifts between in-process runs). -1 = no
     # tracer has seen this request.
     trace_key: int = -1
+    # Service class for SLO-aware load shedding: higher = more important.
+    # When a burn-rate alert fires, the scheduler sheds queued requests of
+    # the LOWEST class present first (0 = best-effort default).
+    slo_class: int = 0
 
     # Filled in by the runtime.
     status: str = PENDING
@@ -134,6 +139,7 @@ class AdmissionQueue:
         self.rejected = 0
         self.expired = 0
         self.readmitted = 0
+        self.shed = 0
         # Optional trace hook (repro.obs): admission/rejection/expiry are
         # queue-owned lifecycle transitions, so their events are emitted
         # here. The scheduler installs the tracer.
@@ -216,6 +222,40 @@ class AdmissionQueue:
                             "expire", "queue", now,
                             key=self.tracer.ensure_key(req),
                             args={"deadline_s": req.deadline_s})
+            else:
+                survivors.append(req)
+        self._items = survivors
+        return dropped
+
+    def shed_lowest(self, now: float,
+                    alerts: Sequence[str] = ()) -> List[Request]:
+        """SLO-class-aware load shedding: drop every queued request of the
+        LOWEST ``slo_class`` present.
+
+        Called by the scheduler when a burn-rate alert fires: best-effort
+        load is sacrificed first so higher classes keep their error
+        budget. Escalated requests holding a best-so-far answer are never
+        shed — they carry sunk cost and a servable answer (same rationale
+        as deadline rescue). Each shed emits a ``shed`` trace instant and
+        counts once; returns the dropped requests.
+        """
+        sheddable = [r for r in self._items if r.best_output is None]
+        if not sheddable:
+            return []
+        lo = min(r.slo_class for r in sheddable)
+        survivors: Deque[Request] = deque()
+        dropped: List[Request] = []
+        for req in self._items:
+            if req.best_output is None and req.slo_class == lo:
+                req.status = SHED
+                req.finish_s = now
+                self.shed += 1
+                dropped.append(req)
+                if self.tracer is not None:
+                    self.tracer.instant("shed", "queue", now,
+                                        key=self.tracer.ensure_key(req),
+                                        args={"slo_class": lo,
+                                              "alerts": list(alerts)})
             else:
                 survivors.append(req)
         self._items = survivors

@@ -125,6 +125,10 @@ class MicroBatchScheduler:
         self.slo = slo
         if slo is not None and slo.tracer is None:
             slo.tracer = tracer
+        # SLO-class admission enforcement: when on, a firing burn-rate
+        # alert sheds the queue's lowest slo_class at dispatch start
+        # (opt-in via serve's --slo-class; off = identical behavior).
+        self.slo_enforce = False
         # Streaming flusher (repro.obs.stream.ObsFlusher): run_trace ticks
         # it on the virtual clock; the multi-worker plane drives its own.
         self.flusher = flusher
@@ -377,6 +381,15 @@ class MicroBatchScheduler:
         """
         served: List[Request] = []
         tracer = self.tracer
+        if self.slo_enforce and self.slo is not None and self.queue.depth:
+            # SLO-class enforcement: a firing burn-rate alert means the
+            # error budget is burning too fast — shed the lowest service
+            # class queued before spending capacity on it. Shed requests
+            # are NOT observed into the tracker (they never consumed an
+            # error budget; feeding them back would self-amplify).
+            firing = self.slo.firing()
+            if firing:
+                self.queue.shed_lowest(self.clock.now, alerts=firing)
         for r in self.queue.expire(self.clock.now):
             if r.best_output is not None:
                 # Deadline hit mid-cascade: the request already holds a
@@ -538,6 +551,15 @@ class MicroBatchScheduler:
                 gen = (self.engine.generate_member
                        if self.dispatcher is None
                        else self.dispatcher.generate_member)
+                if self.dispatcher is not None:
+                    # Trace context for a possible remote hop: the frame
+                    # carries the chunk head's request-tree key and the
+                    # generate link id this micro-batch will record under.
+                    self.dispatcher.trace_key = (
+                        chunk[0].trace_key if chunk[0].trace_key >= 0
+                        else None)
+                    self.dispatcher.parent_span = (
+                        self.telemetry.generate_calls + 1)
                 if self._gen_per_req:
                     outs, cost = gen(
                         mi, [r.prompt for r in chunk], max_new=max_new,
@@ -568,11 +590,19 @@ class MicroBatchScheduler:
                 # spans carry the same id so tooling can jump from a
                 # request's leg to the micro-batch that served it.
                 gen_id = self.telemetry.generate_calls
+                # Remote hop: the dispatcher exposes the GENERATE RPC's
+                # link id (request seq) — attached to the generate and leg
+                # spans so tooling can jump from a request's leg to the
+                # client/server rpc span pair across pids.
+                rpc_id = (None if self.dispatcher is None
+                          else getattr(self.dispatcher, "last_rpc", None))
                 if tracer is not None:
+                    gargs = {"member": self.engine.pool[mi].name,
+                             "n": len(chunk), "cost": cost, "gen": gen_id}
+                    if rpc_id is not None:
+                        gargs["rpc"] = rpc_id
                     tracer.span("generate", "sched", t_gen0, self.clock.now,
-                                args={"member": self.engine.pool[mi].name,
-                                      "n": len(chunk), "cost": cost,
-                                      "gen": gen_id})
+                                args=gargs)
                 for r, o, per_req_cost in zip(chunk, outs, per_req):
                     per_req_cost = float(per_req_cost)
                     r.member = mi
@@ -584,12 +614,14 @@ class MicroBatchScheduler:
                     r.leg_costs.append(per_req_cost)
                     r.finish_s = self.clock.now
                     if tracer is not None:
+                        largs = {"leg": r.leg,
+                                 "member": self.engine.pool[mi].name,
+                                 "cost": per_req_cost, "gen": gen_id}
+                        if rpc_id is not None:
+                            largs["rpc"] = rpc_id
                         tracer.span(
                             "leg", "request", r.service_start_s, r.finish_s,
-                            key=r.trace_key,
-                            args={"leg": r.leg,
-                                  "member": self.engine.pool[mi].name,
-                                  "cost": per_req_cost, "gen": gen_id})
+                            key=r.trace_key, args=largs)
                     if self.cascade is None:
                         r.status = DONE
                         self._cache_admit(r)
@@ -699,4 +731,5 @@ class MicroBatchScheduler:
             self.slo.check(self.clock.now, force=True)
         self.telemetry.rejected = self.queue.rejected
         self.telemetry.expired = self.queue.expired
+        self.telemetry.shed = self.queue.shed
         return self.telemetry.summary(self.clock.now - t_start)

@@ -7,10 +7,24 @@ so memory stays O(buckets) at any traffic volume).
 """
 from __future__ import annotations
 
+import hashlib
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+def exemplar_score(trace_key: int) -> int:
+    """Deterministic min-hash rank of a trace key.
+
+    The bucket exemplar kept is the key with the SMALLEST score — a pure
+    function of the key itself, so which exemplar survives is independent
+    of arrival order and of how per-worker histograms are merged, and a
+    seeded replay reproduces the exact same exemplars.
+    """
+    digest = hashlib.blake2b(str(int(trace_key)).encode(),
+                             digest_size=8).digest()
+    return int.from_bytes(digest, "big")
 
 
 class BoundedSeries:
@@ -76,13 +90,25 @@ class Histogram:
         self.total = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        # Prometheus-style exemplars: raw bucket index -> (min-hash score,
+        # trace_key, observed value). One per bucket, O(buckets) memory.
+        self.exemplars: Dict[int, Tuple[int, int, float]] = {}
 
-    def record(self, value: float) -> None:
-        self.counts[int(np.searchsorted(self.edges, value, side="right"))] += 1
+    def record(self, value: float, *, exemplar: Optional[int] = None) -> None:
+        idx = int(np.searchsorted(self.edges, value, side="right"))
+        self.counts[idx] += 1
         self.count += 1
         self.total += value
         self.min = min(self.min, value)
         self.max = max(self.max, value)
+        if exemplar is not None:
+            # Lexicographic min over (score, key, value): the score picks
+            # the surviving key, the full tuple breaks same-key ties so
+            # the table is a pure function of the recorded set.
+            cand = (exemplar_score(exemplar), int(exemplar), float(value))
+            cur = self.exemplars.get(idx)
+            if cur is None or cand < cur:
+                self.exemplars[idx] = cand
 
     @property
     def mean(self) -> float:
@@ -97,6 +123,10 @@ class Histogram:
         self.total += other.total
         self.min = min(self.min, other.min)
         self.max = max(self.max, other.max)
+        for idx, ex in other.exemplars.items():
+            cur = self.exemplars.get(idx)
+            if cur is None or tuple(ex) < cur:
+                self.exemplars[idx] = tuple(ex)
 
     def percentile(self, p: float) -> float:
         """Approximate percentile (log-interpolated inside the bucket).
@@ -146,6 +176,7 @@ class Telemetry:
         self.completed = 0
         self.rejected = 0
         self.expired = 0
+        self.shed = 0            # SLO-class load shedding (queue.shed)
         self.routing_latency = Histogram()    # wall s per score batch
         self.queue_wait = Histogram()         # virtual s, true queued time
         #                                       (sum of per-leg waits, never
@@ -230,6 +261,7 @@ class Telemetry:
         self.completed += other.completed
         self.rejected += other.rejected
         self.expired += other.expired
+        self.shed += other.shed
         self.batch_size_sum += other.batch_size_sum
         self.max_queue_depth = max(self.max_queue_depth,
                                    other.max_queue_depth)
@@ -286,10 +318,11 @@ class Telemetry:
         else:
             self.cache_misses += 1
 
-    def record_completion(self, queue_wait_s: float, e2e_s: float) -> None:
+    def record_completion(self, queue_wait_s: float, e2e_s: float,
+                          exemplar: Optional[int] = None) -> None:
         self.completed += 1
-        self.queue_wait.record(queue_wait_s)
-        self.e2e_latency.record(e2e_s)
+        self.queue_wait.record(queue_wait_s, exemplar=exemplar)
+        self.e2e_latency.record(e2e_s, exemplar=exemplar)
 
     def finalize_request(self, req) -> bool:
         """Idempotent completion accounting for one request.
@@ -304,7 +337,9 @@ class Telemetry:
             self.double_finalize_blocked += 1
             return False
         req.finalized = True
-        self.record_completion(req.queue_wait_s, req.e2e_latency_s)
+        self.record_completion(
+            req.queue_wait_s, req.e2e_latency_s,
+            exemplar=req.trace_key if req.trace_key >= 0 else None)
         # Per-leg attribution only once cascade accounting is live (a
         # record_leg call or a multi-leg request) — plain single-shot runs
         # keep their summary free of cascade keys.
@@ -356,6 +391,7 @@ class Telemetry:
             "completed": self.completed,
             "rejected": self.rejected,
             "expired": self.expired,
+            "shed": self.shed,
             "per_member_counts": dict(
                 zip(self.member_names, self.member_counts.tolist())),
             "per_member_spend": dict(
@@ -399,9 +435,10 @@ class Telemetry:
 
     def report(self, duration_s: Optional[float] = None) -> str:
         s = self.summary(duration_s)
+        shed = f"  shed {s['shed']}" if s["shed"] else ""
         lines = [
             f"completed {s['completed']}  rejected {s['rejected']}  "
-            f"expired {s['expired']}",
+            f"expired {s['expired']}{shed}",
             "per-member counts: " + "  ".join(
                 f"{n}={c}" for n, c in s["per_member_counts"].items()),
             "per-member spend:  " + "  ".join(

@@ -9,6 +9,7 @@ from repro.serving import (
     DONE,
     EXPIRED,
     REJECTED,
+    SHED,
     AdmissionQueue,
     BudgetGovernor,
     Histogram,
@@ -95,6 +96,88 @@ class TestAdmissionQueue:
         q.offer(req(), now=1.0)
         q.offer(req(), now=3.0)
         assert q.oldest_wait(5.0) == pytest.approx(4.0)
+
+
+class TestSloClassShedding:
+    def _mixed_queue(self, classes):
+        q = AdmissionQueue()
+        reqs = []
+        for i, cls in enumerate(classes):
+            r = req(text=str(i))
+            r.slo_class = cls
+            q.offer(r, 0.0)
+            reqs.append(r)
+        return q, reqs
+
+    def test_sheds_only_the_lowest_class_present(self):
+        q, reqs = self._mixed_queue([0, 1, 0, 2, 1])
+        dropped = q.shed_lowest(1.0, alerts=("latency_p95",))
+        assert [r.text for r in dropped] == ["0", "2"]
+        assert all(r.status == SHED and r.finish_s == 1.0 for r in dropped)
+        assert q.shed == 2 and q.depth == 3
+        assert sorted(r.slo_class for r in q.peek_all()) == [1, 1, 2]
+        # a second alert round now sheds class 1 — classes fall in order
+        assert [r.slo_class for r in q.shed_lowest(2.0)] == [1, 1]
+
+    def test_rescue_carrying_requests_never_shed(self):
+        q, (r0, r1) = self._mixed_queue([0, 0])
+        r1.best_output = np.zeros(2, np.int32)     # mid-cascade answer
+        dropped = q.shed_lowest(1.0)
+        assert dropped == [r0] and q.depth == 1
+        assert r1.status != SHED
+
+    def test_noop_on_empty_or_unsheddable_queue(self):
+        assert AdmissionQueue().shed_lowest(0.0) == []
+        q, (r0,) = self._mixed_queue([0])
+        r0.best_output = np.zeros(1, np.int32)
+        assert q.shed_lowest(0.0) == [] and q.shed == 0
+
+    class _FiringSLO:
+        """Stub tracker whose burn-rate alert is permanently firing."""
+
+        tracer = None
+
+        def __init__(self):
+            self.observed = 0
+
+        def firing(self):
+            return ["latency_p95_burn"]
+
+        def check(self, now, force=False):
+            pass
+
+        def observe_request(self, *a, **kw):
+            self.observed += 1
+
+    def test_scheduler_sheds_lowest_class_when_enforcing(self):
+        eng = FakeEngine()
+        slo = self._FiringSLO()
+        sched = MicroBatchScheduler(
+            eng, SchedulerConfig(score_batch=16, max_batch=16),
+            service_time=lambda kind, n, wall: 1e-3, slo=slo)
+        sched.slo_enforce = True
+        for i, cls in enumerate([0, 1, 0, 1]):
+            r = req(text=str(i))
+            r.slo_class = cls
+            sched.queue.offer(r, 0.0)
+        served = sched.dispatch()
+        # class-0 load shed before spending capacity on it; class 1 served
+        assert sched.queue.shed == 2
+        assert [r.slo_class for r in served] == [1, 1]
+        assert all(r.status == DONE for r in served)
+        # shed requests never feed the tracker (no self-amplified burn)
+        assert slo.observed == 2
+
+    def test_enforcement_defaults_off(self):
+        eng = FakeEngine()
+        slo = self._FiringSLO()
+        sched = MicroBatchScheduler(
+            eng, SchedulerConfig(score_batch=16, max_batch=16),
+            service_time=lambda kind, n, wall: 1e-3, slo=slo)
+        for i in range(3):
+            sched.queue.offer(req(text=str(i)), 0.0)
+        served = sched.dispatch()
+        assert len(served) == 3 and sched.queue.shed == 0
 
 
 class TestBudgetGovernor:

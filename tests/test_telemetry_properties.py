@@ -20,7 +20,7 @@ import numpy as np
 
 from _hypothesis_compat import given, settings, st
 
-from repro.serving.telemetry import Histogram
+from repro.serving.telemetry import Histogram, exemplar_score
 
 
 def _hist(values, **kw):
@@ -134,3 +134,77 @@ class TestMergeAlgebra:
         except ValueError:
             return
         raise AssertionError("merge with different edges must raise")
+
+
+def _hist_ex(pairs, **kw):
+    h = Histogram(**kw)
+    for v, k in pairs:
+        h.record(float(v), exemplar=int(k))
+    return h
+
+
+class TestExemplars:
+    """Prometheus-style bucket exemplars: the kept trace key per bucket is
+    the one with the smallest deterministic min-hash score, so exemplar
+    selection is a pure function of the recorded (value, key) SET —
+    independent of arrival order and of how per-worker shards merge."""
+
+    def test_score_is_pure_and_spread(self):
+        for k in (0, 1, 7, 123456, 10**12):
+            assert exemplar_score(k) == exemplar_score(k)
+        assert len({exemplar_score(k) for k in range(256)}) == 256
+
+    def test_min_score_wins_within_bucket(self):
+        keys = list(range(16))
+        best = min(keys, key=exemplar_score)
+        h = Histogram()
+        for k in keys:
+            h.record(0.5, exemplar=k)     # one bucket, many candidates
+        assert len(h.exemplars) == 1
+        (_, kept, value), = h.exemplars.values()
+        assert kept == best and value == 0.5
+
+    def test_none_exemplar_records_nothing(self):
+        h = Histogram()
+        h.record(0.5)
+        h.record(0.5, exemplar=None)
+        assert h.exemplars == {} and h.count == 2
+
+    @given(st.lists(st.tuples(st.floats(1e-8, 1e5), st.integers(0, 512)),
+                    min_size=1, max_size=50))
+    @settings(max_examples=50, deadline=None)
+    def test_order_independent(self, pairs):
+        a = _hist_ex(pairs)
+        b = _hist_ex(list(reversed(pairs)))
+        assert a.exemplars == b.exemplars
+
+    @given(st.lists(st.tuples(st.floats(1e-8, 1e5), st.integers(0, 512)),
+                    min_size=0, max_size=50),
+           st.lists(st.tuples(st.floats(1e-8, 1e5), st.integers(0, 512)),
+                    min_size=0, max_size=50))
+    @settings(max_examples=40, deadline=None)
+    def test_merge_matches_combined_stream(self, xs, ys):
+        a, b = _hist_ex(xs), _hist_ex(ys)
+        a.merge(b)
+        both = _hist_ex(list(xs) + list(ys))
+        assert a.exemplars == both.exemplars
+        # and merge is commutative on the exemplar table
+        c, d = _hist_ex(ys), _hist_ex(xs)
+        c.merge(d)
+        assert c.exemplars == a.exemplars
+
+    def test_prometheus_emission(self):
+        from repro.obs import MetricsRegistry
+
+        h = _hist_ex([(0.5, 7), (2e4, 9)])   # interior + overflow bucket
+        reg = MetricsRegistry()
+        reg.histogram("e2e_latency_s", "end-to-end latency", hist=h)
+        text = reg.prometheus()
+        tagged = [ln for ln in text.splitlines() if "# {" in ln]
+        assert any('trace_key="7"' in ln and "0.5" in ln for ln in tagged)
+        # the overflow value rides the +Inf bucket line
+        assert any('le="+Inf"' in ln and 'trace_key="9"' in ln
+                   for ln in tagged)
+        # exemplar-free buckets stay plain exposition lines
+        assert any(ln.startswith("e2e_latency_s_bucket") and "#" not in ln
+                   for ln in text.splitlines())

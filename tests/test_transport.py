@@ -30,9 +30,11 @@ from repro.distributed.shard import (
 from repro.distributed.transport import (
     FaultyTransport,
     LocalTransport,
+    RpcStats,
     SocketTransport,
     TransportError,
 )
+from repro.obs import TraceRecorder, build_trace_doc, validate_span_tree
 from repro.online import OnlineAdapter, OnlineUpdateConfig
 from repro.serving import (
     MicroBatchScheduler,
@@ -247,6 +249,125 @@ class TestCodecRoundTrip:
         got = roundtrip({"tel": tel})["tel"]
         assert isinstance(got, Telemetry)
         assert got.member_names == tel.member_names
+
+
+class TestTraceContextFrames:
+    """Protocol v2: frames optionally carry (trace_key, parent_span)."""
+
+    def test_trace_context_roundtrip(self):
+        msg = Message(kind=M.GENERATE, dst=1, src=0, seq=77,
+                      trace_key=123, parent_span=4, payload={"x": 1})
+        got = decode(encode(msg))
+        assert got.trace_key == 123 and got.parent_span == 4
+        assert got.payload == {"x": 1}
+
+    def test_absent_trace_context_decodes_to_none(self):
+        got = decode(encode(Message(kind=M.STEP, dst=1)))
+        assert got.trace_key is None and got.parent_span is None
+
+    def test_version_bumped_to_two(self):
+        # The trace-context fields rode a frame version bump: a v1 peer
+        # fails the version check up front instead of mis-parsing the new
+        # fields. Simulated symmetrically — a v1 frame against this (v2)
+        # decoder is the same fencing the old decoder applies to ours.
+        assert M.PROTOCOL_VERSION == 2
+        buf = bytearray(encode(Message(kind="X", dst=0, trace_key=5)))
+        buf[len(M.MAGIC)] = 1
+        with pytest.raises(ValueError):
+            decode(bytes(buf))
+
+    def test_rpc_span_kind_policy(self):
+        # Real request/reply protocol legs trace; the hot NEXT_ACTION poll
+        # and the obs drains themselves stay unspanned (they would dwarf
+        # and recursively observe the traffic they measure).
+        for kind in (M.GENERATE, M.STEP, M.SYNC_STATUS, M.LEDGER_OP,
+                     M.ASSIGN, M.TICK, M.FINALIZE):
+            assert kind in M.RPC_SPAN_KINDS
+        for kind in (M.NEXT_ACTION, M.TRACE_REQ, M.TELEMETRY_REQ,
+                     M.METRICS_REQ, M.HELLO, M.SHUTDOWN):
+            assert kind not in M.RPC_SPAN_KINDS
+
+
+class TestRpcTelemetry:
+    def test_request_counts_latency_and_client_span(self):
+        lt = LocalTransport()
+        lt.bind(1, lambda msg: {"ok": 1})
+        rec = TraceRecorder()
+        lt.tracer = rec
+        lt.now = 2.5
+        lt.request(Message(kind=M.STEP, dst=1, payload={"t": 0.1}))
+        s = lt.stats
+        assert s.requests == {M.STEP: 1}
+        assert s.peer_requests == {1: 1}
+        assert s.in_flight == 0 and s.unreachable == 0
+        assert s.latency[M.STEP].count == 1
+        assert s.merged_latency().count == 1
+        spans = [e for e in rec.events if e[0] == "rpc"]
+        assert len(spans) == 1
+        name, cat, ph, ts, dur, wid, key, args = spans[0]
+        assert (cat, ph, wid, key) == ("rpc", "X", 0, None)
+        assert ts == 2.5                      # virtual stamp, not wall
+        assert args["side"] == "client" and args["peer"] == 1
+        assert args["kind"] == M.STEP and args["rpc"] == 1
+
+    def test_unspanned_kind_counts_but_emits_no_span(self):
+        lt = LocalTransport()
+        lt.bind(1, lambda msg: {})
+        rec = TraceRecorder()
+        lt.tracer = rec
+        lt.request(Message(kind=M.NEXT_ACTION, dst=1))
+        assert lt.stats.requests == {M.NEXT_ACTION: 1}
+        assert not [e for e in rec.events if e[0] == "rpc"]
+
+    def test_unreachable_failure_counted_no_span(self):
+        lt = LocalTransport()
+        rec = TraceRecorder()
+        lt.tracer = rec
+        with pytest.raises(TransportError):
+            lt.request(Message(kind=M.STEP, dst=9))
+        assert lt.stats.unreachable == 1
+        assert lt.stats.requests == {}        # only completed RPCs count
+        assert not rec.events                 # no span for a failed call
+
+    def test_failure_classification(self):
+        s = RpcStats()
+        s.note_failure(TransportError("request to w1 timed out"))
+        s.note_failure(TransportError("remote handler failed: boom"))
+        s.note_failure(TransportError("no endpoint bound for wid 9"))
+        assert (s.timeouts, s.errors, s.unreachable) == (1, 1, 1)
+
+    def test_server_span_pairs_with_client_span(self):
+        w = make_workers(1)[0]
+        lt = LocalTransport()
+        w.bind(lt)
+        rec = TraceRecorder()
+        lt.tracer = rec
+        lt.trace_wid = 5                      # a distinct client process
+        lt.now = 1.0
+        w.scheduler.tracer = rec.scoped(0)
+        lt.request(Message(kind=M.SYNC_STATUS, dst=0, src=5))
+        spans = [e for e in rec.events if e[0] == "rpc"]
+        sides = {e[7]["side"]: e for e in spans}
+        assert set(sides) == {"client", "server"}
+        assert sides["client"][7]["rpc"] == sides["server"][7]["rpc"]
+        assert sides["client"][5] == 5 and sides["server"][5] == 0
+        doc = build_trace_doc(rec.events)
+        assert validate_span_tree(doc) == []
+
+    def test_dangling_client_link_fails_validation(self):
+        rec = TraceRecorder()
+        rec.span("rpc", "rpc", 0.0, 0.1, wid=1,
+                 args={"rpc": 99, "kind": M.STEP, "side": "client",
+                       "peer": 0})
+        errs = validate_span_tree(build_trace_doc(rec.events))
+        assert errs and any("rpc" in e for e in errs)
+        # An unmatched SERVER span is fine (the reply can be lost in
+        # transit after the handler ran) — only client links must pair.
+        rec2 = TraceRecorder()
+        rec2.span("rpc", "rpc", 0.0, 0.1, wid=0,
+                  args={"rpc": 99, "kind": M.STEP, "side": "server",
+                        "peer": 1})
+        assert validate_span_tree(build_trace_doc(rec2.events)) == []
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,14 @@ core contract:
     crossed process boundaries rather than a loopback.
   * **sharded pool** — the socket summary's member->owner layout covers
     every pool member, each owned by a valid worker.
+  * **rpc observability** — both traces carry client/server ``rpc``
+    spans joined by flow link ids; counts match across transports for
+    the transport-invariant message kinds, the socket run's remote
+    ``GENERATE`` legs all resolve to a server-side span in the follower
+    process, and ``validate_span_tree`` is clean on both documents.
+  * **federated metrics** — the socket run's merged fleet exposition
+    (``--metrics-out`` + ``.fleet.prom``) carries follower-labelled
+    series scraped over ``METRICS_REQ``.
   * **artifacts** — both summaries plus the controller's merged fleet
     trace (followers folded in via ``TRACE_REQ``) land in ``--out-dir``
     for CI upload.
@@ -45,6 +53,22 @@ PARITY_KEYS = (
 )
 COORD_KEYS = ("syncs", "merged", "updates", "update_steps", "bursts",
               "stale_rejected", "leader_changes")
+
+
+def rpc_spans(doc):
+    return [e for e in doc["traceEvents"]
+            if e.get("ph") == "X" and e.get("name") == "rpc"]
+
+
+def rpc_counts(doc, kinds):
+    """(kind, side) -> span count, restricted to the given kinds."""
+    counts = {}
+    for e in rpc_spans(doc):
+        a = e["args"]
+        if a["kind"] in kinds:
+            k = (a["kind"], a["side"])
+            counts[k] = counts.get(k, 0) + 1
+    return counts
 
 
 def run_serve(argv, label):
@@ -95,10 +119,12 @@ def main():
         print("distributed smoke (local only): PASS", flush=True)
         return
 
+    metrics_out = os.path.join(args.out_dir, "metrics-socket.prom")
     sock = run_serve(
         base + ["--transport", "socket",
                 "--trace-out",
-                os.path.join(args.out_dir, "trace-socket.json")],
+                os.path.join(args.out_dir, "trace-socket.json"),
+                "--metrics-out", metrics_out],
         "socket plane")
 
     # Real OS processes: controller + one per follower, all distinct.
@@ -128,6 +154,50 @@ def main():
     versions = set(sock["router_versions"].values())
     check(len(versions) == 1,
           f"all workers converged to one router version {versions}")
+
+    # RPC observability: both traces validate (no dangling client->server
+    # flow links), the transport-invariant message kinds emit identical
+    # client/server span counts, and every remote GENERATE leg in the
+    # socket trace resolves to a server-side span in the owning process.
+    from repro.distributed import messages as M
+    from repro.obs import validate_span_tree
+
+    with open(os.path.join(args.out_dir, "trace-local.json")) as f:
+        ldoc = json.load(f)
+    with open(os.path.join(args.out_dir, "trace-socket.json")) as f:
+        sdoc = json.load(f)
+    for name, doc in (("local", ldoc), ("socket", sdoc)):
+        errs = validate_span_tree(doc)
+        check(not errs, f"{name} trace span tree valid "
+                        f"({len(errs)} problems: {errs[:3]})")
+    invariant = set(M.RPC_SPAN_KINDS) - {M.GENERATE, M.LEDGER_OP}
+    lc, sc = rpc_counts(ldoc, invariant), rpc_counts(sdoc, invariant)
+    check(lc and lc == sc,
+          f"rpc span parity on transport-invariant kinds "
+          f"({sum(lc.values())} spans over {len(lc)} (kind, side) pairs)")
+    gen = [e for e in rpc_spans(sdoc) if e["args"]["kind"] == M.GENERATE]
+    gen_cli = [e for e in gen if e["args"]["side"] == "client"]
+    gen_srv = {e["args"]["rpc"]: e for e in gen
+               if e["args"]["side"] == "server"}
+    check(gen_cli, f"socket run produced remote GENERATE rpc spans "
+                   f"({len(gen_cli)} client legs)")
+    check(all(e["args"]["rpc"] in gen_srv
+              and gen_srv[e["args"]["rpc"]]["pid"] != e["pid"]
+              for e in gen_cli),
+          "every remote GENERATE client span links to a server span in "
+          "a different worker process")
+
+    # Federated metrics: the merged fleet exposition carries follower-
+    # labelled series next to the controller's own.
+    fleet_path = metrics_out + ".fleet.prom"
+    check(os.path.exists(fleet_path),
+          f"fleet metrics exposition {fleet_path} written")
+    with open(fleet_path) as f:
+        fleet_text = f.read()
+    check('worker="1"' in fleet_text,
+          'fleet exposition contains follower-labelled (worker="1") series')
+    check("rpc_requests" in fleet_text,
+          "fleet exposition exports transport rpc telemetry")
 
     for name, summary in (("local", local), ("socket", sock)):
         with open(os.path.join(args.out_dir, f"summary-{name}.json"),

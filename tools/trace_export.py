@@ -56,6 +56,20 @@ def filter_doc(doc: dict, worker=None, cats=None) -> dict:
     return {**doc, "traceEvents": out}
 
 
+def rpc_index(doc: dict) -> dict:
+    """rpc link id -> {"client": span, "server": span} over the doc's
+    cross-process rpc spans (both sides of one RPC share args["rpc"])."""
+    idx = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") != "X" or ev.get("name") != "rpc":
+            continue
+        a = ev.get("args") or {}
+        if a.get("rpc") is None:
+            continue
+        idx.setdefault(a["rpc"], {})[a.get("side")] = ev
+    return idx
+
+
 def print_request(doc: dict, key: int) -> int:
     trees = request_trees(doc)
     tid = key + 1
@@ -63,11 +77,28 @@ def print_request(doc: dict, key: int) -> int:
         print(f"no events for request trace key {key} (tid {tid})")
         return 1
     t = trees[tid]
+    rpcs = rpc_index(doc)
     for ev in sorted(t["events"], key=lambda e: (e["ts"], e.get("dur", 0))):
         dur = f"  dur={ev['dur'] / 1e3:.3f}ms" if "dur" in ev else ""
         args = f"  {ev['args']}" if ev.get("args") else ""
         print(f"  {ev['ts'] / 1e3:10.3f}ms  w{ev['pid']}  "
               f"[{ev['cat']}] {ev['name']}{dur}{args}")
+        # Follow the span's rpc flow link across process boundaries: the
+        # remote leg's server-side span lives on another pid's runtime
+        # track, not in this request tree.
+        link = (ev.get("args") or {}).get("rpc")
+        if link is not None and ev.get("name") != "rpc":
+            pair = rpcs.get(link, {})
+            for side in ("client", "server"):
+                leg = pair.get(side)
+                if leg is not None:
+                    print(f"      ↳ rpc#{link} {side} w{leg['pid']}  "
+                          f"{leg['ts'] / 1e3:.3f}ms  "
+                          f"dur={leg.get('dur', 0) / 1e3:.3f}ms  "
+                          f"kind={leg['args'].get('kind')}")
+            if "server" not in pair:
+                print(f"      ↳ rpc#{link} server span MISSING "
+                      f"(dangling flow link)")
     root = t["root"]
     if root is not None:
         print(f"request root: status={root.get('args', {}).get('status')}  "
@@ -181,6 +212,17 @@ def main() -> int:
           f"requests {summ['requests']} ({summ['finalized']} finalized)")
     by = ", ".join(f"{k}={v}" for k, v in sorted(summ["by_name"].items()))
     print(f"by name: {by}")
+    rpcs = rpc_index(doc)
+    if rpcs:
+        n_cli = sum(1 for p in rpcs.values() if "client" in p)
+        n_srv = sum(1 for p in rpcs.values() if "server" in p)
+        linked = sum(1 for p in rpcs.values()
+                     if "client" in p and "server" in p)
+        cross = sum(1 for p in rpcs.values()
+                    if "client" in p and "server" in p
+                    and p["client"]["pid"] != p["server"]["pid"])
+        print(f"rpc: {n_cli} client / {n_srv} server spans  "
+              f"{linked} linked pairs ({cross} cross-worker)")
 
     if args.out:
         cats = set(args.cat.split(",")) if args.cat else None
